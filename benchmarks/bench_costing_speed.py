@@ -1,0 +1,50 @@
+"""Paper §2: "generating runtime plans from HOP DAGs is rather efficient
+(<0.5 ms for common DAG sizes), which makes the generation and costing of
+runtime plans feasible."
+
+Measures generate+cost time for (a) the LinReg DS plan (the paper's
+"common DAG size") and (b) full LM train-step plans (hundreds of
+instructions) — reported as us/plan.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs import SHAPES, get_config
+from repro.core import estimate
+from repro.core.cluster import ClusterConfig, CPU_HOST, single_pod_config
+from repro.core.linreg import SCENARIOS, build_linreg_program
+from repro.core.planner import ShardingPlan, build_step_program
+
+PAPER_CC = ClusterConfig(chip=CPU_HOST, mesh_shape=(72,), mesh_axes=("data",))
+
+
+def _time_us(fn, reps: int = 20) -> float:
+    fn()                                     # warm caches
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run() -> List[str]:
+    rows = []
+    sc = SCENARIOS["XL1"]
+    us = _time_us(lambda: estimate(build_linreg_program(sc, PAPER_CC)[0],
+                                   PAPER_CC))
+    rows.append(f"costing_speed.linreg_generate_and_cost,{us:.1f},"
+                f"paper_claim_us=500;{'PASS' if us < 500 else 'FAIL'}")
+
+    cc = single_pod_config()
+    plan = ShardingPlan(tp_axes=("model",), microbatches=2)
+    for arch_id in ("qwen1.5-0.5b", "deepseek-v3-671b"):
+        arch = get_config(arch_id)
+        shape = SHAPES["train_4k"]
+        us = _time_us(lambda: estimate(
+            build_step_program(arch, shape, plan, cc), cc), reps=5)
+        n_inst = sum(build_step_program(arch, shape, plan, cc)
+                     .count_instructions().values())
+        rows.append(f"costing_speed.lm_step.{arch_id},{us:.1f},"
+                    f"instructions={n_inst}")
+    return rows

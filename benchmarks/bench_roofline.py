@@ -1,0 +1,60 @@
+"""Roofline table (assignment §Roofline) — reads the dry-run artifacts.
+
+Per (arch x shape x mesh): the three roofline terms from the compiled
+plan, the dominant bottleneck, MODEL_FLOPS/HLO_FLOPS usefulness ratio,
+and the fits-HBM verdict from memory_analysis.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import List
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+HBM_BUDGET = 16e9 * 0.9
+
+
+def load_artifacts(mesh=None, tag=""):
+    rows = []
+    for path in sorted(glob.glob(os.path.join(ARTIFACT_DIR, "dryrun_*.json"))):
+        with open(path) as f:
+            d = json.load(f)
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if d.get("tag", "") != tag:
+            continue
+        rows.append(d)
+    return rows
+
+
+def describe(d) -> str:
+    r = d["roofline"]
+    ma = d["memory_analysis"]
+    used = ma["peak_bytes"] or (ma["argument_bytes"] + ma["temp_bytes"]
+                                + ma["output_bytes"])
+    ufr = d.get("useful_flops_ratio")
+    parts = [
+        f"dom={r['dominant'].replace('_s', '')}",
+        f"compute={r['compute_s']*1e3:.2f}ms",
+        f"mem={r['memory_s']*1e3:.2f}ms",
+        f"coll={r['collective_s']*1e3:.2f}ms",
+        f"useful={ufr:.2f}" if ufr else "useful=n/a",
+        f"hbm={used/1e9:.1f}GB",
+        f"fits={used <= HBM_BUDGET}",
+    ]
+    return ";".join(parts)
+
+
+def run() -> List[str]:
+    rows = []
+    for d in load_artifacts():
+        cell = f"{d['arch']}|{d['shape']}|{d['mesh']}"
+        if d["status"] == "skip":
+            rows.append(f"roofline.{cell},0,SKIP;{d['why'][:60]}")
+        elif d["status"] != "ok":
+            rows.append(f"roofline.{cell},0,FAIL;{d.get('error', '')[:80]}")
+        else:
+            bound_us = d["roofline"]["roofline_bound_s"] * 1e6
+            rows.append(f"roofline.{cell},{bound_us:.1f},{describe(d)}")
+    return rows

@@ -1,0 +1,112 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts.
+
+Usage: PYTHONPATH=src:. python -m benchmarks.render_tables [dryrun|roofline|perf]
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "artifacts")
+PEAK = 197e12
+HBM_BUDGET = 16e9 * 0.9
+
+ARCH_ORDER = ["whisper-small", "pixtral-12b", "zamba2-2.7b",
+              "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b", "stablelm-12b",
+              "qwen1.5-4b", "gemma3-12b", "qwen1.5-0.5b", "mamba2-1.3b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh=None, tag=""):
+    out = {}
+    for p in glob.glob(os.path.join(ARTIFACT_DIR, "dryrun_*.json")):
+        d = json.load(open(p))
+        if mesh and d.get("mesh") != mesh:
+            continue
+        if d.get("tag", "") != tag:
+            continue
+        out[(d["arch"], d["shape"], d["mesh"])] = d
+    return out
+
+
+def fmt_ms(x):
+    return f"{x*1e3:.1f}" if x is not None else "-"
+
+
+def dryrun_table():
+    arts = load()
+    print("| arch | shape | mesh | status | plan | peak HBM/dev | fits | "
+          "compile s |")
+    print("|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            for m in ("single", "multi"):
+                d = arts.get((a, s, m))
+                if d is None:
+                    continue
+                if d["status"] == "skip":
+                    print(f"| {a} | {s} | {m} | SKIP | — | — | — | — |")
+                    continue
+                ma = d["memory_analysis"]
+                used = (ma["argument_bytes"] + ma["temp_bytes"]
+                        + ma["output_bytes"])
+                fits = "yes" if used <= HBM_BUDGET else "**no**"
+                print(f"| {a} | {s} | {m} | {d['status']} | "
+                      f"{d['plan'].split('[')[0]} | {used/1e9:.1f} GB | "
+                      f"{fits} | {d.get('compile_s', 0):.0f} |")
+
+
+def roofline_table(mesh="single"):
+    arts = load(mesh=mesh)
+    print("| arch | shape | compute s | memory s | collective s | dominant |"
+          " MODEL_FLOPS | useful | MFU@bound | next lever |")
+    print("|---|---|---|---|---|---|---|---|---|---|")
+    for a in ARCH_ORDER:
+        for s in SHAPE_ORDER:
+            d = arts.get((a, s, mesh))
+            if d is None or d["status"] != "ok":
+                if d is not None and d["status"] == "skip":
+                    print(f"| {a} | {s} | — | — | — | SKIP | — | — | — | "
+                          f"{d['why'][:40]} |")
+                continue
+            r = d["roofline"]
+            bound = r["roofline_bound_s"]
+            mf = d.get("model_flops") or 0
+            chips = 512 if mesh == "multi" else 256
+            mfu = mf / (chips * PEAK * bound) if bound else 0
+            ufr = d.get("useful_flops_ratio")
+            dom = r["dominant"].replace("_s", "")
+            lever = {"compute": "more useful-flop fraction / MXU util",
+                     "memory": "fuse fp32 intermediates (flash kernel)",
+                     "collective": "compress/overlap collectives"}[dom]
+            print(f"| {a} | {s} | {r['compute_s']:.4f} | {r['memory_s']:.4f}"
+                  f" | {r['collective_s']:.4f} | {dom} | {mf:.2e} | "
+                  f"{(1/ufr if ufr else 0):.2f} | {mfu:.3f} | {lever} |")
+
+
+def perf_rows(tag_prefix="h"):
+    arts = [d for d in
+            (json.load(open(p)) for p in
+             glob.glob(os.path.join(ARTIFACT_DIR, "dryrun_*.json")))
+            if d.get("tag", "").startswith(tag_prefix) and d["status"] == "ok"]
+    for d in sorted(arts, key=lambda x: (x["arch"], x["shape"], x["tag"])):
+        r = d["roofline"]
+        print(f"{d['arch']} x {d['shape']} [{d['tag']}] plan={d['plan']}: "
+              f"compute={fmt_ms(r['compute_s'])}ms "
+              f"mem={fmt_ms(r['memory_s'])}ms "
+              f"coll={fmt_ms(r['collective_s'])}ms dom={r['dominant']}")
+
+
+if __name__ == "__main__":
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("dryrun", "all"):
+        print("## Dry-run matrix\n")
+        dryrun_table()
+    if which in ("roofline", "all"):
+        print("\n## Roofline (single-pod)\n")
+        roofline_table("single")
+    if which in ("perf", "all"):
+        print("\n## Perf iterations\n")
+        perf_rows()

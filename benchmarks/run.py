@@ -1,0 +1,42 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+  * bench_scenarios     — Table 1 / §2 plan generation across scales
+  * bench_plan_costing  — Figures 4 & 5 costed plans
+  * bench_accuracy      — §3.4 "within 2x of actual execution time"
+  * bench_costing_speed — §2 "<0.5 ms to generate+cost a plan"
+  * bench_roofline      — (beyond paper) roofline terms per dry-run cell
+"""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (bench_accuracy, bench_costing_speed,
+                            bench_plan_costing, bench_roofline,
+                            bench_scenarios)
+    mods = [
+        ("scenarios", bench_scenarios),
+        ("plan_costing", bench_plan_costing),
+        ("accuracy", bench_accuracy),
+        ("costing_speed", bench_costing_speed),
+        ("roofline", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failures = 0
+    for name, mod in mods:
+        try:
+            for row in mod.run():
+                print(row, flush=True)
+        except Exception:
+            failures += 1
+            print(f"{name},0,EXCEPTION", flush=True)
+            traceback.print_exc()
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,44 @@
+"""Cost-based plan autotuning (the paper's optimizers in action).
+
+For one (arch x shape x mesh) cell: enumerate the sharding-plan space,
+rank analytically with C(P, cc), then show how the ranking responds to a
+cluster change (elastic replanning = just re-costing, paper R3).
+
+Run:  PYTHONPATH=src python examples/autotune_plan.py [--arch phi3.5-moe-42b-a6.6b]
+"""
+import argparse
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.cluster import multi_pod_config, single_pod_config
+from repro.core.planner import choose_plan, enumerate_plans
+
+
+def rank(arch, shape, cc, label, k=5):
+    print(f"\n== {label}: {len(enumerate_plans(arch, shape, cc))} candidates ==")
+    for d in choose_plan(arch, shape, cc, top_k=k):
+        print(f"  {d.plan.describe():66s} T={d.time*1e3:9.1f}ms "
+              f"hbm={d.hbm_est/1e9:6.1f}GB feas={d.feasible}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="phi3.5-moe-42b-a6.6b",
+                    choices=ARCH_IDS)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    args = ap.parse_args()
+    arch = get_config(args.arch)
+    shape = SHAPES[args.shape]
+
+    rank(arch, shape, single_pod_config(), "single pod (16x16)")
+    rank(arch, shape, multi_pod_config(), "two pods (2x16x16, DCN between)")
+
+    # sensitivity: what if the DCN were 4x faster? (R3: resource awareness)
+    import dataclasses
+    cc = multi_pod_config()
+    fast_chip = dataclasses.replace(cc.chip, dcn_bw=cc.chip.dcn_bw * 4)
+    rank(arch, shape, dataclasses.replace(cc, chip=fast_chip),
+         "two pods, 4x DCN")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,31 @@
+"""Quickstart: cost a runtime plan, read the EXPLAIN, let the planner pick.
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+from repro.configs import SHAPES, get_config
+from repro.core import estimate, explain, single_pod_config
+from repro.core.planner import build_step_program, choose_plan
+
+def main():
+    cc = single_pod_config()                 # 256-chip v5e pod (16x16)
+    arch = get_config("qwen1.5-4b")
+    shape = SHAPES["train_4k"]
+
+    # 1) ask the cost-based planner for the best sharding plan
+    decisions = choose_plan(arch, shape, cc, top_k=5)
+    print("== plan ranking (C(P, cc), HBM estimate) ==")
+    for d in decisions:
+        mark = "*" if d is decisions[0] else " "
+        print(f" {mark} {d.plan.describe():64s} "
+              f"T={d.time*1e3:8.1f}ms  hbm={d.hbm_est/1e9:5.1f}GB  "
+              f"feasible={d.feasible}")
+
+    # 2) generate + cost the winner's runtime plan, SystemML-EXPLAIN style
+    best = decisions[0]
+    prog = build_step_program(arch, shape, best.plan, cc)
+    costed = estimate(prog, cc.with_overlap(0.7))
+    print("\n== costed runtime plan (depth 2) ==")
+    print(explain(costed, max_depth=2))
+
+if __name__ == "__main__":
+    main()

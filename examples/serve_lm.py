@@ -1,0 +1,42 @@
+"""Batched serving example (deliverable b): prefill + decode with KV
+caches via the ServeEngine, on a reduced model.
+
+Run:  PYTHONPATH=src python examples/serve_lm.py
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models.model import build_model
+from repro.runtime.serve_engine import Request, ServeEngine
+
+
+def main():
+    arch = dataclasses.replace(get_config("qwen1.5-0.5b").reduced(),
+                               dtype="float32")
+    model = build_model(arch)
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, max_len=96, temperature=0.0)
+
+    rng = np.random.default_rng(0)
+    requests = [
+        Request(prompt=list(rng.integers(1, arch.vocab_size, size=n)),
+                max_new_tokens=12)
+        for n in (8, 12, 16, 16)
+    ]
+    outs = engine.generate(requests)
+    for i, c in enumerate(outs):
+        print(f"req{i}: |prompt|={len(c.prompt):2d} -> {c.tokens}")
+    print(f"\nbatch of {len(requests)}: prefill {outs[0].prefill_time_s*1e3:.0f}ms, "
+          f"12 decode steps {outs[0].decode_time_s*1e3:.0f}ms")
+
+    # same requests again — greedy decoding is deterministic
+    outs2 = engine.generate(requests)
+    assert [c.tokens for c in outs] == [c.tokens for c in outs2]
+    print("determinism check passed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Architecture/shape registry: ``get_config("<arch-id>")``, ``SHAPES``."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from repro.configs.base import (ArchConfig, EncDecConfig, HybridConfig,
+                                MLAConfig, MoEConfig, ShapeConfig, SHAPES,
+                                SSMConfig, shape_applicable)
+
+_MODULES = {
+    "whisper-small": "repro.configs.whisper_small",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "zamba2-2.7b": "repro.configs.zamba2_2p7b",
+    "phi3.5-moe-42b-a6.6b": "repro.configs.phi35_moe",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3",
+    "stablelm-12b": "repro.configs.stablelm_12b",
+    "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "gemma3-12b": "repro.configs.gemma3_12b",
+    "qwen1.5-0.5b": "repro.configs.qwen15_0p5b",
+    "mamba2-1.3b": "repro.configs.mamba2_1p3b",
+}
+
+ARCH_IDS: List[str] = list(_MODULES)
+
+
+def get_config(name: str) -> ArchConfig:
+    import importlib
+
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch '{name}'; available: {ARCH_IDS}")
+    return importlib.import_module(_MODULES[name]).CONFIG
+
+
+def all_configs() -> Dict[str, ArchConfig]:
+    return {n: get_config(n) for n in ARCH_IDS}
+
+
+__all__ = [
+    "ArchConfig", "MoEConfig", "MLAConfig", "SSMConfig", "HybridConfig",
+    "EncDecConfig", "ShapeConfig", "SHAPES", "ARCH_IDS", "get_config",
+    "all_configs", "shape_applicable",
+]

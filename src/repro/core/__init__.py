@@ -1,0 +1,40 @@
+"""The paper's contribution: costing generated runtime execution plans.
+
+Public API:
+  * plan IR            — :mod:`repro.core.plan`
+  * symbol table       — :mod:`repro.core.symbols`
+  * cost estimator     — :func:`repro.core.costmodel.estimate` (``C(P, cc)``)
+  * compiled-plan cost — :mod:`repro.core.hlo_cost` (cost the generated HLO)
+  * EXPLAIN            — :func:`repro.core.explain.explain`
+  * plan optimizer     — :mod:`repro.core.planner`
+  * running example    — :mod:`repro.core.linreg` (paper §2, LinReg DS)
+"""
+from repro.core.cluster import (ClusterConfig, ChipSpec, TPU_V5E, CPU_HOST,
+                                single_pod_config, multi_pod_config,
+                                single_chip_config, cpu_host_config,
+                                dtype_bytes)
+from repro.core.costmodel import (CostBreakdown, CostEstimator, CostedProgram,
+                                  estimate)
+from repro.core.explain import explain
+from repro.core.hlo_cost import (CompiledCost, CollectiveStat, from_compiled,
+                                 lower_and_cost, parse_collectives)
+from repro.core.plan import (Block, Call, Collective, Compute, CpVar,
+                             CreateVar, DataGen, ForBlock, FunctionBlock,
+                             GenericBlock, IfBlock, Instruction, IO, JitCall,
+                             ParForBlock, Program, RmVar, WhileBlock)
+from repro.core.planner import (PlanDecision, ShardingPlan, build_step_program,
+                                choose_plan, enumerate_plans, estimate_hbm)
+from repro.core.symbols import MemState, SymbolTable, TensorStat
+
+__all__ = [
+    "ClusterConfig", "ChipSpec", "TPU_V5E", "CPU_HOST", "single_pod_config",
+    "multi_pod_config", "single_chip_config", "cpu_host_config", "dtype_bytes",
+    "CostBreakdown", "CostEstimator", "CostedProgram", "estimate", "explain",
+    "CompiledCost", "CollectiveStat", "from_compiled", "lower_and_cost",
+    "parse_collectives", "Block", "Call", "Collective", "Compute", "CpVar",
+    "CreateVar", "DataGen", "ForBlock", "FunctionBlock", "GenericBlock",
+    "IfBlock", "Instruction", "IO", "JitCall", "ParForBlock", "Program",
+    "RmVar", "WhileBlock", "PlanDecision", "ShardingPlan",
+    "build_step_program", "choose_plan", "enumerate_plans", "estimate_hbm",
+    "MemState", "SymbolTable", "TensorStat",
+]

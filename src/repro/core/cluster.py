@@ -1,0 +1,238 @@
+"""Cluster characteristics ``cc`` — the hardware side of ``C(P, cc)``.
+
+The paper's cost model (R3) is parameterized by cluster characteristics:
+memory budgets, degrees of parallelism k_l/k_m/k_r, IO bandwidth multipliers
+(HDFS/local disk), and a CPU frequency with a 1-FLOP/cycle assumption.
+
+The TPU analogue is a white-box table of per-chip peak compute, the memory
+hierarchy bandwidths (HBM / VMEM / host DRAM / PCIe / disk), the ICI fabric,
+and fixed latency constants (dispatch, collective phase setup).  All values
+are *constants*, not profiles — preserving the paper's R1 (analytical model,
+no profiling runs).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, Tuple
+
+# ---------------------------------------------------------------------------
+# Per-chip hardware descriptions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChipSpec:
+    """A single accelerator chip (the unit the mesh is built from)."""
+
+    name: str
+    # Peak dense matmul throughput by dtype (FLOP/s).
+    peak_flops: Dict[str, float]
+    # HBM capacity (bytes) and bandwidth (bytes/s).
+    hbm_bytes: float
+    hbm_bw: float
+    # Fast on-chip memory (VMEM) — relevant for Pallas BlockSpec budgeting.
+    vmem_bytes: float
+    # Per-link ICI bandwidth (bytes/s, one direction) and number of links
+    # usable per mesh axis (a 2D torus exposes 1 link per axis direction
+    # here; the planner multiplies by axis count when both axes carry the
+    # same collective).
+    ici_bw_per_link: float
+    ici_links_per_axis: int = 1
+    # Host-side paths.
+    pcie_bw: float = 32e9          # host <-> device
+    host_dram_bw: float = 100e9    # host memory
+    disk_bw: float = 1.0e9         # persistent storage (checkpoints, data)
+    # Data-center network between pods (bytes/s per host NIC).
+    dcn_bw: float = 25e9 / 8 * 8   # 25 GB/s effective per pod-slice edge
+
+    def peak(self, dtype: str) -> float:
+        key = _canon_dtype(dtype)
+        if key in self.peak_flops:
+            return self.peak_flops[key]
+        # Unknown dtype: fall back to fp32 rate.
+        return self.peak_flops.get("float32", min(self.peak_flops.values()))
+
+
+def _canon_dtype(dtype) -> str:
+    s = str(dtype)
+    for k in ("bfloat16", "float32", "float16", "int8", "float64", "float8"):
+        if k in s:
+            return k
+    return s
+
+
+# TPU v5e — the assignment's target numbers: 197 TFLOP/s bf16, 819 GB/s HBM,
+# ~50 GB/s per ICI link.
+TPU_V5E = ChipSpec(
+    name="tpu_v5e",
+    peak_flops={
+        "bfloat16": 197e12,
+        "float16": 197e12,
+        "int8": 394e12,
+        "float8": 394e12,
+        "float32": 49.25e12,   # 1/4 rate through the MXU
+        "float64": 2.0e12,     # emulated; effectively "don't"
+    },
+    hbm_bytes=16e9,
+    hbm_bw=819e9,
+    vmem_bytes=128 * 2 ** 20,
+    ici_bw_per_link=50e9,
+    ici_links_per_axis=1,
+)
+
+# A CPU "chip" used ONLY by the accuracy benchmark (paper §3.4): the cost
+# model's fidelity is validated against wall time on the machine we actually
+# have.  Single core (the container), DGEMM-ish peak, DRAM bandwidth.
+CPU_HOST = ChipSpec(
+    name="cpu_host",
+    peak_flops={
+        "float32": 5.0e10,     # ~2.5GHz x 8-wide FMA x 2 on one core, derated
+        "float64": 2.5e10,
+        "bfloat16": 5.0e10,
+    },
+    hbm_bytes=32e9,
+    hbm_bw=1.2e10,             # effective single-core stream bandwidth
+    vmem_bytes=32 * 2 ** 20,   # L2-ish
+    ici_bw_per_link=1e10,
+    pcie_bw=1e12,              # host==device: transfers are memcpy-free-ish
+    disk_bw=0.5e9,
+)
+
+
+# ---------------------------------------------------------------------------
+# Cluster config
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """Everything the cost model may consult about the execution substrate.
+
+    ``mesh_shape``/``mesh_axes`` describe the device mesh the plan targets
+    (e.g. (16, 16) x ("data", "model") for one v5e pod, (2, 16, 16) x
+    ("pod", "data", "model") for the multi-pod config).  The "pod" axis is
+    assumed to cross DCN, all other axes ride ICI.
+    """
+
+    chip: ChipSpec = TPU_V5E
+    mesh_shape: Tuple[int, ...] = (16, 16)
+    mesh_axes: Tuple[str, ...] = ("data", "model")
+
+    # --- latency constants (the paper's job/task-latency analogues) ---
+    dispatch_latency: float = 35e-6        # per jit-call launch
+    collective_phase_latency: float = 1e-6  # per hop of a phased collective
+    host_callback_latency: float = 1e-3
+
+    # --- efficiency corrections (the paper's MMD_corr analogues) ---
+    matmul_util: float = 0.75      # achievable fraction of MXU peak, large mms
+    small_matmul_util: float = 0.30
+    vpu_util: float = 0.80         # elementwise ops vs HBM roofline
+    hbm_eff: float = 0.85          # achievable fraction of peak HBM bw
+    ici_eff: float = 0.90
+    dcn_eff: float = 0.80
+
+    # fraction of collective time that can hide under compute when the plan
+    # enables overlap (microbatched accumulation / async collectives).
+    overlap_fraction: float = 0.0
+
+    # --- memory budgets (the paper's memory-budget analogue) ---
+    hbm_budget_fraction: float = 0.9   # usable HBM fraction (runtime reserve)
+
+    # --- control-flow defaults (paper §3.2) ---
+    default_loop_iterations: int = 16   # N-hat for unknown while/for bounds
+    default_branch_weights: Tuple[float, ...] = ()  # empty => uniform
+
+    # ----- derived -----
+    @property
+    def num_chips(self) -> int:
+        return int(math.prod(self.mesh_shape))
+
+    def axis_size(self, axis: str) -> int:
+        try:
+            return self.mesh_shape[self.mesh_axes.index(axis)]
+        except ValueError:
+            return 1
+
+    @property
+    def hbm_budget(self) -> float:
+        return self.chip.hbm_bytes * self.hbm_budget_fraction
+
+    def peak_flops_total(self, dtype: str = "bfloat16") -> float:
+        return self.chip.peak(dtype) * self.num_chips
+
+    # Effective bandwidths -------------------------------------------------
+    @property
+    def hbm_bw_eff(self) -> float:
+        return self.chip.hbm_bw * self.hbm_eff
+
+    @property
+    def ici_bw_eff(self) -> float:
+        return self.chip.ici_bw_per_link * self.ici_eff
+
+    @property
+    def dcn_bw_eff(self) -> float:
+        return self.chip.dcn_bw * self.dcn_eff
+
+    def link_bw(self, axis: str) -> float:
+        """Per-device interconnect bandwidth along a mesh axis."""
+        return self.dcn_bw_eff if axis == "pod" else self.ici_bw_eff
+
+    def with_mesh(self, shape: Tuple[int, ...], axes: Tuple[str, ...]) -> "ClusterConfig":
+        return dataclasses.replace(self, mesh_shape=tuple(shape), mesh_axes=tuple(axes))
+
+    def with_overlap(self, fraction: float) -> "ClusterConfig":
+        return dataclasses.replace(self, overlap_fraction=float(fraction))
+
+
+# Canonical configs used throughout the repo ---------------------------------
+
+def single_pod_config(**kw) -> ClusterConfig:
+    return ClusterConfig(mesh_shape=(16, 16), mesh_axes=("data", "model"), **kw)
+
+
+def multi_pod_config(**kw) -> ClusterConfig:
+    return ClusterConfig(
+        mesh_shape=(2, 16, 16), mesh_axes=("pod", "data", "model"), **kw
+    )
+
+
+def single_chip_config(**kw) -> ClusterConfig:
+    """The 'CP' execution-type analogue: one chip, no collectives."""
+    return ClusterConfig(mesh_shape=(1,), mesh_axes=("data",), **kw)
+
+
+def cpu_host_config(**kw) -> ClusterConfig:
+    """For the paper-§3.4 accuracy benchmark on this container."""
+    return ClusterConfig(
+        chip=CPU_HOST,
+        mesh_shape=(1,),
+        mesh_axes=("data",),
+        dispatch_latency=50e-6,
+        matmul_util=0.60,
+        **kw,
+    )
+
+
+DTYPE_BYTES = {
+    "bfloat16": 2, "float16": 2, "float32": 4, "float64": 8,
+    "int8": 1, "uint8": 1, "int16": 2, "int32": 4, "int64": 8,
+    "uint32": 4, "bool": 1, "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+_DTYPE_BYTES_CACHE: dict = {}
+
+
+def dtype_bytes(dtype) -> int:
+    s = str(dtype)
+    hit = _DTYPE_BYTES_CACHE.get(s)
+    if hit is not None:
+        return hit
+    out = 4
+    for k, v in DTYPE_BYTES.items():
+        if k in s:
+            out = v
+            break
+    _DTYPE_BYTES_CACHE[s] = out
+    return out

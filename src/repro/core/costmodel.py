@@ -1,0 +1,370 @@
+"""The cost estimator (paper §3): ``C(P, cc) = T-hat(P)``.
+
+Single recursive pass over the runtime plan in execution order:
+
+  * maintains the live-variable symbol table (sizes + memory state), so IO
+    is paid exactly once by the first consumer (§3.2);
+  * per-instruction time = latency + IO + compute, with compute =
+    max(memory-bandwidth time, FLOP-model time) (§3.3);
+  * aggregates over control flow with Eq (1): blocks sum children, loops
+    scale by N-hat (first-iteration IO correction applied), parfor divides
+    by parallelism, branches take a weighted sum, function-call stacks
+    prevent recursion cycles;
+  * linearizes everything into one scalar, estimated execution time (R2).
+
+Costs are *per-program-run* wall-clock seconds given a cluster config.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core import linalg_ops
+from repro.core.cluster import ClusterConfig
+from repro.core.plan import (
+    Block, Call, Collective, Compute, CpVar, CreateVar, DataGen, ForBlock,
+    FunctionBlock, GenericBlock, IfBlock, Instruction, IO, JitCall,
+    ParForBlock, Program, RmVar, WhileBlock,
+)
+from repro.core.symbols import MemState, SymbolTable, TensorStat
+
+TINY = 4.7e-9            # bookkeeping-instruction cost (paper Fig. 4 shows 4.7E-9s)
+VPU_FRACTION = 0.10      # VPU throughput as a fraction of fp32 MXU peak
+
+
+@dataclasses.dataclass
+class CostBreakdown:
+    """The linearized cost factors (R2): IO, compute, collectives, latency."""
+
+    io: float = 0.0
+    compute: float = 0.0
+    collective: float = 0.0
+    latency: float = 0.0
+
+    @property
+    def total(self) -> float:
+        return self.io + self.compute + self.collective + self.latency
+
+    def __add__(self, o: "CostBreakdown") -> "CostBreakdown":
+        return CostBreakdown(self.io + o.io, self.compute + o.compute,
+                             self.collective + o.collective, self.latency + o.latency)
+
+    def scaled(self, w: float) -> "CostBreakdown":
+        return CostBreakdown(self.io * w, self.compute * w,
+                             self.collective * w, self.latency * w)
+
+
+@dataclasses.dataclass
+class CostedNode:
+    """One plan node with its (aggregated) cost — feeds EXPLAIN output."""
+
+    label: str
+    cost: CostBreakdown
+    children: List["CostedNode"] = dataclasses.field(default_factory=list)
+    note: str = ""
+
+
+@dataclasses.dataclass
+class CostedProgram:
+    root: CostedNode
+    total: float
+    breakdown: CostBreakdown
+    peak_hbm_per_device: float
+
+    def __repr__(self) -> str:
+        return (f"CostedProgram(total={self.total:.4g}s, io={self.breakdown.io:.4g}, "
+                f"compute={self.breakdown.compute:.4g}, coll={self.breakdown.collective:.4g}, "
+                f"lat={self.breakdown.latency:.4g}, peak_hbm={self.peak_hbm_per_device/1e9:.3g}GB)")
+
+
+class CostEstimator:
+    """Walks a :class:`Program` and produces a :class:`CostedProgram`."""
+
+    def __init__(self, cc: ClusterConfig, verbose: bool = False):
+        self.cc = cc
+        self.verbose = verbose
+
+    # ------------------------------------------------------------------ API
+    def estimate(self, program: Program) -> CostedProgram:
+        symtab = SymbolTable()
+        for name, stat in program.inputs.items():
+            symtab.createvar(name, stat)
+        self._peak_hbm = symtab.live_hbm_bytes()
+        self._functions = program.functions
+        root = CostedNode(f"PROGRAM {program.name}", CostBreakdown())
+        total = CostBreakdown()
+        for node in program.blocks:
+            cn = self._cost_node(node, symtab, stack=())
+            root.children.append(cn)
+            total = total + cn.cost
+        root.cost = total
+        return CostedProgram(root, total.total, total, self._peak_hbm)
+
+    # ------------------------------------------------------- block walkers
+    def _cost_node(self, node: Union[Instruction, Block], symtab: SymbolTable,
+                   stack: Tuple[str, ...]) -> CostedNode:
+        if isinstance(node, Instruction):
+            return self._cost_instruction(node, symtab, stack)
+        if isinstance(node, GenericBlock):
+            return self._sum_children(node.label, node.children, symtab, stack)
+        if isinstance(node, (ForBlock, WhileBlock)):
+            return self._cost_loop(node, symtab, stack)
+        if isinstance(node, ParForBlock):
+            return self._cost_parfor(node, symtab, stack)
+        if isinstance(node, IfBlock):
+            return self._cost_if(node, symtab, stack)
+        if isinstance(node, FunctionBlock):
+            return self._sum_children(f"FUNCTION {node.name}", node.body, symtab, stack)
+        raise TypeError(f"unknown plan node {type(node)}")
+
+    def _sum_children(self, label: str, children, symtab, stack) -> CostedNode:
+        out = CostedNode(label, CostBreakdown())
+        agg = CostBreakdown()
+        for c in children:
+            cn = self._cost_node(c, symtab, stack)
+            out.children.append(cn)
+            agg = agg + cn.cost
+        out.cost = agg
+        return out
+
+    def _cost_loop(self, node, symtab, stack) -> CostedNode:
+        """T = N * T_pred + T_first + (N-1) * T_warm.
+
+        The warm pass re-costs the body with the post-first-iteration symbol
+        table — the paper's correction for "overestimated read costs in
+        loops, where only the first iteration reads persistent inputs".
+        """
+        n = node.iterations if node.iterations is not None else self.cc.default_loop_iterations
+        n = max(int(n), 1)
+        pred = self._sum_children("predicate", node.predicate, symtab, stack)
+        first = self._sum_children("body[first]", node.body, symtab, stack)
+        if n > 1:
+            warm = self._sum_children("body[warm]", node.body, symtab, stack)
+            agg = pred.cost.scaled(n) + first.cost + warm.cost.scaled(n - 1)
+        else:
+            warm = None
+            agg = pred.cost + first.cost
+        kind = "FOR" if isinstance(node, ForBlock) else "WHILE"
+        label = f"{kind} {node.label} (N={n}{'' if node.iterations is not None else ' est'})"
+        children = [pred, first] + ([warm] if warm else [])
+        return CostedNode(label, agg, children)
+
+    def _cost_parfor(self, node: ParForBlock, symtab, stack) -> CostedNode:
+        n = node.iterations if node.iterations is not None else self.cc.default_loop_iterations
+        k = max(int(node.parallelism), 1)
+        w = math.ceil(max(int(n), 1) / k)
+        first = self._sum_children("body[first]", node.body, symtab, stack)
+        if w > 1:
+            warm = self._sum_children("body[warm]", node.body, symtab, stack)
+            agg = first.cost + warm.cost.scaled(w - 1)
+            children = [first, warm]
+        else:
+            agg = first.cost
+            children = [first]
+        return CostedNode(f"PARFOR {node.label} (N={n}, k={k}, w={w})", agg, children)
+
+    def _cost_if(self, node: IfBlock, symtab, stack) -> CostedNode:
+        pred = self._sum_children("predicate", node.predicate, symtab, stack)
+        nb = max(len(node.branches), 1)
+        weights = list(node.weights) if node.weights else [1.0 / nb] * nb
+        branch_nodes, branch_tabs = [], []
+        base = symtab.snapshot()
+        agg = pred.cost
+        for i, br in enumerate(node.branches):
+            symtab.restore(base)
+            bn = self._sum_children(f"branch[{i}] w={weights[i]:.2f}", br, symtab, stack)
+            branch_nodes.append(bn)
+            branch_tabs.append(symtab.snapshot())
+            agg = agg + bn.cost.scaled(weights[i])
+        # pessimistic merge: a var is HBM-resident only if resident in every
+        # branch that defines it; otherwise keep the colder state.
+        merged = branch_tabs[0] if branch_tabs else base
+        for tab in branch_tabs[1:]:
+            for name, st in list(merged.items()):
+                other = tab.get(name)
+                if other is None:
+                    del merged[name]
+                elif other.state != st.state:
+                    colder = st if st.state != MemState.HBM else other
+                    merged[name] = dataclasses.replace(st, state=colder.state)
+        symtab.restore(merged)
+        return CostedNode(f"IF {node.label}", agg, [pred] + branch_nodes)
+
+    # ------------------------------------------------------- instructions
+    def _cost_instruction(self, inst: Instruction, symtab: SymbolTable,
+                          stack: Tuple[str, ...]) -> CostedNode:
+        cc = self.cc
+        if isinstance(inst, CreateVar):
+            symtab.createvar(inst.name, dataclasses.replace(inst.stat))
+            return self._leaf(inst, CostBreakdown(latency=TINY), symtab)
+        if isinstance(inst, CpVar):
+            symtab.cpvar(inst.src, inst.dst)
+            return self._leaf(inst, CostBreakdown(latency=TINY), symtab)
+        if isinstance(inst, RmVar):
+            symtab.rmvar(*inst.names)
+            return self._leaf(inst, CostBreakdown(latency=TINY), symtab)
+        if isinstance(inst, DataGen):
+            stat = dataclasses.replace(inst.stat, state=MemState.HBM)
+            symtab.createvar(inst.output, stat)
+            t = stat.bytes_per_device() / cc.hbm_bw_eff
+            return self._leaf(inst, CostBreakdown(compute=t), symtab)
+        if isinstance(inst, Compute):
+            return self._cost_compute(inst, symtab)
+        if isinstance(inst, IO):
+            return self._cost_io(inst, symtab)
+        if isinstance(inst, Collective):
+            return self._cost_collective(inst, symtab)
+        if isinstance(inst, JitCall):
+            return self._cost_jitcall(inst, symtab)
+        if isinstance(inst, Call):
+            return self._cost_call(inst, symtab, stack)
+        raise TypeError(f"unknown instruction {type(inst)}")
+
+    def _leaf(self, inst: Instruction, cost: CostBreakdown,
+              symtab: SymbolTable, note: str = "") -> CostedNode:
+        self._peak_hbm = max(self._peak_hbm, symtab.live_hbm_bytes())
+        return CostedNode(inst.describe(), cost, note=note)
+
+    # -- first-use IO (the "pays the read" rule) --------------------------
+    def _stage_in(self, name: str, symtab: SymbolTable) -> float:
+        st = symtab.get(name)
+        if st is None or st.state == MemState.HBM:
+            return 0.0
+        t = 0.0
+        per_dev = st.bytes_serialized() / max(1, st.shards)
+        if st.state == MemState.DISK:
+            t += per_dev / self.cc.chip.disk_bw
+            t += per_dev / self.cc.chip.pcie_bw
+        elif st.state == MemState.HOST:
+            t += per_dev / self.cc.chip.pcie_bw
+        symtab.touch_hbm(name)
+        return t
+
+    def _cost_compute(self, inst: Compute, symtab: SymbolTable) -> CostedNode:
+        cc = self.cc
+        io_t = sum(self._stage_in(n, symtab) for n in inst.inputs)
+        stats = []
+        for n in inst.inputs:
+            st = symtab.get(n)
+            if st is None:
+                raise KeyError(f"compute '{inst.opcode}' reads undefined var '{n}'")
+            stats.append(st)
+        prof = linalg_ops.profile(inst.opcode, stats, **inst.attrs)
+
+        n_shards = 1
+        for ax in inst.shard_axes:
+            n_shards *= cc.axis_size(ax)
+        if inst.exec_type == "CP":
+            n_shards = 1
+
+        flops = prof.flops / n_shards
+        bytes_moved = prof.bytes / n_shards
+        dtype = stats[0].dtype if stats else "bfloat16"
+        if prof.util == "mxu":
+            util = _mxu_util(cc, prof.flops)
+            peak = cc.chip.peak(dtype) * util
+        else:
+            peak = cc.chip.peak("float32") * VPU_FRACTION
+        t_flops = flops / peak
+        t_mem = bytes_moved / cc.hbm_bw_eff
+        compute_t = max(t_flops, t_mem)
+
+        out_stat = dataclasses.replace(prof.out, shards=n_shards, state=MemState.HBM)
+        symtab.createvar(inst.output, out_stat)
+        note = ""
+        if self.verbose:
+            note = (f"flops={prof.flops:.3g}/shard{n_shards} "
+                    f"t_flops={t_flops:.3g} t_mem={t_mem:.3g}")
+        return self._leaf(inst, CostBreakdown(io=io_t, compute=compute_t,
+                                              latency=TINY), symtab, note)
+
+    def _cost_io(self, inst: IO, symtab: SymbolTable) -> CostedNode:
+        st = symtab.get(inst.var)
+        if st is None:
+            raise KeyError(f"io on undefined var '{inst.var}'")
+        per_dev = (st.bytes_serialized() if inst.serialized else st.bytes_in_memory())
+        per_dev /= max(1, st.shards)
+        t = 0.0
+        legs = _path_legs(inst.src, inst.dst)
+        for leg in legs:
+            bw = {"disk": self.cc.chip.disk_bw, "pcie": self.cc.chip.pcie_bw,
+                  "dram": self.cc.chip.host_dram_bw}[leg]
+            t += per_dev / bw
+        symtab.set_state(inst.var, inst.dst)
+        return self._leaf(inst, CostBreakdown(io=t), symtab)
+
+    def _cost_collective(self, inst: Collective, symtab: SymbolTable) -> CostedNode:
+        cc = self.cc
+        st = symtab.get(inst.var)
+        if inst.bytes_override is not None:
+            payload = float(inst.bytes_override)
+        elif st is not None:
+            payload = st.bytes_per_device()
+        else:
+            raise KeyError(f"collective on undefined var '{inst.var}'")
+        t = 0.0
+        for ax in inst.axes:
+            t += linalg_ops.collective_cost(
+                inst.kind, payload, cc.axis_size(ax), cc.link_bw(ax),
+                cc.collective_phase_latency)
+            if inst.kind == "all_gather":
+                payload *= cc.axis_size(ax)   # hierarchical gather grows payload
+        t *= (1.0 - cc.overlap_fraction)
+        if inst.output and st is not None:
+            symtab.createvar(inst.output, dataclasses.replace(st))
+        return self._leaf(inst, CostBreakdown(collective=t), symtab)
+
+    def _cost_jitcall(self, inst: JitCall, symtab: SymbolTable) -> CostedNode:
+        io_t = sum(self._stage_in(n, symtab) for n in inst.reads)
+        bd = inst.compiled_cost.time_breakdown(self.cc)
+        for w in inst.writes:
+            if w in symtab:
+                symtab.touch_hbm(w)
+        cost = CostBreakdown(io=io_t + bd.io, compute=bd.compute,
+                             collective=bd.collective * (1.0 - self.cc.overlap_fraction),
+                             latency=bd.latency + self.cc.dispatch_latency)
+        return self._leaf(inst, cost, symtab,
+                          note=f"from compiled HLO: {inst.compiled_cost.summary()}")
+
+    def _cost_call(self, inst: Call, symtab: SymbolTable,
+                   stack: Tuple[str, ...]) -> CostedNode:
+        if inst.func in stack:   # recursion guard (paper §3.2)
+            return self._leaf(inst, CostBreakdown(latency=TINY), symtab,
+                              note="recursive call — cycle cut")
+        fn = self._functions.get(inst.func)
+        if fn is None:
+            raise KeyError(f"call to undefined function '{inst.func}'")
+        node = self._sum_children(f"call {inst.func}", fn.body, symtab,
+                                  stack + (inst.func,))
+        node.cost = node.cost + CostBreakdown(latency=self.cc.dispatch_latency)
+        return node
+
+
+def _mxu_util(cc: ClusterConfig, flops: float) -> float:
+    """Achievable MXU fraction, ramping log-linearly from small_matmul_util
+    (<=1e8 FLOPs) to matmul_util (>=1e10).  Smooth, so estimated time stays
+    monotone in problem size (a step function made bigger ops 'faster')."""
+    lo, hi = 1e8, 1e10
+    if flops <= lo:
+        return cc.small_matmul_util
+    if flops >= hi:
+        return cc.matmul_util
+    frac = (math.log10(flops) - 8.0) / 2.0
+    return cc.small_matmul_util + frac * (cc.matmul_util - cc.small_matmul_util)
+
+
+def _path_legs(src: MemState, dst: MemState) -> List[str]:
+    order = {MemState.DISK: 0, MemState.HOST: 1, MemState.HBM: 2}
+    legs_up = {(0, 1): ["disk"], (1, 2): ["pcie"], (0, 2): ["disk", "pcie"]}
+    a, b = order[src], order[dst]
+    if a == b:
+        return []
+    if a < b:
+        return legs_up[(a, b)]
+    return list(reversed(legs_up[(b, a)]))
+
+
+def estimate(program: Program, cc: ClusterConfig) -> CostedProgram:
+    """Convenience wrapper: ``C(P, cc)``."""
+    return CostEstimator(cc).estimate(program)

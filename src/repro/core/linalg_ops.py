@@ -1,0 +1,308 @@
+"""White-box per-op FLOP/byte formulas (paper §3.3).
+
+SystemML's cost model "consists of dozens of these white-box cost functions
+for all existing instructions" — e.g.::
+
+    FLOP(tsmm_left) = MMD_corr * m * n^2 * s        (dense)
+
+Each formula here maps input :class:`TensorStat` s + attributes to an
+:class:`OpProfile`: floating point ops, HBM read/write traffic, the output's
+TensorStat, and a utilization class ("mxu" for matmul-shaped work, "vpu" for
+elementwise/reduction work).  The cost model turns a profile into time via
+the roofline ``max(flops/peak·util, bytes/hbm_bw)`` — the paper's
+"maximum of main-memory IO and instruction-specific floating point
+operations", with MXU/VPU taking the role of the 1-FLOP/cycle CPU.
+
+Formulas count *multiply-add as 2 FLOPs* to stay commensurable with XLA's
+``cost_analysis()`` (which counts fused multiply-add as 2).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Sequence, Tuple
+
+from repro.core.cluster import dtype_bytes
+from repro.core.symbols import MemState, TensorStat
+
+# Operation-specific corrections (the paper's MMD_corr / MMS_corr analogues).
+TSMM_CORR = 0.5          # symmetric output: half the computation
+SOLVE_CHOL_CORR = 1.0 / 3.0
+
+
+@dataclasses.dataclass
+class OpProfile:
+    flops: float
+    read_bytes: float
+    write_bytes: float
+    out: TensorStat
+    util: str = "mxu"            # "mxu" | "vpu"
+
+    @property
+    def bytes(self) -> float:
+        return self.read_bytes + self.write_bytes
+
+
+OpFn = Callable[..., OpProfile]
+REGISTRY: Dict[str, OpFn] = {}
+
+
+def register(name: str):
+    def deco(fn: OpFn) -> OpFn:
+        REGISTRY[name] = fn
+        return fn
+    return deco
+
+
+def profile(opcode: str, inputs: Sequence[TensorStat], **attrs) -> OpProfile:
+    if opcode not in REGISTRY:
+        raise KeyError(f"no cost function registered for opcode '{opcode}'")
+    return REGISTRY[opcode](*inputs, **attrs)
+
+
+def _bytes(st: TensorStat) -> float:
+    return st.bytes_in_memory()
+
+
+def _out(shape, like: TensorStat, dtype=None, sparsity=1.0) -> TensorStat:
+    return TensorStat(tuple(int(x) for x in shape), dtype or like.dtype,
+                      sparsity=sparsity, state=MemState.HBM, shards=like.shards)
+
+
+# ---------------------------------------------------------------------------
+# Matrix multiplication family (the paper's ba+*, tsmm, mapmm, cpmm)
+# ---------------------------------------------------------------------------
+
+
+@register("matmul")
+def _matmul(a: TensorStat, b: TensorStat, **attrs) -> OpProfile:
+    """General (batched) matmul: [..., m, k] x [..., k, n]."""
+    *ba, m, k = a.shape
+    *bb, k2, n = b.shape
+    assert k == k2, f"matmul contraction mismatch {a.shape} x {b.shape}"
+    batch = max(math.prod(ba) if ba else 1, math.prod(bb) if bb else 1)
+    # sparse inputs scale flops by sparsity (paper's s / s^2 terms)
+    s = a.sparsity * b.sparsity
+    flops = 2.0 * batch * m * n * k * s
+    out = _out(tuple(ba or bb) + (m, n), a)
+    return OpProfile(flops, _bytes(a) + _bytes(b), _bytes(out), out, "mxu")
+
+
+@register("tsmm")
+def _tsmm(x: TensorStat, **attrs) -> OpProfile:
+    """Transpose-self matmul X^T X — symmetric output, half the compute.
+
+    FLOP(tsmm_left) = TSMM_CORR * 2 * m * n^2 * s   (dense; paper Eq (2),
+    doubled because we count mul+add separately like XLA does).
+    """
+    m, n = x.shape
+    flops = TSMM_CORR * 2.0 * m * n * n * (x.sparsity if x.sparsity >= 0.4 else x.sparsity ** 2)
+    out = _out((n, n), x)
+    # read X once; write only the upper triangle then mirror (~n^2 writes)
+    return OpProfile(flops, _bytes(x), _bytes(out), out, "mxu")
+
+
+@register("transpose")
+def _transpose(x: TensorStat, **attrs) -> OpProfile:
+    out = _out(tuple(reversed(x.shape)), x, sparsity=x.sparsity)
+    return OpProfile(0.0, _bytes(x), _bytes(out), out, "vpu")
+
+
+@register("solve")
+def _solve(a: TensorStat, b: TensorStat, **attrs) -> OpProfile:
+    """Dense SPD solve via Cholesky: n^3/3 + 2 n^2 rhs."""
+    n = a.shape[0]
+    rhs = b.shape[1] if len(b.shape) > 1 else 1
+    flops = SOLVE_CHOL_CORR * 2.0 * n ** 3 + 2.0 * 2.0 * n * n * rhs
+    out = _out((n, rhs), b)
+    return OpProfile(flops, _bytes(a) + _bytes(b), _bytes(out), out, "mxu")
+
+
+# ---------------------------------------------------------------------------
+# Elementwise / reduction / data movement
+# ---------------------------------------------------------------------------
+
+
+def _ew(arity: int, flops_per_cell: float = 1.0):
+    def fn(*ins: TensorStat, **attrs) -> OpProfile:
+        big = max(ins, key=lambda s: s.cells)
+        out = _out(big.shape, big)
+        reads = sum(_bytes(i) for i in ins)
+        return OpProfile(flops_per_cell * big.cells, reads, _bytes(out), out, "vpu")
+    return fn
+
+
+REGISTRY["add"] = _ew(2)
+REGISTRY["sub"] = _ew(2)
+REGISTRY["mul"] = _ew(2)
+REGISTRY["div"] = _ew(2, 4.0)
+REGISTRY["unary"] = _ew(1)          # exp/tanh/gelu etc (approx 1 "flop"/cell
+REGISTRY["gelu"] = _ew(1, 8.0)      # transcendental-heavy
+REGISTRY["silu"] = _ew(1, 6.0)
+
+
+@register("reduce")
+def _reduce(x: TensorStat, **attrs) -> OpProfile:
+    axes = attrs.get("axes")
+    if axes is None:
+        out_shape: Tuple[int, ...] = ()
+    else:
+        out_shape = tuple(d for i, d in enumerate(x.shape) if i not in set(axes))
+    out = _out(out_shape, x)
+    return OpProfile(float(x.cells), _bytes(x), _bytes(out), out, "vpu")
+
+
+@register("rdiag")
+def _rdiag(v: TensorStat, **attrs) -> OpProfile:
+    n = v.shape[0]
+    out = _out((n, n), v, sparsity=1.0 / max(n, 1))
+    return OpProfile(0.0, _bytes(v), out.bytes_serialized(), out, "vpu")
+
+
+@register("concat")
+def _concat(*ins: TensorStat, **attrs) -> OpProfile:
+    axis = attrs.get("axis", -1)
+    shape = list(ins[0].shape)
+    shape[axis] = sum(i.shape[axis] for i in ins)
+    out = _out(shape, ins[0])
+    reads = sum(_bytes(i) for i in ins)
+    return OpProfile(0.0, reads, _bytes(out), out, "vpu")
+
+
+@register("softmax")
+def _softmax(x: TensorStat, **attrs) -> OpProfile:
+    out = _out(x.shape, x)
+    return OpProfile(5.0 * x.cells, _bytes(x), _bytes(out), out, "vpu")
+
+
+@register("layernorm")
+def _layernorm(x: TensorStat, **attrs) -> OpProfile:
+    out = _out(x.shape, x)
+    return OpProfile(6.0 * x.cells, _bytes(x), _bytes(out), out, "vpu")
+
+
+@register("embedding")
+def _embedding(ids: TensorStat, table: TensorStat, **attrs) -> OpProfile:
+    d = table.shape[-1]
+    out = _out(tuple(ids.shape) + (d,), table)
+    # gather reads only the selected rows
+    reads = _bytes(ids) + out.bytes_in_memory()
+    return OpProfile(0.0, reads, _bytes(out), out, "vpu")
+
+
+# ---------------------------------------------------------------------------
+# Attention / MoE / SSM composite ops (white-box composites used by the
+# analytical planner; the generated-plan path gets exact numbers from HLO)
+# ---------------------------------------------------------------------------
+
+
+@register("attention")
+def _attention(q: TensorStat, k: TensorStat, v: TensorStat, **attrs) -> OpProfile:
+    """Scaled dot-product attention, optionally windowed/causal.
+
+    q: [B, Hq, Sq, D], k/v: [B, Hkv, Skv, D].  ``window`` limits keys per
+    query (sliding window); causal halves the score work.
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, skv, _ = k.shape
+    window = attrs.get("window")
+    eff_kv = min(skv, window) if window else skv
+    causal = attrs.get("causal", False)
+    frac = 0.5 if (causal and eff_kv == skv and sq == skv) else 1.0
+    score_flops = 2.0 * b * hq * sq * eff_kv * d * frac
+    av_flops = 2.0 * b * hq * sq * eff_kv * d * frac
+    softmax_flops = 5.0 * b * hq * sq * eff_kv * frac
+    out = _out((b, hq, sq, d), q)
+    reads = _bytes(q) + _bytes(k) + _bytes(v)
+    return OpProfile(score_flops + av_flops + softmax_flops, reads, _bytes(out), out, "mxu")
+
+
+@register("moe_ffn")
+def _moe_ffn(x: TensorStat, w_up: TensorStat, **attrs) -> OpProfile:
+    """Routed expert FFN: tokens x d -> top-k of E experts, gated MLP.
+
+    w_up: [E, d, ff].  Expected compute scales with k/E "sparsity" — the
+    paper's sparse-size math reused for expert load.
+    """
+    tokens = math.prod(x.shape[:-1])
+    d = x.shape[-1]
+    e, _, ff = w_up.shape
+    k = attrs.get("top_k", 2)
+    gated = 3.0 if attrs.get("gated", True) else 2.0
+    flops = gated * 2.0 * tokens * k * d * ff
+    out = _out(x.shape, x)
+    reads = _bytes(x) + e * d * ff * gated * dtype_bytes(w_up.dtype)
+    return OpProfile(flops, reads, _bytes(out), out, "mxu")
+
+
+@register("ssd_scan")
+def _ssd_scan(x: TensorStat, **attrs) -> OpProfile:
+    """Mamba2 SSD chunked scan: [B, S, H, P] with state size N per head.
+
+    Chunked dual form: intra-chunk (quadratic in chunk), inter-chunk state
+    passing — flops ≈ 2*B*S*H*P*(chunk + 2N).
+    """
+    b, s, h, p = x.shape
+    n = attrs.get("state", 128)
+    chunk = attrs.get("chunk", 256)
+    flops = 2.0 * b * s * h * p * (chunk + 2 * n)
+    out = _out(x.shape, x)
+    state_bytes = b * h * p * n * dtype_bytes(x.dtype) * (s // max(chunk, 1))
+    return OpProfile(flops, _bytes(x) + state_bytes, _bytes(out), out, "mxu")
+
+
+@register("cross_entropy")
+def _xent(logits: TensorStat, **attrs) -> OpProfile:
+    out = _out((), logits)
+    return OpProfile(8.0 * logits.cells, _bytes(logits), 4.0, out, "vpu")
+
+
+@register("adamw_update")
+def _adamw(p: TensorStat, **attrs) -> OpProfile:
+    # read p, g, m, v; write p, m, v — ~14 flops/param
+    out = _out(p.shape, p)
+    b = _bytes(p)
+    return OpProfile(14.0 * p.cells, 4 * b, 3 * b, out, "vpu")
+
+
+# ---------------------------------------------------------------------------
+# Collective payload/time formulas (ring algorithms on a torus axis)
+# ---------------------------------------------------------------------------
+
+
+def collective_cost(kind: str, bytes_per_device: float, axis_size: int,
+                    link_bw: float, phase_latency: float) -> float:
+    """Time for one collective over an axis of ``axis_size`` devices.
+
+    Ring formulas (bytes are the *per-device* payload B):
+      all_gather / reduce_scatter: (n-1)/n * B_total_or_shard semantics —
+        we take B as the per-device INPUT payload:
+          all_gather:      each device ends with n*B; wire time (n-1)*B/bw
+          reduce_scatter:  input n*B-ish handled by caller; here B is the
+                           per-device input, wire time (n-1)/n * B/bw
+      all_reduce = reduce_scatter + all_gather = 2*(n-1)/n * B/bw
+      all_to_all: (n-1)/n * B/bw
+      permute: B/bw, 1 hop
+    """
+    n = max(int(axis_size), 1)
+    if n == 1:
+        return 0.0
+    b = float(bytes_per_device)
+    if kind == "all_reduce":
+        wire = 2.0 * (n - 1) / n * b
+        hops = 2 * (n - 1)
+    elif kind == "all_gather":
+        wire = (n - 1) * b
+        hops = n - 1
+    elif kind == "reduce_scatter":
+        wire = (n - 1) / n * b
+        hops = n - 1
+    elif kind == "all_to_all":
+        wire = (n - 1) / n * b
+        hops = n - 1
+    elif kind in ("permute", "collective_permute"):
+        wire = b
+        hops = 1
+    else:
+        raise KeyError(f"unknown collective kind '{kind}'")
+    return wire / link_bw + hops * phase_latency

@@ -1,0 +1,251 @@
+"""Runtime-plan IR (paper §2/§3.1).
+
+A runtime plan ``P`` is a hierarchy of *program blocks* ``b ∈ B`` and
+*instructions* ``inst ∈ I``.  This mirrors SystemML's runtime program:
+
+    PROGRAM
+      MAIN PROGRAM
+        GENERIC (lines 1-3)      <- GenericBlock([instructions...])
+        IF / FOR / WHILE / PARFOR / FUNCTION blocks, arbitrarily nested
+
+Instruction kinds map SystemML's onto the TPU world:
+
+  * meta      — createvar / cpvar / rmvar (symbol-table maintenance, ~free)
+  * datagen   — rand / seq / iota (produces a tensor, no input IO)
+  * compute   — a logical op (opcode from :mod:`repro.core.linalg_ops`),
+                CP (single device) or DIST (sharded across mesh axes)
+  * io        — explicit state transfer: disk<->host<->hbm read/write
+                (persistent reads, checkpoint writes, host staging)
+  * collective— all_reduce / all_gather / reduce_scatter / all_to_all /
+                permute over named mesh axes (the MR-shuffle analogue)
+  * jitcall   — one compiled XLA executable; its cost comes from the
+                *generated plan* (``hlo_cost``) rather than op formulas.
+                This is the paper's headline object: costing what the
+                compiler actually produced.
+
+Plans are pure data — generation is cheap (paper: <0.5 ms) and costing is a
+single recursive pass (:mod:`repro.core.costmodel`).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.core.symbols import MemState, TensorStat
+
+# ---------------------------------------------------------------------------
+# Instructions
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class Instruction:
+    """Base class; concrete kinds below."""
+
+    def describe(self) -> str:  # pragma: no cover - overridden
+        return self.__class__.__name__
+
+
+@dataclasses.dataclass
+class CreateVar(Instruction):
+    name: str
+    stat: TensorStat
+
+    def describe(self) -> str:
+        return f"createvar {self.name} {list(self.stat.shape)} {self.stat.dtype} {self.stat.state.value}"
+
+
+@dataclasses.dataclass
+class CpVar(Instruction):
+    src: str
+    dst: str
+
+    def describe(self) -> str:
+        return f"cpvar {self.src} {self.dst}"
+
+
+@dataclasses.dataclass
+class RmVar(Instruction):
+    names: Tuple[str, ...]
+
+    def describe(self) -> str:
+        return "rmvar " + " ".join(self.names)
+
+
+@dataclasses.dataclass
+class DataGen(Instruction):
+    opcode: str              # "rand" | "seq" | "iota" | "zeros"
+    output: str
+    stat: TensorStat
+
+    def describe(self) -> str:
+        return f"{self.opcode} {self.output} {list(self.stat.shape)}"
+
+
+@dataclasses.dataclass
+class Compute(Instruction):
+    """A logical operation; ``exec_type`` selects CP vs distributed.
+
+    ``shard_axes`` names the mesh axes whose product divides the work
+    (the paper's effective degree of parallelism for MR jobs).
+    """
+
+    opcode: str
+    inputs: Tuple[str, ...]
+    output: str
+    exec_type: str = "CP"                 # "CP" | "DIST"
+    shard_axes: Tuple[str, ...] = ()
+    attrs: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def describe(self) -> str:
+        et = self.exec_type if not self.shard_axes else f"{self.exec_type}[{','.join(self.shard_axes)}]"
+        return f"{et} {self.opcode} {' '.join(self.inputs)} -> {self.output}"
+
+
+@dataclasses.dataclass
+class IO(Instruction):
+    """State transfer for one variable (pays bandwidth of the slower leg)."""
+
+    op: str                  # "read" | "write"
+    var: str
+    src: MemState = MemState.DISK
+    dst: MemState = MemState.HBM
+    # When writing, serialized bytes may differ from in-memory (M' vs M).
+    serialized: bool = True
+
+    def describe(self) -> str:
+        return f"{self.op} {self.var} {self.src.value}->{self.dst.value}"
+
+
+@dataclasses.dataclass
+class Collective(Instruction):
+    """all_reduce / all_gather / reduce_scatter / all_to_all / permute."""
+
+    kind: str
+    var: str
+    axes: Tuple[str, ...]          # mesh axes participating
+    output: Optional[str] = None   # defaults to in-place semantics
+    # Optional explicit payload override (bytes per device); else derived
+    # from the symbol table entry for ``var``.
+    bytes_override: Optional[float] = None
+
+    def describe(self) -> str:
+        return f"{self.kind}[{','.join(self.axes)}] {self.var}"
+
+
+@dataclasses.dataclass
+class JitCall(Instruction):
+    """One compiled executable, costed from its generated HLO.
+
+    ``compiled_cost`` is a :class:`repro.core.hlo_cost.CompiledCost` —
+    FLOPs / HBM bytes / per-collective bytes extracted from the compiled
+    module.  ``reads``/``writes`` hook it into live-variable state so IO
+    before/after the call is accounted exactly once.
+    """
+
+    name: str
+    compiled_cost: Any
+    reads: Tuple[str, ...] = ()
+    writes: Tuple[str, ...] = ()
+    donated: Tuple[str, ...] = ()
+
+    def describe(self) -> str:
+        return f"jitcall {self.name} reads={list(self.reads)} writes={list(self.writes)}"
+
+
+# ---------------------------------------------------------------------------
+# Program blocks (control flow — paper Eq (1))
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class GenericBlock:
+    label: str
+    children: List[Union[Instruction, "Block"]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class ForBlock:
+    label: str
+    iterations: Optional[int]              # None => unknown, use N-hat
+    body: List[Union[Instruction, "Block"]] = dataclasses.field(default_factory=list)
+    predicate: List[Instruction] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class WhileBlock:
+    label: str
+    body: List[Union[Instruction, "Block"]] = dataclasses.field(default_factory=list)
+    predicate: List[Instruction] = dataclasses.field(default_factory=list)
+    iterations: Optional[int] = None       # almost always unknown
+
+
+@dataclasses.dataclass
+class ParForBlock:
+    """Task-parallel loop: time scales by ceil(N / k) (paper Eq (1))."""
+
+    label: str
+    iterations: Optional[int]
+    parallelism: int
+    body: List[Union[Instruction, "Block"]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class IfBlock:
+    label: str
+    branches: List[List[Union[Instruction, "Block"]]] = dataclasses.field(default_factory=list)
+    weights: Optional[Sequence[float]] = None   # None => uniform
+    predicate: List[Instruction] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class FunctionBlock:
+    """Named function body; calls are CallInst; recursion guarded by stack."""
+
+    name: str
+    body: List[Union[Instruction, "Block"]] = dataclasses.field(default_factory=list)
+
+
+@dataclasses.dataclass
+class Call(Instruction):
+    func: str
+
+    def describe(self) -> str:
+        return f"call {self.func}"
+
+
+Block = Union[GenericBlock, ForBlock, WhileBlock, ParForBlock, IfBlock, FunctionBlock]
+
+
+@dataclasses.dataclass
+class Program:
+    """Top-level runtime plan ``P``."""
+
+    name: str
+    blocks: List[Union[Instruction, Block]] = dataclasses.field(default_factory=list)
+    functions: Dict[str, FunctionBlock] = dataclasses.field(default_factory=dict)
+    # Variables that exist before the program runs (persistent inputs).
+    inputs: Dict[str, TensorStat] = dataclasses.field(default_factory=dict)
+
+    def count_instructions(self) -> Dict[str, int]:
+        counts: Dict[str, int] = {}
+
+        def walk(nodes):
+            for n in nodes:
+                if isinstance(n, Instruction):
+                    k = type(n).__name__
+                    counts[k] = counts.get(k, 0) + 1
+                elif isinstance(n, GenericBlock):
+                    walk(n.children)
+                elif isinstance(n, (ForBlock, WhileBlock, ParForBlock, FunctionBlock)):
+                    walk(getattr(n, "predicate", []) or [])
+                    walk(n.body)
+                elif isinstance(n, IfBlock):
+                    walk(n.predicate)
+                    for br in n.branches:
+                        walk(br)
+
+        walk(self.blocks)
+        for f in self.functions.values():
+            walk(f.body)
+        return counts

@@ -1,0 +1,557 @@
+"""Cost-based plan selection (the optimizers the paper's model serves).
+
+SystemML's compiler makes *execution-type* decisions (CP vs MR), *physical
+operator* choices (tsmm / mapmm / cpmm), and *resource* decisions, all
+evaluated through C(P, cc).  The TPU analogue optimizes a **sharding plan**
+for each (architecture x input shape x mesh):
+
+  * role of the mesh axes: tensor-parallel, expert-parallel, FSDP, or pure
+    extra data-parallelism,
+  * remat (activation checkpointing) policy: none / selective / full,
+  * microbatch count (gradient accumulation),
+  * gradient-reduction dtype (compression),
+  * collective/compute overlap.
+
+For every candidate plan we *generate* an analytical runtime plan — a
+:class:`Program` of per-layer instructions and collectives, with the layer
+stack expressed as a ForBlock exactly like the paper costs loops — and rank
+by ``C(P, cc)`` subject to the HBM budget.  The winner is then validated by
+compiling the real jitted step and costing the generated HLO
+(:mod:`repro.core.hlo_cost`) — cost the *generated* plan, per the paper.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.cluster import ClusterConfig, dtype_bytes
+from repro.core.costmodel import CostedProgram, estimate
+from repro.core.plan import (Collective, Compute, CreateVar, DataGen, ForBlock,
+                             GenericBlock, IO, Program)
+from repro.core.symbols import MemState, TensorStat
+
+
+# ---------------------------------------------------------------------------
+# Sharding plan: the searchable decision vector
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingPlan:
+    name: str = "dp"
+    batch_axes: Tuple[str, ...] = ("data",)
+    tp_axes: Tuple[str, ...] = ()          # heads / ff sharding
+    fsdp_axes: Tuple[str, ...] = ()        # ZeRO-3 param sharding
+    ep_axes: Tuple[str, ...] = ()          # MoE expert sharding
+    seq_axes: Tuple[str, ...] = ()         # sequence-parallel (long prefill)
+    remat: str = "none"                    # none | selective | full
+    microbatches: int = 1
+    grad_reduce_dtype: str = "float32"
+    overlap: bool = True
+    zero1: bool = True                     # shard optimizer state over data
+
+    def degree(self, cc: ClusterConfig, axes: Tuple[str, ...]) -> int:
+        d = 1
+        for a in axes:
+            d *= cc.axis_size(a)
+        return d
+
+    def eff_degree(self, cc: ClusterConfig, axes: Tuple[str, ...],
+                   units: int) -> int:
+        """Effective parallelism: the axes product only divides the work
+        when it divides the unit count — otherwise GSPMD (and our sharding
+        rules) replicate, and the honest degree is 1.  (A dp-pure plan
+        'sharding' batch=32 over 256 chips actually replicates the whole
+        model on every chip — caught by the generated-plan costing, see
+        EXPERIMENTS.md §Perf cell 2.)"""
+        d = self.degree(cc, axes)
+        return d if (d > 0 and units % d == 0) else 1
+
+    def describe(self) -> str:
+        bits = [f"batch={'x'.join(self.batch_axes) or '-'}"]
+        if self.tp_axes:
+            bits.append(f"tp={'x'.join(self.tp_axes)}")
+        if self.fsdp_axes:
+            bits.append(f"fsdp={'x'.join(self.fsdp_axes)}")
+        if self.ep_axes:
+            bits.append(f"ep={'x'.join(self.ep_axes)}")
+        if self.seq_axes:
+            bits.append(f"seq={'x'.join(self.seq_axes)}")
+        bits.append(f"remat={self.remat}")
+        if self.microbatches > 1:
+            bits.append(f"ubatch={self.microbatches}")
+        if self.grad_reduce_dtype != "float32":
+            bits.append(f"gdtype={self.grad_reduce_dtype}")
+        return f"{self.name}[{','.join(bits)}]"
+
+
+# ---------------------------------------------------------------------------
+# Analytical step-program generation (white-box, per layer, ForBlock)
+# ---------------------------------------------------------------------------
+
+
+def _ts(shape, dtype="bfloat16", shards=1, state=MemState.HBM, sparsity=1.0):
+    return TensorStat(tuple(int(x) for x in shape), dtype, sparsity, state,
+                      max(int(shards), 1))
+
+
+def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
+                       cc: ClusterConfig) -> Program:
+    """Generate the analytical runtime plan for one train/serve step.
+
+    All tensor shapes are GLOBAL; ``shard_axes`` on each Compute divides the
+    work by the product of those axes' sizes, and each TensorStat's
+    ``shards`` divides its per-device bytes — the same discipline the paper
+    uses when normalizing MR task costs by the effective degree of
+    parallelism.
+    """
+    mode = shape.mode
+    micro0 = plan.microbatches if shape.mode == "train" else 1
+    mb0 = max(shape.global_batch // micro0, 1)
+    dp = plan.eff_degree(cc, plan.batch_axes, mb0)
+    tp = plan.degree(cc, plan.tp_axes)
+    fsdp = plan.degree(cc, plan.fsdp_axes)
+    ep = plan.degree(cc, plan.ep_axes)
+    sp = plan.eff_degree(cc, plan.seq_axes,
+                         1 if mode == "decode" else shape.seq_len)
+    d, hd = arch.d_model, arch.head_dim_
+    nh, nkv = max(arch.n_heads, 1), max(arch.n_kv_heads, 1)
+    dt = arch.dtype
+    bpe = dtype_bytes(dt)
+    micro = plan.microbatches if mode == "train" else 1
+
+    batch = shape.global_batch
+    q_len = 1 if mode == "decode" else shape.seq_len
+    kv_len = shape.seq_len
+    mb_batch = max(batch // micro, 1)          # global batch per microbatch
+    tokens = mb_batch * q_len                  # global tokens per microbatch
+    act_axes = plan.batch_axes + plan.seq_axes # divide token work
+    mm_axes = act_axes + plan.tp_axes          # divide matmul work
+    act_sh = dp * sp                           # shards of [tokens, d] acts
+    head_sh = dp * sp * tp                     # shards of head-split acts
+    weight_shards = max(tp * fsdp, 1)
+
+    prog = Program(name=f"{arch.name}/{shape.name}/{plan.describe()}")
+    pc = arch.param_counts()
+    prog.inputs["params"] = _ts((int(pc["total"]),), dt, shards=weight_shards)
+    prog.inputs["batch_tokens"] = _ts((mb_batch, q_len), "int32",
+                                      shards=act_sh, state=MemState.HOST)
+
+    setup = GenericBlock("setup (stage batch, embed)")
+    setup.children.append(IO("read", "batch_tokens",
+                             src=MemState.HOST, dst=MemState.HBM))
+    setup.children.append(CreateVar("embed_table",
+                                    _ts((arch.vocab_size, d), dt, weight_shards)))
+    setup.children.append(Compute("embedding", ("batch_tokens", "embed_table"),
+                                  "h", exec_type="DIST", shard_axes=act_axes))
+    prog.blocks.append(setup)
+
+    # ------------------------------------------------------------ sublayers
+    def emit_attention(ops: List, prefix: str, reps: int) -> None:
+        def emit(opcode, ins, out, axes, **attrs):
+            for r in range(reps):
+                ops.append(Compute(opcode, ins, f"{prefix}{out}_{r}",
+                                   exec_type="DIST", shard_axes=axes,
+                                   attrs=attrs))
+
+        ops.append(CreateVar(f"{prefix}x2d", _ts((tokens, d), dt, act_sh)))
+        if arch.mla is not None:
+            m = arch.mla
+            ops.append(CreateVar(f"{prefix}w_dq", _ts((d, m.q_lora_rank), dt, weight_shards)))
+            emit("matmul", (f"{prefix}x2d", f"{prefix}w_dq"), "cq", act_axes)
+            ops.append(CreateVar(f"{prefix}cq", _ts((tokens, m.q_lora_rank), dt, act_sh)))
+            ops.append(CreateVar(f"{prefix}w_uq",
+                                 _ts((m.q_lora_rank, nh * m.qk_head_dim), dt, weight_shards)))
+            emit("matmul", (f"{prefix}cq", f"{prefix}w_uq"), "q", mm_axes)
+            ops.append(CreateVar(f"{prefix}w_dkv", _ts((d, m.cache_dim), dt, weight_shards)))
+            emit("matmul", (f"{prefix}x2d", f"{prefix}w_dkv"), "ckv", act_axes)
+            if mode == "decode":
+                # absorbed MLA: q heads attend over the shared latent cache
+                # (MQA-like: 1 kv "head" of width cache_dim)
+                ops.append(CreateVar(f"{prefix}q4", _ts((mb_batch, nh, q_len, m.cache_dim), dt, head_sh)))
+                ops.append(CreateVar(f"{prefix}kc", _ts((mb_batch, 1, kv_len, m.cache_dim), dt, dp)))
+                ops.append(CreateVar(f"{prefix}vc", _ts((mb_batch, 1, kv_len, m.kv_lora_rank), dt, dp)))
+                emit("attention", (f"{prefix}q4", f"{prefix}kc", f"{prefix}vc"),
+                     "attn", mm_axes, causal=False)
+                v_dim = m.kv_lora_rank
+            else:
+                kv_tokens = mb_batch * kv_len
+                ops.append(CreateVar(f"{prefix}ckv_all", _ts((kv_tokens, m.kv_lora_rank), dt, act_sh)))
+                ops.append(CreateVar(f"{prefix}w_ukv",
+                                     _ts((m.kv_lora_rank, nh * (m.qk_nope_head_dim + m.v_head_dim)),
+                                         dt, weight_shards)))
+                emit("matmul", (f"{prefix}ckv_all", f"{prefix}w_ukv"), "kv", mm_axes)
+                ops.append(CreateVar(f"{prefix}q4", _ts((mb_batch, nh, q_len, m.qk_head_dim), dt, head_sh)))
+                ops.append(CreateVar(f"{prefix}k4", _ts((mb_batch, nh, kv_len, m.qk_head_dim), dt, head_sh)))
+                ops.append(CreateVar(f"{prefix}v4", _ts((mb_batch, nh, kv_len, m.v_head_dim), dt, head_sh)))
+                emit("attention", (f"{prefix}q4", f"{prefix}k4", f"{prefix}v4"),
+                     "attn", mm_axes, causal=True)
+                v_dim = m.v_head_dim
+            ops.append(CreateVar(f"{prefix}ao", _ts((tokens, nh * v_dim), dt, head_sh)))
+            ops.append(CreateVar(f"{prefix}w_o", _ts((nh * v_dim, d), dt, weight_shards)))
+            emit("matmul", (f"{prefix}ao", f"{prefix}w_o"), "proj", mm_axes)
+        else:
+            ops.append(CreateVar(f"{prefix}w_qkv",
+                                 _ts((d, (nh + 2 * nkv) * hd), dt, weight_shards)))
+            emit("matmul", (f"{prefix}x2d", f"{prefix}w_qkv"), "qkv", mm_axes)
+            window = arch.layer_window(0, kv_len) if arch.window_pattern else None
+            ops.append(CreateVar(f"{prefix}q4", _ts((mb_batch, nh, q_len, hd), dt, head_sh)))
+            kv_sh = dp * min(tp, nkv) if tp > 1 else dp
+            ops.append(CreateVar(f"{prefix}k4", _ts((mb_batch, nkv, kv_len, hd), dt, kv_sh)))
+            ops.append(CreateVar(f"{prefix}v4", _ts((mb_batch, nkv, kv_len, hd), dt, kv_sh)))
+            emit("attention", (f"{prefix}q4", f"{prefix}k4", f"{prefix}v4"),
+                 "attn", mm_axes, causal=(mode != "decode"), window=window)
+            ops.append(CreateVar(f"{prefix}ao", _ts((tokens, nh * hd), dt, head_sh)))
+            ops.append(CreateVar(f"{prefix}w_o", _ts((nh * hd, d), dt, weight_shards)))
+            emit("matmul", (f"{prefix}ao", f"{prefix}w_o"), "proj", mm_axes)
+        if tp > 1:
+            # TP output reduction (Megatron g-op): payload = local act slice
+            ops.append(Collective("all_reduce", f"{prefix}proj_0", plan.tp_axes,
+                                  bytes_override=tokens * d * bpe / act_sh))
+        ops.append(CreateVar(f"{prefix}hn", _ts((tokens, d), dt, act_sh)))
+        for r in range(reps):
+            ops.append(Compute("layernorm", (f"{prefix}hn",), f"{prefix}n_{r}",
+                               exec_type="DIST", shard_axes=act_axes))
+
+    def emit_ffn(ops: List, prefix: str, reps: int) -> None:
+        def emit(opcode, ins, out, axes, **attrs):
+            for r in range(reps):
+                ops.append(Compute(opcode, ins, f"{prefix}{out}_{r}",
+                                   exec_type="DIST", shard_axes=axes,
+                                   attrs=attrs))
+
+        if f"{prefix}x2d" not in [c.name for c in ops if isinstance(c, CreateVar)]:
+            ops.append(CreateVar(f"{prefix}x2d", _ts((tokens, d), dt, act_sh)))
+        if arch.moe is not None:
+            mcfg = arch.moe
+            ops.append(CreateVar(f"{prefix}w_router", _ts((d, mcfg.n_experts), dt, 1)))
+            emit("matmul", (f"{prefix}x2d", f"{prefix}w_router"), "route", act_axes)
+            if ep > 1:
+                a2a = tokens * d * bpe * mcfg.top_k / (act_sh * max(tp, 1))
+                ops.append(Collective("all_to_all", f"{prefix}x2d", plan.ep_axes,
+                                      bytes_override=a2a))
+            ops.append(CreateVar(f"{prefix}w_up",
+                                 _ts((mcfg.n_experts, d, mcfg.d_ff_expert), dt,
+                                     max(ep * tp, 1) * max(fsdp, 1))))
+            emit("moe_ffn", (f"{prefix}x2d", f"{prefix}w_up"), "moe",
+                 act_axes + plan.ep_axes + plan.tp_axes,
+                 top_k=mcfg.top_k, gated=arch.gated_mlp)
+            if mcfg.n_shared_experts:
+                ops.append(CreateVar(f"{prefix}w_sh",
+                                     _ts((d, (3 if arch.gated_mlp else 2)
+                                          * mcfg.n_shared_experts * mcfg.d_ff_expert),
+                                         dt, weight_shards)))
+                emit("matmul", (f"{prefix}x2d", f"{prefix}w_sh"), "shex", mm_axes)
+            if ep > 1:
+                a2a = tokens * d * bpe * mcfg.top_k / (act_sh * max(tp, 1))
+                ops.append(Collective("all_to_all", f"{prefix}moe_0", plan.ep_axes,
+                                      bytes_override=a2a))
+        elif arch.d_ff:
+            width = (3 if arch.gated_mlp else 2) * arch.d_ff
+            ops.append(CreateVar(f"{prefix}w_ff", _ts((d, width), dt, weight_shards)))
+            emit("matmul", (f"{prefix}x2d", f"{prefix}w_ff"), "ffn", mm_axes)
+            ops.append(CreateVar(f"{prefix}ffh", _ts((tokens, arch.d_ff), dt, head_sh)))
+            emit("silu" if arch.gated_mlp else "gelu", (f"{prefix}ffh",), "act",
+                 mm_axes)
+            ops.append(CreateVar(f"{prefix}w_down", _ts((arch.d_ff, d), dt, weight_shards)))
+            emit("matmul", (f"{prefix}ffh", f"{prefix}w_down"), "ffo", mm_axes)
+            if tp > 1:
+                ops.append(Collective("all_reduce", f"{prefix}ffo_0", plan.tp_axes,
+                                      bytes_override=tokens * d * bpe / act_sh))
+
+    def emit_ssm(ops: List, prefix: str, reps: int) -> None:
+        def emit(opcode, ins, out, axes, **attrs):
+            for r in range(reps):
+                ops.append(Compute(opcode, ins, f"{prefix}{out}_{r}",
+                                   exec_type="DIST", shard_axes=axes,
+                                   attrs=attrs))
+
+        s = arch.ssm
+        di = s.d_inner(d)
+        ops.append(CreateVar(f"{prefix}x2d", _ts((tokens, d), dt, act_sh)))
+        ops.append(CreateVar(f"{prefix}w_in",
+                             _ts((d, 2 * di + 2 * s.n_groups * s.state_size
+                                  + s.n_heads(d)), dt, weight_shards)))
+        emit("matmul", (f"{prefix}x2d", f"{prefix}w_in"), "xin", mm_axes)
+        ops.append(CreateVar(f"{prefix}x4",
+                             _ts((mb_batch, q_len, s.n_heads(d), s.head_dim), dt, head_sh)))
+        # decode: single-step state update (memory bound), else chunked scan
+        chunk = 1 if mode == "decode" else s.chunk_size
+        emit("ssd_scan", (f"{prefix}x4",), "ssd", mm_axes,
+             state=s.state_size, chunk=chunk)
+        ops.append(CreateVar(f"{prefix}xdi", _ts((tokens, di), dt, head_sh)))
+        ops.append(CreateVar(f"{prefix}w_out", _ts((di, d), dt, weight_shards)))
+        emit("matmul", (f"{prefix}xdi", f"{prefix}w_out"), "out", mm_axes)
+        if tp > 1:
+            ops.append(Collective("all_reduce", f"{prefix}out_0", plan.tp_axes,
+                                  bytes_override=tokens * d * bpe / act_sh))
+
+    def layer_body(prefix: str, backward: bool, kind: str) -> List:
+        """kind: 'attn+ffn' | 'ssm' | 'attn-shared'."""
+        ops: List = []
+        reps = 2 if backward else 1           # dgrad + wgrad ~= 2x fwd
+        if kind == "ssm":
+            emit_ssm(ops, prefix, reps)
+        else:
+            emit_attention(ops, prefix, reps)
+            emit_ffn(ops, prefix, reps)
+        if fsdp > 1:
+            # gathered params are reused across microbatches (prefetch +
+            # persist for the step), so amortize the payload by micro
+            per_layer = (pc["layers"] / arch.n_layers * bpe / weight_shards
+                         / max(micro, 1))
+            ops.insert(0, Collective("all_gather", "params", plan.fsdp_axes,
+                                     bytes_override=per_layer))
+            if backward:
+                ops.append(Collective("reduce_scatter", "params", plan.fsdp_axes,
+                                      bytes_override=per_layer * fsdp))
+        return ops
+
+    main_kind = "ssm" if arch.family in ("ssm", "hybrid") else "attn+ffn"
+    body_blocks: List = []
+    fwd = ForBlock(f"fwd layers x{arch.n_layers}", arch.n_layers,
+                   body=layer_body("L_", False, main_kind))
+    body_blocks.append(fwd)
+    if arch.hybrid is not None:
+        n_app = arch.n_layers // arch.hybrid.attn_every
+        body_blocks.append(ForBlock(f"shared attn blocks x{n_app}", n_app,
+                                    body=layer_body("A_", False, "attn-shared")))
+    if arch.enc_dec is not None:
+        # encoder runs once per step over frontend_seq frames
+        enc_tokens = mb_batch * arch.enc_dec.encoder_seq
+        body_blocks.append(ForBlock(
+            f"encoder layers x{arch.enc_dec.n_encoder_layers}",
+            arch.enc_dec.n_encoder_layers,
+            body=[Compute("matmul", ("enc_x", "enc_w"), f"enc_{i}",
+                          exec_type="DIST", shard_axes=mm_axes)
+                  for i in range(2)]))
+        prog.inputs["enc_x"] = _ts((enc_tokens, d), dt, act_sh)
+        prog.inputs["enc_w"] = _ts((d, 4 * d + (3 if arch.gated_mlp else 2) * arch.d_ff),
+                                   dt, weight_shards)
+
+    if mode == "train":
+        recompute = {"none": 0.0, "selective": 0.35, "full": 1.0}[plan.remat]
+        bwd_body = layer_body("B_", True, main_kind)
+        if recompute > 0:
+            extra = layer_body("R_", False, main_kind)
+            bwd_body = extra[: int(len(extra) * recompute)] + bwd_body
+        body_blocks.append(ForBlock(f"bwd layers x{arch.n_layers}",
+                                    arch.n_layers, body=bwd_body))
+        if arch.hybrid is not None:
+            n_app = arch.n_layers // arch.hybrid.attn_every
+            body_blocks.append(ForBlock(f"bwd shared attn x{n_app}", n_app,
+                                        body=layer_body("AB_", True, "attn-shared")))
+
+        tail = GenericBlock("loss + grad reduce + update")
+        tail.children.append(CreateVar("logits",
+                                       _ts((tokens, arch.vocab_size), "float32", head_sh)))
+        tail.children.append(Compute("cross_entropy", ("logits",), "loss",
+                                     exec_type="DIST", shard_axes=mm_axes))
+        grad_bytes = pc["total"] * dtype_bytes(plan.grad_reduce_dtype) / weight_shards
+        if arch.moe is not None and ep > 1:
+            grad_bytes /= ep
+        reduce_axes = tuple(a for a in plan.batch_axes if a not in plan.fsdp_axes)
+        if plan.degree(cc, reduce_axes) > 1 and fsdp == 1:
+            tail.children.append(Collective("all_reduce", "params", reduce_axes,
+                                            bytes_override=grad_bytes))
+        elif fsdp > 1 and plan.degree(cc, reduce_axes) > 1:
+            tail.children.append(Collective("reduce_scatter", "params", reduce_axes,
+                                            bytes_override=grad_bytes))
+        upd_shards = weight_shards * (dp if fsdp > 1 else 1)
+        tail.children.append(Compute("adamw_update", ("params",), "params2",
+                                     exec_type="DIST",
+                                     shard_axes=plan.fsdp_axes + plan.tp_axes
+                                     + plan.batch_axes))
+        if micro > 1:
+            prog.blocks.append(ForBlock(f"microbatches x{micro}", micro,
+                                        body=body_blocks))
+        else:
+            prog.blocks.extend(body_blocks)
+        prog.blocks.append(tail)
+    else:
+        prog.blocks.extend(body_blocks)
+        head = GenericBlock("lm head")
+        head.children.append(CreateVar("hout", _ts((tokens, d), dt, act_sh)))
+        head.children.append(CreateVar("w_head", _ts((d, arch.vocab_size), dt, weight_shards)))
+        head.children.append(Compute("matmul", ("hout", "w_head"), "logits",
+                                     exec_type="DIST", shard_axes=mm_axes))
+        if tp > 1:
+            head.children.append(Collective("all_gather", "logits", plan.tp_axes,
+                                            bytes_override=tokens * arch.vocab_size
+                                            * bpe / (act_sh * tp)))
+        prog.blocks.append(head)
+    return prog
+
+
+# ---------------------------------------------------------------------------
+# Memory estimate (white-box HBM budget check, pre-compile)
+# ---------------------------------------------------------------------------
+
+
+def estimate_hbm(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
+                 cc: ClusterConfig) -> float:
+    pc = arch.param_counts()
+    mb0 = max(shape.global_batch
+              // (plan.microbatches if shape.mode == "train" else 1), 1)
+    dp = plan.eff_degree(cc, plan.batch_axes, mb0)
+    tp = plan.degree(cc, plan.tp_axes)
+    fsdp = plan.degree(cc, plan.fsdp_axes)
+    ep = plan.degree(cc, plan.ep_axes)
+    sp = plan.eff_degree(cc, plan.seq_axes,
+                         1 if shape.mode == "decode" else shape.seq_len)
+    bpe = dtype_bytes(arch.dtype)
+    wsh = max(tp * fsdp * (ep if arch.moe else 1), 1)
+    params = pc["total"] * bpe / wsh
+    mem = params
+    if shape.mode == "train":
+        # adam m,v (fp32) + fp32 transients during the update, sharded like
+        # params (+dp if fsdp); calibrated against compiled memory_analysis
+        opt_shards = wsh * (dp if (fsdp > 1 or plan.zero1) else 1)
+        mem += 4 * pc["total"] * 4 / max(opt_shards, wsh)
+        # gradients (fp32 accumulator when microbatching, else grad dtype)
+        gb = 4 if plan.microbatches > 1 else 4
+        mem += pc["total"] * gb / wsh
+        # activations saved for backward, per token per layer:
+        #   replicated residual-stream parts (~d) + head/ff-sharded parts
+        d = arch.d_model
+        hd_total = max(arch.n_heads, 1) * arch.head_dim_
+        if arch.moe is not None:
+            ff_eff = arch.moe.top_k * arch.moe.d_ff_expert \
+                + arch.moe.n_shared_experts * arch.moe.d_ff_expert
+        elif arch.family in ("ssm", "hybrid"):
+            ff_eff = arch.ssm.expand * d
+        else:
+            ff_eff = arch.d_ff
+        fac = {"none": (5.0, 3.0), "selective": (2.0, 1.0),
+               "full": (2.0, 0.0)}[plan.remat]
+        per_tok = (fac[0] * d * bpe
+                   + fac[1] * (hd_total + ff_eff) * bpe / max(tp, 1))
+        tokens_dev = shape.tokens / max(dp * sp * plan.microbatches, 1)
+        mem += tokens_dev * arch.n_layers * per_tok
+        # chunked-CE head: [ce_chunk, vocab] fp32 (+bwd copy), tp-sharded
+        mem += 2 * 2048 * arch.vocab_size * 4 / max(tp, 1)
+    else:
+        tokens_dev = shape.tokens / max(dp * sp, 1)
+        if shape.mode == "decode":
+            # KV cache dominates
+            if arch.mla:
+                cache = shape.global_batch / dp * shape.seq_len * arch.mla.cache_dim
+            elif arch.family == "ssm":
+                s = arch.ssm
+                cache = shape.global_batch / dp * s.n_heads(arch.d_model) * s.head_dim * s.state_size
+            elif arch.family == "hybrid":
+                s = arch.ssm
+                ssm_state = shape.global_batch / dp * s.n_heads(arch.d_model) * s.head_dim * s.state_size
+                n_attn = arch.n_layers // arch.hybrid.attn_every
+                kv = (shape.global_batch / dp * shape.seq_len
+                      * 2 * arch.n_kv_heads * arch.head_dim_ / max(tp, 1)) * n_attn / arch.n_layers
+                cache = ssm_state + kv
+            else:
+                kv_len_eff = shape.seq_len
+                if arch.window_pattern:
+                    # local layers cache only the window
+                    n_pat = len(arch.window_pattern)
+                    w_sum = sum(min(w, shape.seq_len) if w else shape.seq_len
+                                for w in arch.window_pattern) / n_pat
+                    kv_len_eff = w_sum
+                cache = (shape.global_batch / dp * kv_len_eff
+                         * 2 * arch.n_kv_heads * arch.head_dim_ / max(tp, 1))
+            mem += cache * arch.n_layers * bpe
+            live_tokens = shape.global_batch / max(dp, 1)   # one token/seq
+            mem += live_tokens * arch.d_model * bpe * 4
+            mem += live_tokens * arch.vocab_size * 4 / max(tp, 1)  # logits
+        else:
+            mem += tokens_dev * arch.d_model * bpe * 8 / max(tp, 1)
+    return mem
+
+
+# ---------------------------------------------------------------------------
+# Enumeration + selection
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PlanDecision:
+    plan: ShardingPlan
+    cost: CostedProgram
+    hbm_est: float
+    feasible: bool
+
+    @property
+    def time(self) -> float:
+        return self.cost.total
+
+
+def enumerate_plans(arch: ArchConfig, shape: ShapeConfig,
+                    cc: ClusterConfig) -> List[ShardingPlan]:
+    """Candidate sharding plans for the fixed physical mesh of ``cc``."""
+    axes = cc.mesh_axes
+    has_model = "model" in axes
+    has_pod = "pod" in axes
+    batch_base: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axes)
+    plans: List[ShardingPlan] = []
+
+    remats = ["none", "selective", "full"] if shape.mode == "train" else ["none"]
+    micro_opts = [1, 2, 4, 8] if shape.mode == "train" else [1]
+    gdtypes = ["float32", "bfloat16"] if shape.mode == "train" else ["float32"]
+
+    model_roles: List[Dict] = [dict(name="dp+tp", tp=("model",))]
+    model_roles.append(dict(name="fsdp", fsdp=("model",)))
+    model_roles.append(dict(name="dp-pure", batch_extra=("model",)))
+    if arch.moe is not None and has_model:
+        model_roles.append(dict(name="dp+ep", ep=("model",)))
+        model_roles.append(dict(name="dp+ep+tp", ep=("model",), tp=("model",)))
+    if shape.mode == "prefill":
+        model_roles.append(dict(name="dp+seq", seq=("model",)))
+
+    for role in model_roles:
+        if not has_model and role["name"] != "dp+tp":
+            continue
+        tp_axes = role.get("tp", ()) if has_model else ()
+        for remat, micro, gd in itertools.product(remats, micro_opts, gdtypes):
+            if micro > 1 and shape.global_batch // (
+                    _deg(cc, batch_base + role.get("batch_extra", ())) * micro) < 1:
+                continue
+            plans.append(ShardingPlan(
+                name=role["name"],
+                batch_axes=batch_base + role.get("batch_extra", ()),
+                tp_axes=tp_axes,
+                fsdp_axes=role.get("fsdp", ()),
+                ep_axes=role.get("ep", ()),
+                seq_axes=role.get("seq", ()),
+                remat=remat, microbatches=micro, grad_reduce_dtype=gd))
+    # dedupe
+    seen, out = set(), []
+    for p in plans:
+        key = dataclasses.astuple(p)
+        if key not in seen:
+            seen.add(key)
+            out.append(p)
+    return out
+
+
+def _deg(cc: ClusterConfig, axes: Tuple[str, ...]) -> int:
+    d = 1
+    for a in axes:
+        d *= cc.axis_size(a)
+    return d
+
+
+def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
+                top_k: int = 5,
+                candidates: Optional[Sequence[ShardingPlan]] = None,
+                ) -> List[PlanDecision]:
+    """Rank candidate plans by C(P, cc); infeasible (OOM) plans sink."""
+    cands = list(candidates) if candidates is not None else enumerate_plans(arch, shape, cc)
+    decisions: List[PlanDecision] = []
+    for p in cands:
+        cc_p = cc.with_overlap(0.7 if p.overlap else 0.0)
+        prog = build_step_program(arch, shape, p, cc_p)
+        costed = estimate(prog, cc_p)
+        hbm = estimate_hbm(arch, shape, p, cc_p)
+        decisions.append(PlanDecision(p, costed, hbm, hbm <= cc.hbm_budget))
+    decisions.sort(key=lambda d: (not d.feasible, d.time))
+    return decisions[:top_k]

@@ -1,0 +1,157 @@
+"""Live-variable tracking (paper §3.2, "Tracking Live Variable States").
+
+A runtime plan is costed in a single pass; while walking it we maintain a
+symbol table of live variables: their *size information* (shape, dtype,
+sparsity — the paper's m, n, s) and their *memory state* (the paper's
+HDFS-vs-in-memory distinction, generalized to the TPU storage hierarchy).
+
+The state machine is the heart of "IO is paid exactly once": persistent
+inputs start on DISK/HOST; the first instruction that consumes them pays the
+transfer and flips the state to HBM; later consumers read for free (HBM
+traffic is part of each op's compute-side roofline, not a separate IO term).
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+import math
+from typing import Dict, Optional, Tuple
+
+from repro.core.cluster import dtype_bytes
+
+
+class MemState(enum.Enum):
+    DISK = "disk"      # persistent store (checkpoint / dataset shard)  ~ HDFS
+    HOST = "host"      # host DRAM (staged batch, spilled tensor)
+    HBM = "hbm"        # device memory — "in-memory" in the paper's sense
+
+
+@dataclasses.dataclass
+class TensorStat:
+    """Size information for one matrix/tensor variable.
+
+    ``sparsity`` is the paper's s = nnz/(m*n).  Dense tensors use 1.0.  For
+    MoE routed activations we reuse it as the expected expert-load fraction,
+    which makes expected-size math identical to the paper's sparse-size math.
+
+    ``shards`` is the number of devices the tensor is partitioned over —
+    per-device bytes are total/shards (the paper divides by the degree of
+    parallelism at instruction level; we track it on the variable so hybrid
+    plans can mix replicated and sharded intermediates).
+    """
+
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+    sparsity: float = 1.0
+    state: MemState = MemState.HBM
+    shards: int = 1
+
+    # -- size estimates (paper's M-hat and M-hat') ------------------------
+    @property
+    def cells(self) -> int:
+        c = self.__dict__.get("_cells")
+        if c is None:
+            c = int(math.prod(self.shape)) if self.shape else 1
+            self.__dict__["_cells"] = c
+        return c
+
+    @property
+    def nnz(self) -> float:
+        return self.cells * self.sparsity
+
+    def bytes_in_memory(self) -> float:
+        """M-hat: in-memory size (dense layout on device)."""
+        return self.cells * dtype_bytes(self.dtype)
+
+    def bytes_serialized(self) -> float:
+        """M-hat': serialized size (sparse-aware, e.g. checkpoint on disk)."""
+        if self.sparsity >= 0.4:  # dense format cheaper beyond ~40% like SystemML
+            return self.cells * dtype_bytes(self.dtype)
+        # CSR-ish: value + column index per nnz + row pointers
+        return self.nnz * (dtype_bytes(self.dtype) + 4) + 4 * (self.shape[0] if self.shape else 1)
+
+    def bytes_per_device(self) -> float:
+        return self.bytes_in_memory() / max(1, self.shards)
+
+    def with_state(self, state: MemState) -> "TensorStat":
+        return dataclasses.replace(self, state=state)
+
+
+class SymbolTable:
+    """Name -> TensorStat with the paper's createvar/cpvar/rmvar semantics."""
+
+    def __init__(self) -> None:
+        self._vars: Dict[str, TensorStat] = {}
+        self._hbm_bytes = 0.0          # incremental live-HBM accumulator
+
+    def _acct(self, st: Optional[TensorStat], sign: float) -> None:
+        if st is not None and st.state == MemState.HBM:
+            self._hbm_bytes += sign * st.bytes_per_device()
+
+    # --- instruction analogues ---
+    def createvar(self, name: str, stat: TensorStat) -> None:
+        self._acct(self._vars.get(name), -1.0)
+        self._vars[name] = stat
+        self._acct(stat, +1.0)
+
+    def cpvar(self, src: str, dst: str) -> None:
+        if src in self._vars:
+            self.createvar(dst, dataclasses.replace(self._vars[src]))
+
+    def rmvar(self, *names: str) -> None:
+        for n in names:
+            self._acct(self._vars.get(n), -1.0)
+            self._vars.pop(n, None)
+
+    # --- queries/updates used by the cost estimator ---
+    def get(self, name: str) -> Optional[TensorStat]:
+        return self._vars.get(name)
+
+    def __contains__(self, name: str) -> bool:
+        return name in self._vars
+
+    def __len__(self) -> int:
+        return len(self._vars)
+
+    def names(self):
+        return list(self._vars)
+
+    def state_of(self, name: str) -> Optional[MemState]:
+        st = self._vars.get(name)
+        return st.state if st else None
+
+    def touch_hbm(self, *names: str) -> None:
+        """Mark variables device-resident (consumers after the first read free)."""
+        for n in names:
+            st = self._vars.get(n)
+            if st is not None and st.state != MemState.HBM:
+                self._vars[n] = st.with_state(MemState.HBM)
+                self._hbm_bytes += st.bytes_per_device()
+
+    def set_state(self, name: str, state: MemState) -> None:
+        st = self._vars.get(name)
+        if st is not None:
+            self._acct(st, -1.0)
+            new = st.with_state(state)
+            self._vars[name] = new
+            self._acct(new, +1.0)
+
+    def live_hbm_bytes(self, per_device: bool = True) -> float:
+        if per_device:
+            return self._hbm_bytes
+        return sum(st.bytes_in_memory() for st in self._vars.values()
+                   if st.state == MemState.HBM)
+
+    def snapshot(self) -> Dict[str, TensorStat]:
+        return {k: dataclasses.replace(v) for k, v in self._vars.items()}
+
+    def restore(self, snap: Dict[str, TensorStat]) -> None:
+        self._vars = {k: dataclasses.replace(v) for k, v in snap.items()}
+        self._hbm_bytes = sum(st.bytes_per_device()
+                              for st in self._vars.values()
+                              if st.state == MemState.HBM)
+
+    def copy(self) -> "SymbolTable":
+        t = SymbolTable()
+        t.restore(self._vars)
+        return t

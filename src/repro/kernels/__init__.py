@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  * tsmm            — the paper's transpose-self matmul (half-compute Gram)
+  * flash_attention — blockwise online-softmax attention (prefill hot-spot)
+  * ssd_scan        — Mamba2 SSD chunked scan (ssm/hybrid hot-spot)
+
+Each has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py;
+validated in interpret mode on CPU, targeted at TPU via BlockSpec tiling.
+"""
+from repro.kernels import ops, ref

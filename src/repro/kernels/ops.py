@@ -1,0 +1,64 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (CPU container); on TPU pass
+``interpret=False`` (or set REPRO_PALLAS_COMPILE=1).
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+from repro.kernels import tsmm as _tsmm
+
+_INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def tsmm(x: jax.Array, *, bm: int = 512, bn: int = 256,
+         interpret: Optional[bool] = None) -> jax.Array:
+    """Symmetric Gram matrix X^T X via the half-compute Pallas kernel.
+
+    The kernel writes only upper-triangular tiles; the strict lower
+    triangle is mirrored here (diagonal blocks are internally symmetric).
+    """
+    up = _tsmm.tsmm_upper(x, bm=bm, bn=bn,
+                          interpret=_INTERPRET if interpret is None else interpret)
+    upper = jnp.triu(up)
+    return upper + jnp.triu(up, 1).T
+
+
+def flash_attention(q, k, v, *, causal: bool = True,
+                    window: Optional[int] = None,
+                    scale: Optional[float] = None,
+                    bq: int = 512, bk: int = 512,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    return _fa.flash_attention(
+        q, k, v, causal=causal, window=window, scale=scale, bq=bq, bk=bk,
+        interpret=_INTERPRET if interpret is None else interpret)
+
+
+def ssd_scan(x, dt, A_log, B, C, D, *, chunk: int = 256,
+             interpret: Optional[bool] = None) -> Tuple[jax.Array, jax.Array]:
+    """Mamba2 SSD scan via the Pallas kernel (matches models.mamba API).
+
+    x: [B,S,H,P]; dt: [B,S,H]; A_log: [H]; B/C: [B,S,G,N]; D: [H].
+    Returns (y [B,S,H,P], final_state [B,H,P,N]).
+    """
+    b, s, h, p = x.shape
+    g, n = B.shape[2], B.shape[3]
+    rep = h // g
+    dt32 = jnp.maximum(dt.astype(jnp.float32), 1e-6)
+    a = -jnp.exp(A_log.astype(jnp.float32))
+    log_a = dt32 * a                                   # [B,S,H]
+    xbar = x * dt32[..., None].astype(x.dtype)
+    bmat = jnp.repeat(B, rep, axis=2).reshape(b, s, h, n)
+    cmat = jnp.repeat(C, rep, axis=2).reshape(b, s, h, n)
+    y, state = _ssd.ssd_scan_kernel(
+        xbar, log_a, bmat, cmat, chunk=chunk,
+        interpret=_INTERPRET if interpret is None else interpret)
+    y = y + x * D.astype(x.dtype)[None, None, :, None]
+    return y, state

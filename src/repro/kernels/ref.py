@@ -1,0 +1,28 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose reference)."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import attention_dense
+from repro.models.mamba import ssd_chunked
+
+
+def tsmm_ref(x: jax.Array) -> jax.Array:
+    """Full Gram matrix X^T X."""
+    return jnp.einsum("mk,mn->kn", x.astype(jnp.float32),
+                      x.astype(jnp.float32)).astype(x.dtype)
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None,
+                        scale: Optional[float] = None) -> jax.Array:
+    return attention_dense(q, k, v, causal=causal, window=window, scale=scale)
+
+
+def ssd_scan_ref(x, dt, A_log, B, C, D, *, chunk: int = 256,
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked-SSD oracle (validated against the sequential recurrence)."""
+    return ssd_chunked(x, dt, A_log, B, C, D, chunk=chunk)

@@ -1,0 +1,339 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves (without hardware) that the distribution config
+is coherent: jit(train_step|serve_step).lower(specs).compile() succeeds on
+the 16x16 single-pod mesh AND the 2x16x16 multi-pod mesh, then records
+
+  * compiled.memory_analysis()  — fits-in-HBM evidence,
+  * compiled.cost_analysis()    — per-device FLOPs / bytes,
+  * the generated collectives (parsed from optimized HLO),
+  * the three roofline terms (§Roofline),
+
+into ``benchmarks/artifacts/dryrun_<arch>_<shape>_<mesh>[_<tag>].json``.
+Cells are cached — delete the JSON or pass --force to re-run.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen1.5-0.5b \
+      --shape train_4k --mesh single
+  PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+  ... --plan '{"remat": "full", "microbatches": 4}'   (hillclimb override)
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from functools import partial
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.core import hlo_cost
+from repro.core.cluster import multi_pod_config, single_pod_config
+from repro.core.planner import ShardingPlan, choose_plan
+from repro.launch import shardings as S
+from repro.launch.mesh import make_production_mesh
+from repro.models.model import build_model
+from repro.optim import adamw
+from repro.runtime.train_loop import make_train_step
+
+ARTIFACT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                            "benchmarks", "artifacts")
+
+
+def _specs_with_shardings(shapes_tree: Any, shardings_tree: Any) -> Any:
+    return jax.tree.map(
+        lambda sds, sh: jax.ShapeDtypeStruct(sds.shape, sds.dtype, sharding=sh),
+        shapes_tree, shardings_tree)
+
+
+def input_specs(arch_id: str, shape_id: str, mesh, plan: ShardingPlan
+                ) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of the cell."""
+    arch = get_config(arch_id)
+    shape = SHAPES[shape_id]
+    model = build_model(arch)
+    out: Dict[str, Any] = {}
+
+    pshapes = model.init_shapes()
+    psh = S.params_shardings(mesh, plan, pshapes)
+    out["params"] = _specs_with_shardings(pshapes, psh)
+
+    if shape.mode == "train":
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        fshape = model.frontend_shape(shape.global_batch)
+        if fshape is not None:
+            batch_shapes["frontend"] = jax.ShapeDtypeStruct(fshape, jnp.float32)
+        bsh = S.batch_shardings(mesh, plan, batch_shapes)
+        out["batch"] = _specs_with_shardings(batch_shapes, bsh)
+        opt_shapes = jax.eval_shape(
+            partial(adamw.init, adamw.AdamWConfig()), pshapes)
+        osh = S.opt_state_shardings(mesh, plan, psh, opt_shapes)
+        out["opt_state"] = _specs_with_shardings(opt_shapes, osh)
+    elif shape.mode == "prefill":
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        fshape = model.frontend_shape(shape.global_batch)
+        if fshape is not None:
+            batch_shapes["frontend"] = jax.ShapeDtypeStruct(fshape, jnp.float32)
+        bsh = S.batch_shardings(mesh, plan, batch_shapes)
+        out["batch"] = _specs_with_shardings(batch_shapes, bsh)
+        cache_shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+        csh = S.cache_shardings(mesh, plan, cache_shapes)
+        out["cache"] = _specs_with_shardings(cache_shapes, csh)
+    else:  # decode
+        tok_shapes = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+        out["token"] = jax.ShapeDtypeStruct(
+            tok_shapes.shape, tok_shapes.dtype,
+            sharding=S.batch_shardings(mesh, plan, {"t": tok_shapes})["t"])
+        cache_shapes = model.cache_shapes(shape.global_batch, shape.seq_len)
+        csh = S.cache_shardings(mesh, plan, cache_shapes)
+        out["cache"] = _specs_with_shardings(cache_shapes, csh)
+    return out
+
+
+def build_step_fn(arch_id: str, shape_id: str, plan: ShardingPlan):
+    arch = get_config(arch_id)
+    shape = SHAPES[shape_id]
+    model = build_model(arch)
+    if shape.mode == "train":
+        opt_cfg = adamw.AdamWConfig()
+        step = make_train_step(model, opt_cfg, plan)
+
+        def train_step(params, opt_state, batch):
+            from repro.optim.compress import EFState
+            ef = EFState(residual=jax.tree.map(
+                lambda p: jnp.zeros((), jnp.float32), params))
+            p2, o2, _, metrics = step(params, opt_state, ef, batch)
+            return p2, o2, metrics["loss"]
+        return train_step, ("params", "opt_state", "batch"), (0, 1)
+    if shape.mode == "prefill":
+        def prefill_step(params, batch, cache):
+            return model.prefill(params, batch["tokens"], cache,
+                                 batch.get("frontend"))
+        return prefill_step, ("params", "batch", "cache"), (2,)
+
+    def serve_step(params, token, cache):
+        return model.decode_step(params, token, cache)
+    return serve_step, ("params", "token", "cache"), (2,)
+
+
+def run_cell(arch_id: str, shape_id: str, mesh_kind: str, *,
+             plan_override: Optional[Dict] = None, tag: str = "",
+             force: bool = False, artifact_dir: str = ARTIFACT_DIR,
+             components_only: bool = False) -> Dict[str, Any]:
+    os.makedirs(artifact_dir, exist_ok=True)
+    name = f"dryrun_{arch_id}_{shape_id}_{mesh_kind}{('_' + tag) if tag else ''}"
+    path = os.path.join(artifact_dir, name.replace("/", "_") + ".json")
+    if os.path.exists(path) and not force and not components_only:
+        with open(path) as f:
+            return json.load(f)
+    if components_only and os.path.exists(path):
+        with open(path) as f:
+            record = json.load(f)
+        if record["status"] != "ok":
+            return record
+        if (not force
+                and record.get("roofline", {}).get("source") == "components"
+                and "error" not in (record.get("roofline_components") or {})):
+            return record                      # already componentized
+        return _add_components(record, path, plan_override)
+
+    arch = get_config(arch_id)
+    shape = SHAPES[shape_id]
+    ok, why = shape_applicable(arch, shape)
+    record: Dict[str, Any] = {
+        "arch": arch_id, "shape": shape_id, "mesh": mesh_kind, "tag": tag,
+        "status": "skip" if not ok else "pending", "why": why,
+    }
+    if not ok:
+        with open(path, "w") as f:
+            json.dump(record, f, indent=1)
+        return record
+
+    multi = mesh_kind == "multi"
+    cc = multi_pod_config() if multi else single_pod_config()
+    mesh = make_production_mesh(multi_pod=multi)
+
+    # plan: analytical cost-based selection (+ hillclimb overrides)
+    decision = choose_plan(arch, shape, cc, top_k=1)[0]
+    plan = decision.plan
+    if plan_override:
+        plan = dataclasses.replace(plan, **plan_override)
+    record["plan"] = plan.describe()
+    record["plan_fields"] = {k: list(v) if isinstance(v, tuple) else v
+                             for k, v in dataclasses.asdict(plan).items()}
+    record["analytical_time_s"] = decision.time
+    record["analytical_hbm_gb"] = decision.hbm_est / 1e9
+
+    t0 = time.perf_counter()
+    try:
+        step_fn, arg_names, donate = build_step_fn(arch_id, shape_id, plan)
+        specs = input_specs(arch_id, shape_id, mesh, plan)
+        args = [specs[n] for n in arg_names]
+        jitted = jax.jit(step_fn, donate_argnums=donate)
+        with mesh:
+            lowered = jitted.lower(*args)
+            t_lower = time.perf_counter() - t0
+            t1 = time.perf_counter()
+            compiled = lowered.compile()
+            t_compile = time.perf_counter() - t1
+        cost = hlo_cost.from_compiled(name, compiled, mesh.devices.size)
+        ma = compiled.memory_analysis()
+        print(compiled.memory_analysis())
+        ca = compiled.cost_analysis()
+        # component-level costing (fixes while/scan flop undercount):
+        # cost each layer/tail executable, aggregate per program structure
+        try:
+            from repro.launch import component_cost as CC_
+            comps = CC_.component_costs(arch, shape, plan, mesh)
+            record["roofline_components"] = CC_.aggregate(comps, cc)
+        except Exception as ce:
+            record["roofline_components"] = {
+                "error": f"{type(ce).__name__}: {ce}"}
+        record.update({
+            "status": "ok",
+            "lower_s": t_lower, "compile_s": t_compile,
+            "memory_analysis": {
+                "argument_bytes": int(getattr(ma, "argument_size_in_bytes", 0)),
+                "output_bytes": int(getattr(ma, "output_size_in_bytes", 0)),
+                "temp_bytes": int(getattr(ma, "temp_size_in_bytes", 0)),
+                "peak_bytes": int(getattr(ma, "peak_memory_in_bytes", 0) or 0),
+                "alias_bytes": int(getattr(ma, "alias_size_in_bytes", 0)),
+            },
+            "cost_analysis": {k: float(v) for k, v in
+                              (ca[0] if isinstance(ca, (list, tuple)) else ca).items()
+                              if isinstance(v, (int, float)) and "utilization" not in k},
+            "compiled_cost": cost.to_json(),
+            "roofline": cost.roofline(cc),
+            "collectives_by_kind": cost.collective_bytes_by_kind(),
+        })
+        # model flops: 6*N*D (dense) / 6*N_active*D (MoE); serve: 2*N*D
+        pc = arch.param_counts()
+        n_active = pc["active"]
+        toks = shape.global_batch * (shape.seq_len if shape.mode != "decode" else 1)
+        mult = 6.0 if shape.mode == "train" else 2.0
+        record["model_flops"] = mult * n_active * toks
+        rc = record.get("roofline_components") or {}
+        if "flops_per_device" in rc:
+            record["roofline_entry_only"] = record["roofline"]
+            record["roofline"] = {
+                k: rc[k] for k in ("compute_s", "memory_s", "collective_s",
+                                   "dominant", "roofline_bound_s",
+                                   "flops_per_device", "bytes_per_device",
+                                   "collective_bytes_per_device")}
+            record["roofline"]["source"] = "components"
+            comp_total = rc["flops_per_device"] * mesh.devices.size
+            record["useful_flops_ratio"] = (record["model_flops"] / comp_total
+                                            if comp_total else None)
+        else:
+            hlo_total = cost.total_flops
+            record["useful_flops_ratio"] = (record["model_flops"] / hlo_total
+                                            if hlo_total else None)
+    except Exception as e:  # record failures — they are bugs to fix
+        record["status"] = "fail"
+        record["error"] = f"{type(e).__name__}: {e}"
+        record["traceback"] = traceback.format_exc()[-4000:]
+    record["wall_s"] = time.perf_counter() - t0
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def _add_components(record: Dict[str, Any], path: str,
+                    plan_override: Optional[Dict] = None) -> Dict[str, Any]:
+    """Augment an existing ok artifact with component-level roofline."""
+    from repro.launch import component_cost as CC_
+    arch = get_config(record["arch"])
+    shape = SHAPES[record["shape"]]
+    multi = record["mesh"] == "multi"
+    cc = multi_pod_config() if multi else single_pod_config()
+    mesh = make_production_mesh(multi_pod=multi)
+    pf = dict(record["plan_fields"])
+    for k in ("batch_axes", "tp_axes", "fsdp_axes", "ep_axes", "seq_axes"):
+        pf[k] = tuple(pf[k])
+    plan = ShardingPlan(**pf)
+    t0 = time.perf_counter()
+    try:
+        comps = CC_.component_costs(arch, shape, plan, mesh)
+        rc = CC_.aggregate(comps, cc)
+        record["roofline_components"] = rc
+        record["roofline_entry_only"] = record.get(
+            "roofline_entry_only", record["roofline"])
+        record["roofline"] = {
+            k: rc[k] for k in ("compute_s", "memory_s", "collective_s",
+                               "dominant", "roofline_bound_s",
+                               "flops_per_device", "bytes_per_device",
+                               "collective_bytes_per_device")}
+        record["roofline"]["source"] = "components"
+        comp_total = rc["flops_per_device"] * mesh.devices.size
+        if record.get("model_flops"):
+            record["useful_flops_ratio"] = record["model_flops"] / comp_total
+    except Exception as e:
+        record["roofline_components"] = {"error": f"{type(e).__name__}: {e}",
+                                         "traceback": traceback.format_exc()[-2000:]}
+    record["components_wall_s"] = time.perf_counter() - t0
+    with open(path, "w") as f:
+        json.dump(record, f, indent=1)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--plan", default=None,
+                    help="JSON dict of ShardingPlan field overrides")
+    ap.add_argument("--components-only", action="store_true",
+                    help="augment existing artifacts with component costing")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    override = None
+    if args.plan:
+        override = json.loads(args.plan)
+        for k in ("batch_axes", "tp_axes", "fsdp_axes", "ep_axes", "seq_axes"):
+            if k in override:
+                override[k] = tuple(override[k])
+
+    results = []
+    for a in archs:
+        for s in shapes:
+            for m in meshes:
+                r = run_cell(a, s, m, plan_override=override, tag=args.tag,
+                             force=args.force,
+                             components_only=args.components_only)
+                status = r["status"]
+                extra = ""
+                if status == "ok":
+                    rf = r["roofline"]
+                    src = rf.get("source", "entry")
+                    cerr = (r.get("roofline_components") or {}).get("error", "")
+                    extra = (f" dom={rf['dominant']} bound={rf['roofline_bound_s']*1e3:.2f}ms"
+                             f" src={src}{(' CERR:' + cerr[:60]) if cerr else ''}")
+                elif status == "fail":
+                    extra = " " + r["error"][:120]
+                print(f"[{status:4s}] {a} x {s} x {m}{extra}", flush=True)
+                results.append(r)
+    n_ok = sum(r["status"] == "ok" for r in results)
+    n_skip = sum(r["status"] == "skip" for r in results)
+    n_fail = sum(r["status"] == "fail" for r in results)
+    print(f"\ndry-run: {n_ok} ok, {n_skip} skipped (documented), {n_fail} FAILED")
+    if n_fail:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,93 @@
+"""Training driver: ``python -m repro.launch.train --arch <id> [...]``.
+
+Cost-model-driven by default (--autoplan): the planner enumerates sharding
+plans for the requested mesh, ranks them with C(P, cc), and the winner
+configures the jitted step — the paper's optimizer in the driver's seat.
+
+On this CPU container use --reduced --mesh host for a real run; the
+production meshes are exercised via dryrun.py.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import json
+
+import jax
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cluster import (ClusterConfig, cpu_host_config,
+                                multi_pod_config, single_pod_config)
+from repro.core.planner import choose_plan
+from repro.core import explain as explain_mod
+from repro.core.planner import build_step_program
+from repro.core.costmodel import estimate
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.optim import adamw
+from repro.runtime.train_loop import Trainer, TrainerConfig
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=ARCH_IDS)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--mesh", default="host",
+                    choices=["host", "single", "multi"])
+    ap.add_argument("--reduced", action="store_true",
+                    help="tiny same-family config (CPU-runnable)")
+    ap.add_argument("--steps", type=int, default=20)
+    ap.add_argument("--global-batch", type=int, default=None)
+    ap.add_argument("--seq-len", type=int, default=None)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--compress", default="none",
+                    choices=["none", "bf16", "int8_ef"])
+    ap.add_argument("--explain", action="store_true",
+                    help="print the costed analytical plan and exit")
+    args = ap.parse_args()
+
+    arch = get_config(args.arch)
+    if args.reduced:
+        arch = arch.reduced()
+        arch = dataclasses.replace(arch, dtype="float32")
+    shape = SHAPES[args.shape]
+    if args.global_batch or args.seq_len:
+        shape = dataclasses.replace(
+            shape, global_batch=args.global_batch or shape.global_batch,
+            seq_len=args.seq_len or shape.seq_len)
+
+    if args.mesh == "host":
+        mesh = make_host_mesh()
+        cc = cpu_host_config().with_mesh(
+            tuple(mesh.devices.shape), tuple(mesh.axis_names))
+    else:
+        mesh = make_production_mesh(multi_pod=args.mesh == "multi")
+        cc = multi_pod_config() if args.mesh == "multi" else single_pod_config()
+
+    decisions = choose_plan(arch, shape, cc, top_k=3)
+    print("== cost-based plan ranking ==")
+    for d in decisions:
+        print(f"  {d.plan.describe():60s} T={d.time*1e3:9.2f}ms "
+              f"hbm={d.hbm_est/1e9:6.2f}GB feasible={d.feasible}")
+    best = decisions[0]
+    if args.explain:
+        prog = build_step_program(arch, shape, best.plan, cc)
+        print(explain_mod.explain(estimate(prog, cc), max_depth=3))
+        return
+
+    tcfg = TrainerConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         compress_scheme=args.compress,
+                         log_every=max(args.steps // 10, 1))
+    opt = adamw.AdamWConfig(lr=args.lr, total_steps=args.steps)
+    trainer = Trainer(arch, shape, cc, mesh, plan=best.plan, opt_cfg=opt,
+                      tcfg=tcfg)
+    result = trainer.run(on_metrics=lambda m: print(json.dumps(m)))
+    hist = result["history"]
+    if hist:
+        print(f"\nloss: {hist[0]['loss']:.4f} -> {hist[-1]['loss']:.4f} "
+              f"over {len(hist)} logged steps")
+
+
+if __name__ == "__main__":
+    main()

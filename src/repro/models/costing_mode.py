@@ -1,0 +1,29 @@
+"""Costing mode: fully unroll inner lax.scans while lowering components.
+
+XLA's HloCostAnalysis visits a while-loop body once, so any scan-based
+inner loop (chunked attention KV sweep, SSD inter-chunk recurrence)
+under-reports FLOPs/bytes by its trip count.  When components are lowered
+for *costing* (never for execution), we fully unroll those scans so the
+generated HLO carries the true op counts.  Runtime behaviour is untouched
+— the flag defaults to off and is only set inside component_cost.
+"""
+from __future__ import annotations
+
+import contextlib
+
+_UNROLL = False
+
+
+def unroll_scans() -> bool:
+    return _UNROLL
+
+
+@contextlib.contextmanager
+def costing_unroll():
+    global _UNROLL
+    prev = _UNROLL
+    _UNROLL = True
+    try:
+        yield
+    finally:
+        _UNROLL = prev

@@ -1,0 +1,57 @@
+"""Elastic re-meshing: resume training on a different device count.
+
+The paper's R3 (resource awareness) taken to its logical end: a cluster
+resize is *just a re-costing* — rebuild ClusterConfig, re-run the planner,
+restore the checkpoint under the new shardings, rescale data-parallel
+hyperparameters.  The checkpoint store is layout-agnostic (global arrays),
+so restoring onto any mesh is a device_put with new shardings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.cluster import ClusterConfig
+from repro.core.planner import PlanDecision, ShardingPlan, choose_plan
+
+
+@dataclasses.dataclass
+class ElasticPlan:
+    cc: ClusterConfig
+    mesh_shape: Tuple[int, ...]
+    mesh_axes: Tuple[str, ...]
+    decision: PlanDecision
+    lr_scale: float                 # linear-scaling rule on DP resize
+
+
+def replan(arch: ArchConfig, shape: ShapeConfig, *,
+           old_cc: ClusterConfig, new_mesh_shape: Tuple[int, ...],
+           new_mesh_axes: Optional[Tuple[str, ...]] = None) -> ElasticPlan:
+    axes = new_mesh_axes or old_cc.mesh_axes
+    new_cc = old_cc.with_mesh(new_mesh_shape, axes)
+    decision = choose_plan(arch, shape, new_cc, top_k=1)[0]
+    old_dp = _dp_degree(old_cc)
+    new_dp = _dp_degree(new_cc)
+    return ElasticPlan(new_cc, tuple(new_mesh_shape), tuple(axes), decision,
+                       lr_scale=new_dp / max(old_dp, 1))
+
+
+def _dp_degree(cc: ClusterConfig) -> int:
+    d = 1
+    for ax in ("pod", "data"):
+        d *= cc.axis_size(ax)
+    return d
+
+
+def reshard(tree: Any, shardings: Any) -> Any:
+    """Move a restored (host or old-mesh) pytree onto new shardings."""
+    if shardings is None:
+        return tree
+    flat_t, treedef = jax.tree.flatten(tree)
+    flat_s = jax.tree.leaves(shardings)
+    return treedef.unflatten(
+        [jax.device_put(t, s) if s is not None else t
+         for t, s in zip(flat_t, flat_s)])

@@ -1,0 +1,195 @@
+"""Training runtime: jitted step factory + orchestration loop.
+
+``make_train_step`` assembles the full step the planner's decision vector
+describes: remat policy, microbatch accumulation (lax.scan), gradient
+compression, AdamW — all inside ONE jit so XLA/GSPMD generates a single
+runtime plan that ``hlo_cost`` can cost (the paper's object of study).
+
+``Trainer`` adds the operational shell: cost-based plan selection,
+sharded data pipeline, async checkpointing + resume, straggler monitoring,
+and elastic re-mesh on cluster-size change.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from functools import partial
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import store
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.cluster import ClusterConfig
+from repro.core.planner import ShardingPlan, choose_plan
+from repro.data.pipeline import make_pipeline
+from repro.models.model import Model, build_model
+from repro.optim import adamw, compress
+from repro.runtime.straggler import StepTimeMonitor, decide_remesh
+
+
+def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
+                    plan: ShardingPlan, *, compress_scheme: str = "none",
+                    use_kernel: bool = False) -> Callable:
+    """Returns train_step(params, opt_state, ef_state, batch) ->
+    (params, opt_state, ef_state, metrics)."""
+
+    def loss_of(params, batch):
+        loss, metrics = model.loss(params, batch, remat=plan.remat,
+                                   use_kernel=use_kernel)
+        return loss, metrics
+
+    grad_fn = jax.value_and_grad(loss_of, has_aux=True)
+    micro = max(plan.microbatches, 1)
+
+    def train_step(params, opt_state, ef_state, batch):
+        if micro > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape((micro, b // micro) + x.shape[1:])
+            micro_batches = jax.tree.map(split, batch)
+
+            def mb_step(carry, mb):
+                gacc, lacc = carry
+                (loss, _), grads = grad_fn(params, mb)
+                gacc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32) / micro, gacc, grads)
+                return (gacc, lacc + loss / micro), None
+
+            gacc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, loss), _ = jax.lax.scan(
+                mb_step, (gacc0, jnp.zeros((), jnp.float32)), micro_batches)
+            metrics = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+
+        grads, ef_state = compress.compress_grads(grads, ef_state,
+                                                  compress_scheme)
+        new_params, new_opt, opt_metrics = adamw.apply(opt_cfg, opt_state,
+                                                       grads, params)
+        out_metrics = {"loss": loss, **opt_metrics,
+                       **{k: v for k, v in metrics.items()}}
+        return new_params, new_opt, ef_state, out_metrics
+
+    return train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    log_every: int = 10
+    checkpoint_every: int = 50
+    ckpt_dir: Optional[str] = None
+    seed: int = 0
+    compress_scheme: str = "none"
+    use_kernel: bool = False
+    donate: bool = True
+
+
+class Trainer:
+    """End-to-end orchestration (CPU-runnable at reduced scale)."""
+
+    def __init__(self, arch: ArchConfig, shape: ShapeConfig,
+                 cc: ClusterConfig, mesh, *,
+                 plan: Optional[ShardingPlan] = None,
+                 opt_cfg: Optional[adamw.AdamWConfig] = None,
+                 tcfg: Optional[TrainerConfig] = None):
+        from repro.launch import shardings as S
+        self.arch, self.shape, self.cc, self.mesh = arch, shape, cc, mesh
+        self.tcfg = tcfg or TrainerConfig()
+        self.opt_cfg = opt_cfg or adamw.AdamWConfig(
+            total_steps=self.tcfg.steps)
+        if plan is None:
+            plan = choose_plan(arch, shape, cc, top_k=1)[0].plan
+        self.plan = plan
+        self.model = build_model(arch)
+
+        # --- shardings from the plan ---
+        pshapes = self.model.init_shapes()
+        self.param_sh = S.params_shardings(mesh, plan, pshapes)
+        batch_shapes = {"tokens": jax.ShapeDtypeStruct(
+            (shape.global_batch, shape.seq_len), jnp.int32)}
+        fshape = self.model.frontend_shape(shape.global_batch)
+        if fshape is not None:
+            batch_shapes["frontend"] = jax.ShapeDtypeStruct(
+                fshape, jnp.float32)
+        self.batch_sh = S.batch_shardings(mesh, plan, batch_shapes)
+        opt_shapes = jax.eval_shape(partial(adamw.init, self.opt_cfg), pshapes)
+        self.opt_sh = S.opt_state_shardings(mesh, plan, self.param_sh,
+                                            opt_shapes)
+
+        step_fn = make_train_step(self.model, self.opt_cfg, plan,
+                                  compress_scheme=self.tcfg.compress_scheme,
+                                  use_kernel=self.tcfg.use_kernel)
+        donate = (0, 1) if self.tcfg.donate else ()
+        self.train_step = jax.jit(step_fn, donate_argnums=donate)
+        self.monitor = StepTimeMonitor()
+        self.checkpointer = (store.AsyncCheckpointer(self.tcfg.ckpt_dir)
+                             if self.tcfg.ckpt_dir else None)
+
+    # ------------------------------------------------------------------
+    def init_state(self, rng=None):
+        rng = rng if rng is not None else jax.random.PRNGKey(self.tcfg.seed)
+        with self.mesh:
+            params = jax.jit(self.model.init,
+                             out_shardings=self.param_sh)(rng)
+            opt_state = jax.jit(partial(adamw.init, self.opt_cfg),
+                                out_shardings=self.opt_sh)(params)
+        ef = compress.init_error_feedback(params) \
+            if self.tcfg.compress_scheme == "int8_ef" else \
+            compress.EFState(residual=jax.tree.map(lambda p: jnp.zeros((),
+                             jnp.float32), params))
+        return params, opt_state, ef
+
+    def maybe_resume(self, params, opt_state):
+        if not self.tcfg.ckpt_dir:
+            return params, opt_state, 0
+        step = store.latest_step(self.tcfg.ckpt_dir)
+        if step is None:
+            return params, opt_state, 0
+        tree = {"params": params, "opt": opt_state}
+        sh = {"params": self.param_sh, "opt": self.opt_sh}
+        restored, step = store.restore(self.tcfg.ckpt_dir, tree, shardings=sh)
+        # the checkpoint holds post-step-N state: resume at N+1
+        return restored["params"], restored["opt"], step + 1
+
+    def run(self, *, start_step: int = 0, params=None, opt_state=None,
+            ef=None, on_metrics: Optional[Callable] = None) -> Dict[str, Any]:
+        if params is None:
+            params, opt_state, ef = self.init_state()
+            params, opt_state, start_step = self.maybe_resume(params, opt_state)
+        fshape = self.model.frontend_shape(self.shape.global_batch)
+        pipe = make_pipeline(self.arch.vocab_size, self.shape.seq_len,
+                             self.shape.global_batch, seed=self.tcfg.seed,
+                             frontend_shape=fshape, start_step=start_step)
+        history = []
+        try:
+            with self.mesh:
+                for gstep, batch in pipe:
+                    if gstep >= self.tcfg.steps:
+                        break
+                    t0 = time.perf_counter()
+                    batch = {k: jax.device_put(v, self.batch_sh[k])
+                             for k, v in batch.items()}
+                    params, opt_state, ef, metrics = self.train_step(
+                        params, opt_state, ef, batch)
+                    metrics = {k: float(v) for k, v in metrics.items()}
+                    dt = time.perf_counter() - t0
+                    self.monitor.record({0: dt})
+                    if gstep % self.tcfg.log_every == 0:
+                        history.append({"step": gstep, "time_s": dt, **metrics})
+                        if on_metrics:
+                            on_metrics(history[-1])
+                    if (self.checkpointer and gstep > 0
+                            and gstep % self.tcfg.checkpoint_every == 0):
+                        self.checkpointer.save(
+                            gstep, {"params": params, "opt": opt_state})
+        finally:
+            pipe.close()
+            if self.checkpointer:
+                self.checkpointer.wait()
+        return {"params": params, "opt_state": opt_state,
+                "history": history}

@@ -1,0 +1,18 @@
+"""Shared test fixtures.  NOTE: no XLA_FLAGS here — tests run on the real
+single CPU device; only dryrun.py forces 512 host devices."""
+import dataclasses
+
+import jax
+import pytest
+
+from repro.configs import get_config
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)
+
+
+def tiny(arch_id: str):
+    """Reduced fp32 config for CPU tests."""
+    return dataclasses.replace(get_config(arch_id).reduced(), dtype="float32")

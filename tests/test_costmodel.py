@@ -1,0 +1,227 @@
+"""Unit tests for the cost estimator (paper §3): symbol-table state
+machine, per-instruction costing, Eq (1) control-flow aggregation."""
+import math
+
+import pytest
+
+from repro.core import (Call, Collective, Compute, CreateVar, DataGen,
+                        ForBlock, FunctionBlock, GenericBlock, IfBlock, IO,
+                        ParForBlock, Program, WhileBlock, estimate,
+                        single_chip_config, single_pod_config)
+from repro.core.costmodel import TINY, CostBreakdown
+from repro.core.symbols import MemState, SymbolTable, TensorStat
+
+
+CC = single_chip_config()
+POD = single_pod_config()
+
+
+def prog_with(children, inputs=None, name="t"):
+    p = Program(name=name, blocks=[GenericBlock("b", children)])
+    if inputs:
+        p.inputs.update(inputs)
+    return p
+
+
+# ----------------------------------------------------------- symbol table
+def test_symbol_table_create_copy_remove():
+    t = SymbolTable()
+    t.createvar("x", TensorStat((4, 4)))
+    t.cpvar("x", "y")
+    assert "y" in t and t.get("y").shape == (4, 4)
+    t.rmvar("x", "y")
+    assert len(t) == 0
+
+
+def test_symbol_table_state_and_sizes():
+    st = TensorStat((1000, 1000), "float64", state=MemState.DISK)
+    assert st.bytes_in_memory() == 8e6
+    t = SymbolTable()
+    t.createvar("x", st)
+    assert t.live_hbm_bytes() == 0.0
+    t.touch_hbm("x")
+    assert t.live_hbm_bytes() == 8e6
+
+
+def test_sparse_serialized_size_smaller():
+    dense = TensorStat((1000, 1000), "float64", sparsity=1.0)
+    sparse = TensorStat((1000, 1000), "float64", sparsity=0.01)
+    assert sparse.bytes_serialized() < dense.bytes_serialized() / 10
+
+
+# ----------------------------------------------------- IO-once semantics
+def test_first_use_pays_io_second_is_free():
+    """Paper §3.2: only the first consumer of a persistent input pays IO."""
+    x = TensorStat((10_000, 1000), "float64", state=MemState.DISK)
+    p = prog_with([
+        Compute("tsmm", ("X",), "A", exec_type="CP"),
+        Compute("transpose", ("X",), "Xt", exec_type="CP"),
+    ], inputs={"X": x})
+    costed = estimate(p, CC)
+    tsmm_node = costed.root.children[0].children[0]
+    tr_node = costed.root.children[0].children[1]
+    assert tsmm_node.cost.io > 0.0
+    assert tr_node.cost.io == 0.0
+
+
+def test_explicit_io_changes_state():
+    x = TensorStat((1000, 1000), "float64", state=MemState.DISK)
+    p = prog_with([
+        IO("read", "X", src=MemState.DISK, dst=MemState.HBM),
+        Compute("tsmm", ("X",), "A", exec_type="CP"),
+    ], inputs={"X": x})
+    costed = estimate(p, CC)
+    read_node = costed.root.children[0].children[0]
+    tsmm_node = costed.root.children[0].children[1]
+    assert read_node.cost.io > 0
+    assert tsmm_node.cost.io == 0
+
+
+# ------------------------------------------------------ instruction costs
+def test_tsmm_half_of_full_matmul():
+    """FLOP(tsmm) = 0.5 * FLOP(X^T @ X) (paper Eq (2))."""
+    x = TensorStat((65536, 2048), "float32")   # both ops at full MXU util
+    p1 = prog_with([Compute("tsmm", ("X",), "A", exec_type="CP")],
+                   inputs={"X": x})
+    p2 = prog_with([
+        Compute("transpose", ("X",), "Xt", exec_type="CP"),
+        Compute("matmul", ("Xt", "X"), "A", exec_type="CP"),
+    ], inputs={"X": x})
+    c1 = estimate(p1, CC)
+    mm = estimate(p2, CC).root.children[0].children[1]
+    tsmm = c1.root.children[0].children[0]
+    assert tsmm.cost.compute == pytest.approx(mm.cost.compute * 0.5, rel=0.05)
+
+
+def test_compute_roofline_max_of_flops_and_bytes():
+    # tiny matmul is bandwidth bound; huge matmul is flops bound
+    small = TensorStat((128, 128), "float32")
+    big = TensorStat((8192, 8192), "float32")
+    for stat, bound in ((small, "mem"), (big, "flops")):
+        p = prog_with([Compute("matmul", ("A", "B"), "C", exec_type="CP")],
+                      inputs={"A": stat, "B": stat})
+        node = estimate(p, CC).root.children[0].children[0]
+        flops = 2 * stat.shape[0] ** 3
+        t_flops_small = flops / (CC.chip.peak("float32") * CC.small_matmul_util)
+        t_flops_big = flops / (CC.chip.peak("float32") * CC.matmul_util)
+        t_mem = 3 * stat.bytes_in_memory() / CC.hbm_bw_eff
+        if bound == "mem":
+            assert node.cost.compute == pytest.approx(max(t_mem, t_flops_small), rel=1e-6)
+        else:
+            assert node.cost.compute == pytest.approx(t_flops_big, rel=1e-6)
+
+
+def test_dist_compute_divided_by_shards():
+    x = TensorStat((65536, 4096), "bfloat16", shards=256)
+    p_cp = prog_with([Compute("tsmm", ("X",), "A", exec_type="CP")],
+                     inputs={"X": TensorStat((65536, 4096), "bfloat16")})
+    p_dist = prog_with([Compute("tsmm", ("X",), "A", exec_type="DIST",
+                                shard_axes=("data", "model"))],
+                       inputs={"X": x})
+    c_cp = estimate(p_cp, POD).root.children[0].children[0].cost.compute
+    c_dist = estimate(p_dist, POD).root.children[0].children[0].cost.compute
+    assert c_dist == pytest.approx(c_cp / 256, rel=0.01)
+
+
+# ------------------------------------------------------------ collectives
+def test_all_reduce_ring_formula():
+    x = TensorStat((1024, 1024), "float32")  # 4 MB payload
+    p = prog_with([Collective("all_reduce", "X", ("data",))],
+                  inputs={"X": x})
+    t = estimate(p, POD).root.children[0].children[0].cost.collective
+    n = 16
+    wire = 2 * (n - 1) / n * x.bytes_in_memory() / POD.ici_bw_eff
+    lat = 2 * (n - 1) * POD.collective_phase_latency
+    assert t == pytest.approx(wire + lat, rel=1e-6)
+
+
+def test_collective_single_device_free():
+    x = TensorStat((1024, 1024), "float32")
+    p = prog_with([Collective("all_reduce", "X", ("data",))], inputs={"X": x})
+    assert estimate(p, CC).root.children[0].children[0].cost.collective == 0.0
+
+
+def test_overlap_fraction_discounts_collectives():
+    x = TensorStat((4096, 4096), "float32")
+    p = prog_with([Collective("all_reduce", "X", ("data",))], inputs={"X": x})
+    t0 = estimate(p, POD).total
+    t1 = estimate(p, POD.with_overlap(0.7)).total
+    assert t1 == pytest.approx(t0 * 0.3, rel=1e-6)
+
+
+# --------------------------------------------------- control flow (Eq 1)
+def _loop_body(var="X"):
+    return [Compute("unary", (var,), "Y", exec_type="CP")]
+
+
+def test_for_loop_scales_by_iterations():
+    x = TensorStat((1024, 1024), "float32")
+    body_cost = estimate(prog_with(_loop_body(), inputs={"X": x}), CC).total
+    p = Program("t", blocks=[ForBlock("l", 10, body=_loop_body())],
+                inputs={"X": x})
+    assert estimate(p, CC).total == pytest.approx(10 * body_cost, rel=1e-3)
+
+
+def test_while_unknown_uses_default_constant():
+    x = TensorStat((1024, 1024), "float32")
+    body_cost = estimate(prog_with(_loop_body(), inputs={"X": x}), CC).total
+    p = Program("t", blocks=[WhileBlock("w", body=_loop_body())],
+                inputs={"X": x})
+    n_hat = CC.default_loop_iterations
+    assert estimate(p, CC).total == pytest.approx(n_hat * body_cost, rel=1e-3)
+
+
+def test_loop_first_iteration_io_correction():
+    """Only the first iteration pays the persistent read (paper §3.2)."""
+    x = TensorStat((10_000, 1000), "float64", state=MemState.DISK)
+    p = Program("t", blocks=[ForBlock("l", 5, body=_loop_body())],
+                inputs={"X": x})
+    costed = estimate(p, CC)
+    read_once = x.bytes_serialized() / CC.chip.disk_bw \
+        + x.bytes_serialized() / CC.chip.pcie_bw
+    assert costed.breakdown.io == pytest.approx(read_once, rel=1e-6)
+
+
+def test_parfor_divides_by_parallelism():
+    x = TensorStat((1024, 1024), "float32")
+    p_seq = Program("t", blocks=[ForBlock("l", 12, body=_loop_body())],
+                    inputs={"X": x})
+    p_par = Program("t", blocks=[ParForBlock("l", 12, parallelism=4,
+                                             body=_loop_body())],
+                    inputs={"X": x})
+    t_seq = estimate(p_seq, CC).total
+    t_par = estimate(p_par, CC).total
+    assert t_par == pytest.approx(t_seq * math.ceil(12 / 4) / 12, rel=1e-3)
+
+
+def test_if_weighted_branches():
+    x = TensorStat((2048, 2048), "float32")
+    heavy = [Compute("matmul", ("X", "X"), "Y", exec_type="CP")]
+    light = [Compute("unary", ("X",), "Y", exec_type="CP")]
+    t_h = estimate(prog_with(heavy, inputs={"X": x}), CC).total
+    t_l = estimate(prog_with(light, inputs={"X": x}), CC).total
+    p = Program("t", blocks=[IfBlock("if", branches=[heavy, light],
+                                     weights=[0.25, 0.75])],
+                inputs={"X": x})
+    assert estimate(p, CC).total == pytest.approx(
+        0.25 * t_h + 0.75 * t_l, rel=1e-3)
+
+
+def test_function_call_and_recursion_guard():
+    x = TensorStat((1024, 1024), "float32")
+    f = FunctionBlock("f", body=[Compute("unary", ("X",), "Y", exec_type="CP"),
+                                 Call("f")])   # recursive
+    p = Program("t", blocks=[Call("f")], functions={"f": f}, inputs={"X": x})
+    costed = estimate(p, CC)        # must terminate
+    base = estimate(prog_with(_loop_body(), inputs={"X": x}), CC).total
+    assert costed.total < 3 * base + 1e-3
+
+
+def test_peak_hbm_tracking():
+    big = TensorStat((8192, 8192), "float32")
+    p = prog_with([
+        DataGen("rand", "A", big),
+        DataGen("rand", "B", big),
+    ])
+    costed = estimate(p, CC)
+    assert costed.peak_hbm_per_device >= 2 * big.bytes_in_memory()

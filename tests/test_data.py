@@ -1,0 +1,44 @@
+"""Data pipeline: determinism, host sharding, prefetch thread."""
+import numpy as np
+
+from repro.data.pipeline import PrefetchIterator, SyntheticLM, make_pipeline
+
+
+def test_batch_deterministic_per_step():
+    src = SyntheticLM(vocab_size=100, seq_len=16, batch=4, seed=1)
+    a = src.batch_at(7)["tokens"]
+    b = src.batch_at(7)["tokens"]
+    assert np.array_equal(a, b)
+    c = src.batch_at(8)["tokens"]
+    assert not np.array_equal(a, c)
+
+
+def test_tokens_in_range_and_learnable_structure():
+    src = SyntheticLM(vocab_size=64, seq_len=128, batch=8, seed=0)
+    t = src.batch_at(0)["tokens"]
+    assert t.min() >= 0 and t.max() < 64
+    # structured stream: consecutive-token deltas are far from uniform
+    deltas = (t[:, 1:] - t[:, :-1]) % 64
+    _, counts = np.unique(deltas, return_counts=True)
+    assert counts.max() > 3 * deltas.size / 64
+
+
+def test_host_sharding_distinct_streams():
+    a = SyntheticLM(100, 16, 4, seed=0).batch_at(0)["tokens"]
+    b = SyntheticLM(100, 16, 4, seed=1).batch_at(0)["tokens"]
+    assert not np.array_equal(a, b)
+
+
+def test_prefetch_iterator_yields_in_order():
+    pipe = make_pipeline(vocab_size=100, seq_len=8, global_batch=4)
+    try:
+        steps = [next(pipe)[0] for _ in range(5)]
+        assert steps == [0, 1, 2, 3, 4]
+    finally:
+        pipe.close()
+
+
+def test_frontend_shapes():
+    src = SyntheticLM(100, 16, 4, seed=0, frontend_shape=(4, 8, 32))
+    b = src.batch_at(0)
+    assert b["frontend"].shape == (4, 8, 32)

@@ -1,0 +1,59 @@
+"""Dry-run machinery tests: one real (subprocess, 512 host devices) cell,
+plus artifact-schema checks on whatever the full matrix has produced."""
+import glob
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ARTIFACTS = os.path.join(REPO, "benchmarks", "artifacts")
+
+
+@pytest.mark.slow
+def test_one_cell_compiles_in_subprocess(tmp_path):
+    """Smallest cell end-to-end: proves lower+compile works under the
+    512-device flag without polluting this process's device state."""
+    env = dict(os.environ, PYTHONPATH=os.path.join(REPO, "src"))
+    code = (
+        "from repro.launch.dryrun import run_cell;"
+        "r = run_cell('qwen1.5-0.5b', 'decode_32k', 'single',"
+        f" artifact_dir=r'{tmp_path}', force=True);"
+        "print('STATUS=' + r['status']);"
+        "assert r['status'] == 'ok', r.get('error')"
+    )
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "STATUS=ok" in out.stdout, out.stdout + out.stderr
+
+
+def test_existing_artifacts_are_well_formed():
+    paths = glob.glob(os.path.join(ARTIFACTS, "dryrun_*.json"))
+    if not paths:
+        pytest.skip("no artifacts yet (dry-run matrix not run)")
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        assert d["status"] in ("ok", "skip", "fail"), p
+        if d["status"] == "ok":
+            r = d["roofline"]
+            assert r["compute_s"] >= 0 and r["memory_s"] > 0
+            assert d["memory_analysis"]["temp_bytes"] >= 0
+            assert d["compiled_cost"]["flops_per_device"] > 0
+        if d["status"] == "skip":
+            assert "skip" in d["why"]
+
+
+def test_no_failed_cells_in_matrix():
+    paths = glob.glob(os.path.join(ARTIFACTS, "dryrun_*.json"))
+    if not paths:
+        pytest.skip("no artifacts yet")
+    failed = []
+    for p in paths:
+        with open(p) as f:
+            d = json.load(f)
+        if d["status"] == "fail":
+            failed.append((os.path.basename(p), d.get("error", "")[:100]))
+    assert not failed, failed

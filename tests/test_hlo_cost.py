@@ -1,0 +1,86 @@
+"""Costing the generated plan: HLO collective parsing + cost_analysis
+agreement with the analytical op library."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.core import hlo_cost
+from repro.core.cluster import single_pod_config
+from repro.core.linalg_ops import profile
+from repro.core.symbols import TensorStat
+
+HLO_SAMPLE = """
+HloModule jit_step
+
+%region_0 (a: f32[], b: f32[]) -> f32[] { ... }
+
+ENTRY %main {
+  %p0 = bf16[256,1024]{1,0} parameter(0)
+  %mul = bf16[256,1024]{1,0} multiply(%p0, %p0)
+  %all-gather = bf16[4096,1024]{1,0} all-gather(%mul), replica_groups=[16,16]<=[256], dimensions={0}
+  %all-reduce = f32[1024]{0} all-reduce(%conv), channel_id=2, replica_groups=[2,128]<=[256], to_apply=%region_0
+  %rs = bf16[16,1024]{1,0} reduce-scatter(%mul), channel_id=3, replica_groups={{0,1,2,3}}, dimensions={0}
+  %a2a = bf16[256,1024]{1,0} all-to-all(%mul), replica_groups=[4,64]<=[256]
+  %cp-start = bf16[256,1024]{1,0} collective-permute-start(%mul), source_target_pairs={{0,1}}
+  %cp-done = bf16[256,1024]{1,0} collective-permute-done(%cp-start)
+}
+"""
+
+
+def test_parse_collectives_kinds_and_bytes():
+    colls = hlo_cost.parse_collectives(HLO_SAMPLE)
+    kinds = sorted(c.kind for c in colls)
+    assert kinds == ["all_gather", "all_reduce", "all_to_all",
+                     "collective_permute", "reduce_scatter"]
+    ag = next(c for c in colls if c.kind == "all_gather")
+    assert ag.operand_bytes == 256 * 1024 * 2          # bf16 operand
+    assert ag.result_bytes == 4096 * 1024 * 2
+    assert ag.group_size == 16
+    rs = next(c for c in colls if c.kind == "reduce_scatter")
+    assert rs.group_size == 4                           # explicit groups
+    # -done must not double count: exactly one collective_permute entry
+    assert sum(c.kind == "collective_permute" for c in colls) == 1
+
+
+def test_parse_ignores_non_collectives():
+    assert hlo_cost.parse_collectives("%x = f32[2]{0} add(%a, %b)") == []
+
+
+def test_compiled_matmul_flops_match_analytical():
+    """cost_analysis FLOPs == the white-box matmul formula (both count
+    mul+add as 2) — ties the two cost paths together."""
+    m, k, n = 256, 512, 128
+    a = jnp.zeros((m, k), jnp.float32)
+    b = jnp.zeros((k, n), jnp.float32)
+    compiled = jax.jit(lambda a, b: a @ b).lower(a, b).compile()
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0]
+    prof = profile("matmul", [TensorStat((m, k)), TensorStat((k, n))])
+    assert float(ca["flops"]) == pytest.approx(prof.flops, rel=0.01)
+
+
+def test_compiled_cost_roundtrip_and_roofline():
+    x = jnp.zeros((512, 512), jnp.float32)
+    compiled = jax.jit(lambda x: (x @ x).sum()).lower(x).compile()
+    cost = hlo_cost.from_compiled("t", compiled, num_devices=1)
+    blob = cost.to_json()
+    cost2 = hlo_cost.CompiledCost.from_json(blob)
+    assert cost2.flops_per_device == cost.flops_per_device
+    r = cost.roofline(single_pod_config())
+    assert set(r) >= {"compute_s", "memory_s", "collective_s", "dominant"}
+    assert r["compute_s"] > 0 and r["memory_s"] > 0
+    assert r["collective_s"] == 0.0
+
+
+def test_time_breakdown_monotone_in_cluster_speed():
+    x = jnp.zeros((512, 512), jnp.float32)
+    compiled = jax.jit(lambda x: x @ x).lower(x).compile()
+    cost = hlo_cost.from_compiled("t", compiled, num_devices=1)
+    import dataclasses
+    cc = single_pod_config()
+    slow_chip = dataclasses.replace(cc.chip, peak_flops={
+        k: v / 10 for k, v in cc.chip.peak_flops.items()})
+    slow = dataclasses.replace(cc, chip=slow_chip)
+    assert (cost.time_breakdown(slow).compute
+            >= cost.time_breakdown(cc).compute)

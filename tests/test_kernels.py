@@ -1,0 +1,114 @@
+"""Per-kernel allclose validation against the pure-jnp oracles —
+shape/dtype sweeps, interpret mode (kernel bodies execute on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.models.mamba import ssd_decode_step
+
+RNG = np.random.default_rng(7)
+
+
+def randn(shape, dtype=jnp.float32):
+    return jnp.asarray(RNG.normal(size=shape), dtype)
+
+
+# --------------------------------------------------------------- tsmm
+@pytest.mark.parametrize("m,n,bm,bn", [
+    (512, 256, 256, 128),
+    (1024, 512, 512, 256),
+    (768, 384, 256, 128),       # non-power-of-two multiples
+    (2048, 128, 512, 128),      # single block column
+])
+def test_tsmm_shapes(m, n, bm, bn):
+    x = randn((m, n))
+    out = ops.tsmm(x, bm=bm, bn=bn)
+    expect = ref.tsmm_ref(x)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 2e-5), (jnp.bfloat16, 3e-2)])
+def test_tsmm_dtypes(dtype, tol):
+    x = randn((512, 256), dtype)
+    out = ops.tsmm(x, bm=256, bn=128)
+    expect = np.asarray(ref.tsmm_ref(x), np.float32)
+    np.testing.assert_allclose(np.asarray(out, np.float32), expect,
+                               rtol=tol, atol=tol * 30)
+
+
+def test_tsmm_symmetry():
+    x = randn((512, 256))
+    out = np.asarray(ops.tsmm(x, bm=256, bn=128))
+    np.testing.assert_allclose(out, out.T, rtol=1e-6)
+
+
+# ----------------------------------------------------------- flash attn
+@pytest.mark.parametrize("b,hq,hkv,s,d,causal,window", [
+    (2, 4, 2, 256, 64, True, None),
+    (1, 4, 4, 256, 32, False, None),
+    (2, 8, 2, 512, 64, True, 128),
+    (1, 2, 1, 512, 128, True, None),
+    (1, 4, 1, 256, 64, False, 64),
+])
+def test_flash_attention_sweep(b, hq, hkv, s, d, causal, window):
+    q, k, v = randn((b, hq, s, d)), randn((b, hkv, s, d)), randn((b, hkv, s, d))
+    out = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              bq=128, bk=128)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal, window=window)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-5)
+
+
+def test_flash_attention_bf16():
+    q = randn((1, 2, 256, 64), jnp.bfloat16)
+    k = randn((1, 2, 256, 64), jnp.bfloat16)
+    v = randn((1, 2, 256, 64), jnp.bfloat16)
+    out = ops.flash_attention(q, k, v, bq=128, bk=128)
+    expect = ref.flash_attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_flash_block_shape_invariance():
+    q, k, v = randn((1, 2, 512, 64)), randn((1, 2, 512, 64)), randn((1, 2, 512, 64))
+    o1 = ops.flash_attention(q, k, v, bq=64, bk=64)
+    o2 = ops.flash_attention(q, k, v, bq=256, bk=128)
+    np.testing.assert_allclose(o1, o2, rtol=2e-5, atol=2e-5)
+
+
+# ------------------------------------------------------------- ssd scan
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 128, 4, 16, 32, 32),
+    (1, 256, 2, 64, 128, 64),
+    (2, 64, 8, 32, 16, 16),
+])
+def test_ssd_scan_sweep(b, s, h, p, n, chunk):
+    g = 1
+    x = randn((b, s, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    A_log = jnp.asarray(RNG.uniform(-1, 1, (h,)), jnp.float32)
+    B = randn((b, s, g, n))
+    C = randn((b, s, g, n))
+    D = randn((h,))
+    y_k, st_k = ops.ssd_scan(x, dt, A_log, B, C, D, chunk=chunk)
+    y_r, st_r = ref.ssd_scan_ref(x, dt, A_log, B, C, D, chunk=chunk)
+    np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_k, st_r, rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_scan_matches_sequential_decode():
+    b, s, h, p, n = 1, 32, 2, 8, 16
+    x = randn((b, s, h, p))
+    dt = jnp.asarray(RNG.uniform(0.01, 0.2, (b, s, h)), jnp.float32)
+    A_log = jnp.asarray(RNG.uniform(-1, 1, (h,)), jnp.float32)
+    B, C = randn((b, s, 1, n)), randn((b, s, 1, n))
+    D = randn((h,))
+    y_k, st_k = ops.ssd_scan(x, dt, A_log, B, C, D, chunk=8)
+    st = jnp.zeros((b, h, p, n))
+    for t in range(s):
+        y_t, st = ssd_decode_step(st, x[:, t], dt[:, t], A_log,
+                                  B[:, t], C[:, t], D)
+        np.testing.assert_allclose(y_k[:, t], y_t, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(st_k, st, rtol=2e-4, atol=2e-4)

@@ -1,0 +1,81 @@
+"""Paper §2 reproduction: LinReg DS plan generation across Table-1
+scenarios must make the SAME operator/execution-type switches the paper
+reports, and costing must order the scenarios sensibly."""
+import pytest
+
+from repro.core import estimate, explain
+from repro.core.cluster import ClusterConfig, CPU_HOST, single_pod_config
+from repro.core.linreg import (PAPER_BUDGETS, SCENARIOS, build_linreg_program,
+                               select_operators, tpu_budgets)
+
+PAPER_CC = ClusterConfig(chip=CPU_HOST, mesh_shape=(72,), mesh_axes=("data",),
+                         dispatch_latency=20.0)
+
+
+@pytest.mark.parametrize("name,exec_type,tsmm_op,mm_op,part_y", [
+    ("XS", "CP", "tsmm", "mm", False),          # Fig. 2
+    ("XL1", "DIST", "tsmm+ak+", "mapmm", True),  # Fig. 3
+    ("XL2", "DIST", "cpmm", "mapmm", True),      # wide X blocks tsmm
+    ("XL3", "DIST", "tsmm+ak+", "cpmm", False),  # big y blocks broadcast
+    ("XL4", "DIST", "cpmm", "cpmm", False),      # both
+])
+def test_paper_plan_switches(name, exec_type, tsmm_op, mm_op, part_y):
+    choice = select_operators(SCENARIOS[name], PAPER_CC, PAPER_BUDGETS)
+    assert choice.exec_type == exec_type
+    assert choice.tsmm_op == tsmm_op
+    assert choice.mm_op == mm_op
+    assert choice.partition_y == part_y
+
+
+def test_yt_rewrite_only_in_cp():
+    assert select_operators(SCENARIOS["XS"], PAPER_CC, PAPER_BUDGETS).yt_rewrite
+    assert not select_operators(SCENARIOS["XL1"], PAPER_CC,
+                                PAPER_BUDGETS).yt_rewrite
+
+
+def test_costs_increase_with_scale():
+    costs = {}
+    for name, sc in SCENARIOS.items():
+        prog, _ = build_linreg_program(sc, PAPER_CC)
+        costs[name] = estimate(prog, PAPER_CC).total
+    assert costs["XS"] < costs["XL1"] < costs["XL4"]
+    assert costs["XL2"] > costs["XL1"]      # cpmm shuffle costs more
+
+
+def test_xs_dominated_by_tsmm_compute():
+    """Paper Fig. 4: tsmm computation dominates scenario XS."""
+    prog, _ = build_linreg_program(SCENARIOS["XS"], PAPER_CC)
+    costed = estimate(prog, PAPER_CC)
+    lines = explain(costed)
+    assert "tsmm" in lines
+    core = costed.root.children[-1]
+    tsmm_node = next(c for c in core.children if "tsmm" in c.label)
+    assert tsmm_node.cost.total > 0.5 * costed.total
+
+
+def test_tsmm_pays_x_read_in_xs():
+    prog, _ = build_linreg_program(SCENARIOS["XS"], PAPER_CC)
+    costed = estimate(prog, PAPER_CC)
+    core = costed.root.children[-1]
+    tsmm_node = next(c for c in core.children if "tsmm" in c.label)
+    assert tsmm_node.cost.io > 0
+
+
+def test_tpu_budgets_shift_cp_boundary():
+    """On TPU the CP/local boundary moves: XS stays local, and the larger
+    local memory means XL-scale inputs shard instead of spilling."""
+    cc = single_pod_config()
+    b = tpu_budgets(cc)
+    assert select_operators(SCENARIOS["XS"], cc, b).exec_type == "CP"
+    assert select_operators(SCENARIOS["XL1"], cc, b).exec_type == "DIST"
+    # wide X: TPU block bound is 8192 cols, so XL2 keeps the tsmm operator
+    assert select_operators(SCENARIOS["XL2"], cc, b).tsmm_op == "tsmm+ak+"
+
+
+def test_explain_has_paper_shape():
+    prog, _ = build_linreg_program(SCENARIOS["XL1"], PAPER_CC)
+    text = explain(estimate(prog, PAPER_CC))
+    assert "PROGRAM" in text
+    assert "# C=" in text
+    assert "all_reduce" in text           # the ak+ aggregation analogue
+    assert "total cost C=" in text

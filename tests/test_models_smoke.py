@@ -1,0 +1,77 @@
+"""Per-architecture smoke tests (assignment requirement): instantiate a
+REDUCED config of the same family, run one forward + one train step on
+CPU, assert output shapes and no NaNs."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.model import build_model
+from repro.optim import adamw
+
+RNG = jax.random.PRNGKey(0)
+
+
+def _tiny(arch_id):
+    return dataclasses.replace(get_config(arch_id).reduced(), dtype="float32")
+
+
+@pytest.mark.parametrize("arch_id", ARCH_IDS)
+def test_forward_and_train_step(arch_id):
+    cfg = _tiny(arch_id)
+    model = build_model(cfg)
+    params = model.init(RNG)
+    B, S = 2, 16
+    tokens = jax.random.randint(RNG, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": tokens}
+    fs = model.frontend_shape(B)
+    if fs is not None:
+        batch["frontend"] = jax.random.normal(RNG, fs, jnp.float32)
+
+    # forward: shape + finite
+    logits, aux = model.forward(params, tokens, batch.get("frontend"))
+    exp_s = S + (fs[1] if (fs is not None and cfg.enc_dec is None) else 0)
+    assert logits.shape == (B, exp_s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+
+    # one full train step: grads finite, params actually change
+    opt_cfg = adamw.AdamWConfig(lr=1e-3, total_steps=10)
+    opt_state = adamw.init(opt_cfg, params)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: model.loss(p, batch), has_aux=True)(params)
+    assert bool(jnp.isfinite(loss))
+    gnorm = adamw.global_norm(grads)
+    assert bool(jnp.isfinite(gnorm)) and float(gnorm) > 0
+    new_params, _, _ = adamw.apply(opt_cfg, opt_state, grads, params)
+    changed = jax.tree.map(
+        lambda a, b: float(jnp.abs(a - b).max()), params, new_params)
+    assert max(jax.tree.leaves(changed)) > 0
+
+
+@pytest.mark.parametrize("arch_id", ["qwen1.5-0.5b", "gemma3-12b",
+                                     "mamba2-1.3b", "zamba2-2.7b"])
+def test_decode_cache_shapes(arch_id):
+    cfg = _tiny(arch_id)
+    model = build_model(cfg)
+    cache = model.init_cache(batch=2, max_len=32)
+    shapes = model.cache_shapes(batch=2, max_len=32)
+    concrete = jax.tree.map(lambda x: (x.shape, str(x.dtype)), cache)
+    spec = jax.tree.map(lambda x: (x.shape, str(x.dtype)), shapes)
+    assert concrete == spec
+
+
+def test_full_configs_param_counts_match_published():
+    expect = {
+        "phi3.5-moe-42b-a6.6b": (41.9e9, 6.6e9),
+        "deepseek-v3-671b": (671e9, 37.6e9),
+        "pixtral-12b": (12.2e9, 12.2e9),
+        "qwen1.5-0.5b": (0.62e9, 0.62e9),
+        "mamba2-1.3b": (1.4e9, 1.4e9),
+    }
+    for arch_id, (tot, act) in expect.items():
+        pc = get_config(arch_id).param_counts()
+        assert abs(pc["total"] - tot) / tot < 0.1, arch_id
+        assert abs(pc["active"] - act) / act < 0.15, arch_id

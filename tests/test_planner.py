@@ -1,0 +1,111 @@
+"""Cost-based plan selection tests (execution-type decisions at LM scale)."""
+import dataclasses
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.cluster import multi_pod_config, single_pod_config
+from repro.core.planner import (ShardingPlan, build_step_program, choose_plan,
+                                enumerate_plans, estimate_hbm)
+from repro.core.costmodel import estimate
+
+CC = single_pod_config()
+
+
+def test_enumerate_covers_roles():
+    plans = enumerate_plans(get_config("qwen1.5-0.5b"), SHAPES["train_4k"], CC)
+    names = {p.name for p in plans}
+    assert {"dp+tp", "fsdp", "dp-pure"} <= names
+
+
+def test_moe_gets_expert_parallel_candidates():
+    plans = enumerate_plans(get_config("phi3.5-moe-42b-a6.6b"),
+                            SHAPES["train_4k"], CC)
+    assert any(p.ep_axes for p in plans)
+
+
+def test_best_plan_feasible_for_mid_size_models():
+    for arch_id in ("qwen1.5-0.5b", "pixtral-12b", "gemma3-12b",
+                    "mamba2-1.3b"):
+        d = choose_plan(get_config(arch_id), SHAPES["train_4k"], CC, top_k=1)[0]
+        assert d.feasible, f"{arch_id}: {d.plan.describe()} {d.hbm_est/1e9:.1f}GB"
+
+
+def test_deepseek_train_single_pod_is_infeasible():
+    """671B + AdamW fp32 state cannot fit 256 x 16 GB — the cost model must
+    say so (documented in EXPERIMENTS.md, not hidden)."""
+    d = choose_plan(get_config("deepseek-v3-671b"), SHAPES["train_4k"], CC,
+                    top_k=1)[0]
+    assert not d.feasible
+
+
+def test_tp_reduces_hbm_where_params_dominate():
+    # decode: params+KV dominate, so TP sharding must reduce per-device HBM
+    arch = get_config("pixtral-12b")
+    shape = SHAPES["decode_32k"]
+    dp = ShardingPlan(name="dp-pure", batch_axes=("data", "model"))
+    tp = ShardingPlan(name="dp+tp", batch_axes=("data",), tp_axes=("model",))
+    assert estimate_hbm(arch, shape, tp, CC) < estimate_hbm(arch, shape, dp, CC)
+
+
+def test_train_tp_activation_tradeoff_is_modeled():
+    # at fixed global batch, dp+tp (dp=16) holds 16x more tokens/device than
+    # dp-pure (dp=256): with remat=none the activation term must reflect it
+    arch = get_config("pixtral-12b")
+    shape = SHAPES["train_4k"]
+    dp = ShardingPlan(name="dp-pure", batch_axes=("data", "model"))
+    tp = ShardingPlan(name="dp+tp", batch_axes=("data",), tp_axes=("model",))
+    assert estimate_hbm(arch, shape, tp, CC) > estimate_hbm(arch, shape, dp, CC)
+    # ...which is exactly why the chosen plan pairs TP with microbatching
+    best = choose_plan(arch, shape, CC, top_k=1)[0]
+    assert best.plan.microbatches > 1 or best.plan.remat != "none"
+
+
+def test_zero1_shards_optimizer_memory():
+    arch = get_config("pixtral-12b")
+    shape = SHAPES["train_4k"]
+    base = ShardingPlan(tp_axes=("model",), zero1=False)
+    z1 = ShardingPlan(tp_axes=("model",), zero1=True)
+    assert estimate_hbm(arch, shape, z1, CC) < estimate_hbm(arch, shape, base, CC)
+
+
+def test_remat_trades_memory_for_time():
+    arch = get_config("gemma3-12b")
+    shape = SHAPES["train_4k"]
+    none = ShardingPlan(tp_axes=("model",), remat="none")
+    full = ShardingPlan(tp_axes=("model",), remat="full")
+    assert estimate_hbm(arch, shape, full, CC) < estimate_hbm(arch, shape, none, CC)
+    t_none = estimate(build_step_program(arch, shape, none, CC), CC).total
+    t_full = estimate(build_step_program(arch, shape, full, CC), CC).total
+    assert t_full > t_none
+
+
+def test_microbatching_reduces_activation_memory():
+    arch = get_config("stablelm-12b")
+    shape = SHAPES["train_4k"]
+    m1 = ShardingPlan(tp_axes=("model",), microbatches=1)
+    m8 = ShardingPlan(tp_axes=("model",), microbatches=8)
+    assert estimate_hbm(arch, shape, m8, CC) < estimate_hbm(arch, shape, m1, CC)
+
+
+def test_multi_pod_adds_pod_to_batch_axes():
+    cc = multi_pod_config()
+    plans = enumerate_plans(get_config("qwen1.5-4b"), SHAPES["train_4k"], cc)
+    assert all("pod" in p.batch_axes for p in plans)
+
+
+def test_decode_plan_prefers_tp_for_big_models():
+    d = choose_plan(get_config("stablelm-12b"), SHAPES["decode_32k"], CC,
+                    top_k=1)[0]
+    assert d.feasible
+    assert d.plan.tp_axes, d.plan.describe()
+
+
+def test_step_program_costs_scale_with_model():
+    shape = SHAPES["train_4k"]
+    plan = ShardingPlan(tp_axes=("model",))
+    small = estimate(build_step_program(get_config("qwen1.5-0.5b"), shape,
+                                        plan, CC), CC).total
+    big = estimate(build_step_program(get_config("qwen1.5-4b"), shape,
+                                      plan, CC), CC).total
+    assert big > 3 * small

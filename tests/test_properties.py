@@ -1,0 +1,89 @@
+"""Hypothesis property tests on the cost model's invariants."""
+import math
+
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (Collective, Compute, GenericBlock, Program, estimate,
+                        single_chip_config, single_pod_config)
+from repro.core.linalg_ops import collective_cost, profile
+from repro.core.symbols import MemState, TensorStat
+
+CC = single_chip_config()
+POD = single_pod_config()
+
+dims = st.integers(min_value=1, max_value=512).map(lambda x: x * 8)
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=dims, k=dims, n=dims)
+def test_matmul_flops_formula(m, k, n):
+    prof = profile("matmul", [TensorStat((m, k)), TensorStat((k, n))])
+    assert prof.flops == 2.0 * m * k * n
+    assert prof.out.shape == (m, n)
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=dims, n=dims)
+def test_tsmm_always_half_of_matmul(m, n):
+    t = profile("tsmm", [TensorStat((m, n))])
+    mm = profile("matmul", [TensorStat((n, m)), TensorStat((m, n))])
+    assert t.flops == 0.5 * mm.flops
+
+
+@settings(max_examples=50, deadline=None)
+@given(m=dims, n=dims, s=st.floats(min_value=0.01, max_value=1.0))
+def test_cost_monotone_in_size_and_sparsity(m, n, s):
+    """More cells or higher density never cost less."""
+    small = TensorStat((m, n), sparsity=s)
+    big = TensorStat((m * 2, n), sparsity=s)
+    denser = TensorStat((m, n), sparsity=min(1.0, s * 2))
+
+    def cost(stat):
+        p = Program("t", blocks=[GenericBlock("b", [
+            Compute("tsmm", ("X",), "A", exec_type="CP")])],
+            inputs={"X": stat})
+        return estimate(p, CC).total
+
+    assert cost(big) >= cost(small)
+    assert cost(denser) >= cost(small)
+
+
+@settings(max_examples=50, deadline=None)
+@given(payload=st.floats(min_value=1.0, max_value=1e9),
+       n=st.integers(min_value=2, max_value=512))
+def test_collective_formulas_positive_and_ordered(payload, n):
+    bw, lat = 45e9, 1e-6
+    ar = collective_cost("all_reduce", payload, n, bw, lat)
+    rs = collective_cost("reduce_scatter", payload, n, bw, lat)
+    ag = collective_cost("all_gather", payload, n, bw, lat)
+    pm = collective_cost("permute", payload, n, bw, lat)
+    assert ar > 0 and rs > 0 and ag > 0 and pm > 0
+    # all_reduce == reduce_scatter + all_gather of the scattered shard
+    ag_shard = collective_cost("all_gather", payload / n, n, bw, lat)
+    assert math.isclose(ar, rs + ag_shard, rel_tol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(n_ops=st.integers(min_value=1, max_value=20))
+def test_block_cost_is_sum_of_children(n_ops):
+    x = TensorStat((256, 256))
+    ops = [Compute("unary", ("X",), f"Y{i}", exec_type="CP")
+           for i in range(n_ops)]
+    p = Program("t", blocks=[GenericBlock("b", ops)], inputs={"X": x})
+    costed = estimate(p, CC)
+    child_sum = sum(c.cost.total for c in costed.root.children[0].children)
+    assert math.isclose(costed.total, child_sum, rel_tol=1e-9)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sh=st.sampled_from([1, 2, 4, 8, 16]))
+def test_sharded_collective_payload_scales(sh):
+    x = TensorStat((4096, 4096), "float32", shards=sh)
+    p = Program("t", blocks=[GenericBlock("b", [
+        Collective("all_reduce", "X", ("data",))])], inputs={"X": x})
+    t = estimate(p, POD).total
+    x1 = TensorStat((4096, 4096), "float32", shards=1)
+    p1 = Program("t", blocks=[GenericBlock("b", [
+        Collective("all_reduce", "X", ("data",))])], inputs={"X": x1})
+    t1 = estimate(p1, POD).total
+    assert t <= t1 + 1e-12

@@ -1,0 +1,60 @@
+"""Straggler monitor + cost-based re-mesh decision."""
+import numpy as np
+
+from repro.core.cluster import single_pod_config
+from repro.runtime.straggler import (StepTimeMonitor, StragglerVerdict,
+                                     decide_remesh)
+
+
+def feed(monitor, healthy, slow_entity=None, slow_factor=1.0, steps=16,
+         n_entities=8):
+    rng = np.random.default_rng(0)
+    for _ in range(steps):
+        times = {e: healthy * (1 + 0.02 * rng.standard_normal())
+                 for e in range(n_entities)}
+        if slow_entity is not None:
+            times[slow_entity] *= slow_factor
+        monitor.record(times)
+
+
+def test_no_false_positive_on_healthy_cluster():
+    m = StepTimeMonitor()
+    feed(m, 0.5)
+    v = m.detect()
+    assert not v.is_straggler
+
+
+def test_detects_single_slow_host():
+    m = StepTimeMonitor()
+    feed(m, 0.5, slow_entity=3, slow_factor=1.8)
+    v = m.detect()
+    assert v.is_straggler
+    assert v.slow_entities == [3]
+    assert 1.5 < v.slowdown < 2.1
+
+
+def test_warmup_period_defers_judgement():
+    m = StepTimeMonitor(min_samples=8)
+    feed(m, 0.5, slow_entity=1, slow_factor=3.0, steps=3)
+    assert not m.detect().is_straggler
+
+
+def test_cost_based_decision_remesh_when_slowdown_large():
+    cc = single_pod_config()
+    v = StragglerVerdict(True, [3], slowdown=2.5, action="detected")
+    out = decide_remesh(v, cc=cc, healthy_step_time=2.0,
+                        remaining_steps=50_000,
+                        checkpoint_bytes_per_device=2e9,
+                        excluded_fraction=1 / 16)
+    assert out.action == "remesh"
+    assert "C(tolerate)" in out.detail
+
+
+def test_cost_based_decision_tolerate_when_nearly_done():
+    cc = single_pod_config()
+    v = StragglerVerdict(True, [3], slowdown=1.2, action="detected")
+    out = decide_remesh(v, cc=cc, healthy_step_time=2.0,
+                        remaining_steps=10,
+                        checkpoint_bytes_per_device=2e9,
+                        excluded_fraction=1 / 16)
+    assert out.action == "tolerate"
