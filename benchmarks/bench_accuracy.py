@@ -46,11 +46,12 @@ def _execute(sc: Scenario) -> float:
     return time.perf_counter() - t0
 
 
-def run() -> List[str]:
+def run(quick: bool = False) -> List[str]:
     cc = cpu_host_config()
     rows = []
     worst = 1.0
-    for sc in CPU_SCENARIOS:
+    scenarios = CPU_SCENARIOS[:1] if quick else CPU_SCENARIOS
+    for sc in scenarios:
         prog, _ = build_linreg_program(sc, cc, BUDGETS)
         costed = estimate(prog, cc)
         # compare compute-side estimate vs in-memory execution (inputs are

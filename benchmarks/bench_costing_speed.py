@@ -5,6 +5,16 @@ runtime plans feasible."
 Measures generate+cost time for (a) the LinReg DS plan (the paper's
 "common DAG size") and (b) full LM train-step plans (hundreds of
 instructions) — reported as us/plan.
+
+Beyond the paper, this also gates the plan-search subsystem:
+
+  * ``candidate_set`` — costing the full enumerated sharding-plan space
+    for one (arch x shape) cell through the sub-plan cost cache vs. the
+    uncached estimator (the seed path).  Both sides use the harness's
+    warm-cache protocol; PASS requires the cached engine to be >=5x
+    faster.
+  * ``beam_matches_exhaustive`` — the staged beam search must return the
+    same winning plan as the exhaustive scan.
 """
 from __future__ import annotations
 
@@ -12,10 +22,11 @@ import time
 from typing import List
 
 from repro.configs import SHAPES, get_config
-from repro.core import estimate
+from repro.core import PlanCostCache, estimate
 from repro.core.cluster import ClusterConfig, CPU_HOST, single_pod_config
 from repro.core.linreg import SCENARIOS, build_linreg_program
-from repro.core.planner import ShardingPlan, build_step_program
+from repro.core.planner import (SearchStats, ShardingPlan, build_step_program,
+                                choose_plan, enumerate_plans)
 
 PAPER_CC = ClusterConfig(chip=CPU_HOST, mesh_shape=(72,), mesh_axes=("data",))
 
@@ -28,7 +39,7 @@ def _time_us(fn, reps: int = 20) -> float:
     return (time.perf_counter() - t0) / reps * 1e6
 
 
-def run() -> List[str]:
+def run(quick: bool = False) -> List[str]:
     rows = []
     sc = SCENARIOS["XL1"]
     us = _time_us(lambda: estimate(build_linreg_program(sc, PAPER_CC)[0],
@@ -38,7 +49,9 @@ def run() -> List[str]:
 
     cc = single_pod_config()
     plan = ShardingPlan(tp_axes=("model",), microbatches=2)
-    for arch_id in ("qwen1.5-0.5b", "deepseek-v3-671b"):
+    lm_archs = ("qwen1.5-0.5b",) if quick else ("qwen1.5-0.5b",
+                                                "deepseek-v3-671b")
+    for arch_id in lm_archs:
         arch = get_config(arch_id)
         shape = SHAPES["train_4k"]
         us = _time_us(lambda: estimate(
@@ -47,4 +60,45 @@ def run() -> List[str]:
                      .count_instructions().values())
         rows.append(f"costing_speed.lm_step.{arch_id},{us:.1f},"
                     f"instructions={n_inst}")
+
+    # ---- candidate-set costing: cached engine vs. uncached (seed) path ----
+    arch = get_config("qwen1.5-0.5b")
+    shape = SHAPES["train_4k"]
+    cands = enumerate_plans(arch, shape, cc)
+
+    def cost_set(cache):
+        return [estimate(build_step_program(arch, shape, p, cc), cc,
+                         cache=cache)
+                for p in cands]
+
+    reps = 2 if quick else 5
+    us_uncached = _time_us(lambda: cost_set(None), reps=reps)
+    shared = PlanCostCache()
+    us_cached = _time_us(lambda: cost_set(shared), reps=reps)
+    base = cost_set(None)
+    cached = cost_set(shared)
+    exact = max(abs(a.total - b.total) for a, b in zip(base, cached))
+    speedup = us_uncached / us_cached if us_cached > 0 else float("inf")
+    st = shared.stats()
+    rows.append(
+        f"costing_speed.candidate_set,{us_cached:.1f},"
+        f"n_plans={len(cands)};uncached_us={us_uncached:.1f};"
+        f"speedup={speedup:.1f}x;max_abs_err={exact:.2g};"
+        f"cache_hit_rate={st.hit_rate:.2f};claim=5x;"
+        f"{'PASS' if speedup >= 5.0 and exact < 1e-9 else 'FAIL'}")
+
+    # ---- beam search returns the exhaustive winner ------------------------
+    for arch_id in ("qwen1.5-0.5b", "gemma3-12b"):
+        arch = get_config(arch_id)
+        stats = SearchStats()
+        t0 = time.perf_counter()
+        bm = choose_plan(arch, shape, cc, top_k=1, search="beam",
+                         stats=stats)[0]
+        t_beam_us = (time.perf_counter() - t0) * 1e6
+        ex = choose_plan(arch, shape, cc, top_k=1, search="exhaustive")[0]
+        match = "MATCH" if bm.plan == ex.plan else "MISMATCH"
+        rows.append(
+            f"costing_speed.beam_matches_exhaustive.{arch_id},{t_beam_us:.0f},"
+            f"winner={bm.plan.describe()};{stats.describe()};"
+            f"n_space={len(enumerate_plans(arch, shape, cc))};{match}")
     return rows

@@ -17,7 +17,7 @@ PAPER_CC = ClusterConfig(chip=CPU_HOST, mesh_shape=(72,), mesh_axes=("data",),
                          dispatch_latency=20.0)
 
 
-def run() -> List[str]:
+def run(quick: bool = False) -> List[str]:
     rows = []
     for name in ("XS", "XL1"):
         prog, _ = build_linreg_program(SCENARIOS[name], PAPER_CC)

@@ -46,7 +46,7 @@ def describe(d) -> str:
     return ";".join(parts)
 
 
-def run() -> List[str]:
+def run(quick: bool = False) -> List[str]:
     rows = []
     for d in load_artifacts():
         cell = f"{d['arch']}|{d['shape']}|{d['mesh']}"

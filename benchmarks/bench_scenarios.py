@@ -1,9 +1,15 @@
-"""Paper Table 1 + §2: LinReg DS plan generation across the five scenarios.
+"""Paper Table 1 + §2: LinReg DS plan generation across the five scenarios,
+plus the LM-scale scenario sweep.
 
-Emits one row per scenario: the selected execution type / physical
+Emits one row per LinReg scenario: the selected execution type / physical
 operators and the estimated cost — must reproduce the paper's plan
 switches (XS: CP+tsmm; XL1: tsmm+ak+ & mapmm w/ partitioned broadcast;
 XL2: cpmm Gram; XL3: cpmm for X^T y; XL4: both cpmm).
+
+Then one ``sweep.<arch>|<shape>|<mesh>`` row per LM scenario-sweep cell
+(see :mod:`repro.core.sweep`): the beam-searched best sharding plan, its
+estimated step time / HBM, and the search+cache counters — all cells
+costed through one shared sub-plan cache.
 """
 from __future__ import annotations
 
@@ -14,6 +20,11 @@ from repro.core import estimate
 from repro.core.cluster import ClusterConfig, CPU_HOST, single_pod_config
 from repro.core.linreg import (PAPER_BUDGETS, SCENARIOS, build_linreg_program,
                                tpu_budgets)
+from repro.core.sweep import SweepEngine, sweep_rows
+
+SWEEP_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b")
+SWEEP_SHAPES = ("train_4k", "decode_32k")
+SWEEP_CLUSTERS = ("pod", "2pod")
 
 PAPER_CC = ClusterConfig(chip=CPU_HOST, mesh_shape=(72,), mesh_axes=("data",),
                          dispatch_latency=20.0)
@@ -27,7 +38,7 @@ EXPECTED = {
 }
 
 
-def run() -> List[str]:
+def run(quick: bool = False) -> List[str]:
     rows = []
     for name, sc in SCENARIOS.items():
         t0 = time.perf_counter()
@@ -48,4 +59,15 @@ def run() -> List[str]:
         rows.append(f"scenarios_tpu.{name},0,"
                     f"exec={choice.exec_type};tsmm={choice.tsmm_op};"
                     f"C={costed.total:.4f}s")
+
+    # LM scenario sweep: every (arch x shape x mesh) cell through one
+    # shared plan-cost cache, ranked fastest-first
+    engine = SweepEngine(search="beam")
+    cells = engine.sweep(SWEEP_ARCHS[:1] if quick else SWEEP_ARCHS,
+                         SWEEP_SHAPES,
+                         SWEEP_CLUSTERS[:1] if quick else SWEEP_CLUSTERS)
+    rows.extend(sweep_rows(cells))
+    st = engine.cache.stats()
+    rows.append(f"sweep.cache,0,hits={st.hits};lookups={st.hits + st.misses};"
+                f"hit_rate={st.hit_rate:.2f};entries={st.entries}")
     return rows

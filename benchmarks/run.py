@@ -1,19 +1,48 @@
 """Benchmark harness: one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows:
-  * bench_scenarios     — Table 1 / §2 plan generation across scales
+  * bench_scenarios     — Table 1 / §2 LinReg plan generation across scales,
+                          then the LM scenario sweep: one
+                          ``sweep.<arch>|<shape>|<mesh>`` row per grid cell
+                          with ``best=<plan>;T=<ms>;hbm=<GB>;feas=<bool>;
+                          costed=<n>;pruned=<n>;cache=<hits>/<lookups>``,
+                          ranked fastest-first, plus a ``sweep.cache``
+                          summary row for the shared sub-plan cache
   * bench_plan_costing  — Figures 4 & 5 costed plans
   * bench_accuracy      — §3.4 "within 2x of actual execution time"
-  * bench_costing_speed — §2 "<0.5 ms to generate+cost a plan"
+  * bench_costing_speed — §2 "<0.5 ms to generate+cost a plan", plus the
+                          plan-search gates: ``candidate_set`` (cached
+                          engine must be >=5x the uncached path on an
+                          enumerated candidate set, bit-exact) and
+                          ``beam_matches_exhaustive`` per config
   * bench_roofline      — (beyond paper) roofline terms per dry-run cell
+
+``--quick`` shrinks every module to tiny configs (CI smoke tier); any
+module that raises prints an ``EXCEPTION`` row and the run exits non-zero.
 """
 from __future__ import annotations
 
+import argparse
+import os
 import sys
 import traceback
 
+# Make `python benchmarks/run.py` work from anywhere: the repo root (for
+# the benchmarks package) and src/ (for repro) both belong on sys.path.
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+for _p in (_ROOT, os.path.join(_ROOT, "src")):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="tiny configs / fewer reps (CI benchmark smoke)")
+    ap.add_argument("--only", default=None,
+                    help="run a single module (e.g. costing_speed)")
+    args = ap.parse_args()
+
     from benchmarks import (bench_accuracy, bench_costing_speed,
                             bench_plan_costing, bench_roofline,
                             bench_scenarios)
@@ -24,11 +53,15 @@ def main() -> None:
         ("costing_speed", bench_costing_speed),
         ("roofline", bench_roofline),
     ]
+    if args.only:
+        mods = [(n, m) for n, m in mods if n == args.only]
+        if not mods:
+            sys.exit(f"unknown module {args.only!r}")
     print("name,us_per_call,derived")
     failures = 0
     for name, mod in mods:
         try:
-            for row in mod.run():
+            for row in mod.run(quick=args.quick):
                 print(row, flush=True)
         except Exception:
             failures += 1

@@ -13,8 +13,8 @@ from repro.core.cluster import (ClusterConfig, ChipSpec, TPU_V5E, CPU_HOST,
                                 single_pod_config, multi_pod_config,
                                 single_chip_config, cpu_host_config,
                                 dtype_bytes)
-from repro.core.costmodel import (CostBreakdown, CostEstimator, CostedProgram,
-                                  estimate)
+from repro.core.costmodel import (CacheStats, CostBreakdown, CostEstimator,
+                                  CostedProgram, PlanCostCache, estimate)
 from repro.core.explain import explain
 from repro.core.hlo_cost import (CompiledCost, CollectiveStat, from_compiled,
                                  lower_and_cost, parse_collectives)
@@ -22,19 +22,24 @@ from repro.core.plan import (Block, Call, Collective, Compute, CpVar,
                              CreateVar, DataGen, ForBlock, FunctionBlock,
                              GenericBlock, IfBlock, Instruction, IO, JitCall,
                              ParForBlock, Program, RmVar, WhileBlock)
-from repro.core.planner import (PlanDecision, ShardingPlan, build_step_program,
-                                choose_plan, enumerate_plans, estimate_hbm)
+from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
+                                build_step_program, choose_plan,
+                                enumerate_plans, estimate_hbm)
 from repro.core.symbols import MemState, SymbolTable, TensorStat
+from repro.core.sweep import (SweepCell, SweepEngine, format_table,
+                              rank_cells, sweep_rows)
 
 __all__ = [
     "ClusterConfig", "ChipSpec", "TPU_V5E", "CPU_HOST", "single_pod_config",
     "multi_pod_config", "single_chip_config", "cpu_host_config", "dtype_bytes",
-    "CostBreakdown", "CostEstimator", "CostedProgram", "estimate", "explain",
+    "CacheStats", "CostBreakdown", "CostEstimator", "CostedProgram",
+    "PlanCostCache", "estimate", "explain",
     "CompiledCost", "CollectiveStat", "from_compiled", "lower_and_cost",
     "parse_collectives", "Block", "Call", "Collective", "Compute", "CpVar",
     "CreateVar", "DataGen", "ForBlock", "FunctionBlock", "GenericBlock",
     "IfBlock", "Instruction", "IO", "JitCall", "ParForBlock", "Program",
-    "RmVar", "WhileBlock", "PlanDecision", "ShardingPlan",
+    "RmVar", "WhileBlock", "PlanDecision", "SearchStats", "ShardingPlan",
     "build_step_program", "choose_plan", "enumerate_plans", "estimate_hbm",
     "MemState", "SymbolTable", "TensorStat",
+    "SweepCell", "SweepEngine", "format_table", "rank_cells", "sweep_rows",
 ]

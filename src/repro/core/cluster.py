@@ -184,6 +184,27 @@ class ClusterConfig:
     def with_overlap(self, fraction: float) -> "ClusterConfig":
         return dataclasses.replace(self, overlap_fraction=float(fraction))
 
+    def fingerprint(self) -> Tuple:
+        """Hashable identity over every field the cost model may consult —
+        part of the sub-plan memoization key.  Cached on the instance (the
+        dataclass is frozen, so the fields can never drift)."""
+        fp = getattr(self, "_fp", None)
+        if fp is None:
+            chip = self.chip
+            fp = (chip.name, tuple(sorted(chip.peak_flops.items())),
+                  chip.hbm_bytes, chip.hbm_bw, chip.vmem_bytes,
+                  chip.ici_bw_per_link, chip.ici_links_per_axis, chip.pcie_bw,
+                  chip.host_dram_bw, chip.disk_bw, chip.dcn_bw,
+                  self.mesh_shape, self.mesh_axes, self.dispatch_latency,
+                  self.collective_phase_latency, self.host_callback_latency,
+                  self.matmul_util, self.small_matmul_util, self.vpu_util,
+                  self.hbm_eff, self.ici_eff, self.dcn_eff,
+                  self.overlap_fraction, self.hbm_budget_fraction,
+                  self.default_loop_iterations,
+                  tuple(self.default_branch_weights))
+            object.__setattr__(self, "_fp", fp)
+        return fp
+
 
 # Canonical configs used throughout the repo ---------------------------------
 

@@ -13,6 +13,15 @@ Single recursive pass over the runtime plan in execution order:
   * linearizes everything into one scalar, estimated execution time (R2).
 
 Costs are *per-program-run* wall-clock seconds given a cluster config.
+
+Sub-plan memoization (beyond the paper, in its spirit — §2 argues costing
+must be cheap enough to sit inside enumerating optimizers): pass a
+:class:`PlanCostCache` to :func:`estimate` and repeated sub-plans — the
+per-layer ``ForBlock`` body, shared program prefixes, identical candidates'
+common blocks — are costed once and replayed afterwards.  Cache keys are
+(structural node signature, symbol-table read-set fingerprint, cluster
+fingerprint), so a hit is *exact*: same cost, same symbol-table effects,
+same peak-HBM excursion.
 """
 from __future__ import annotations
 
@@ -25,7 +34,7 @@ from repro.core.cluster import ClusterConfig
 from repro.core.plan import (
     Block, Call, Collective, Compute, CpVar, CreateVar, DataGen, ForBlock,
     FunctionBlock, GenericBlock, IfBlock, Instruction, IO, JitCall,
-    ParForBlock, Program, RmVar, WhileBlock,
+    ParForBlock, Program, RmVar, WhileBlock, node_signature,
 )
 from repro.core.symbols import MemState, SymbolTable, TensorStat
 
@@ -78,12 +87,74 @@ class CostedProgram:
                 f"lat={self.breakdown.latency:.4g}, peak_hbm={self.peak_hbm_per_device/1e9:.3g}GB)")
 
 
+@dataclasses.dataclass(frozen=True)
+class CacheStats:
+    hits: int
+    misses: int
+    entries: int
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.hits + self.misses
+        return self.hits / n if n else 0.0
+
+
+class _CacheEntry:
+    __slots__ = ("reads", "net", "hbm_delta", "max_rel_hbm", "node")
+
+    def __init__(self, reads, net, hbm_delta, max_rel_hbm, node):
+        self.reads = reads           # name -> stat sig at first read (or None)
+        self.net = net               # name -> final stat (None == removed)
+        self.hbm_delta = hbm_delta   # net live-HBM change of the walk
+        self.max_rel_hbm = max_rel_hbm
+        self.node = node             # the CostedNode produced by the walk
+
+
+class PlanCostCache:
+    """Sub-plan cost memoization, shared across :func:`estimate` calls.
+
+    Maps (node signature, cluster/functions fingerprint, call stack) to a
+    small list of entries, each guarded by the symbol-table read-set
+    fingerprint its walk observed (the same block is typically seen in a
+    handful of states: cold first iteration, warm iterations, ...).  One
+    cache serves any number of programs and cluster configs — keys embed
+    both — which is what lets a plan-enumerating optimizer or a scenario
+    sweep share work across candidates.
+    """
+
+    def __init__(self) -> None:
+        self._buckets: Dict[Tuple, List[_CacheEntry]] = {}
+        self.hits = 0
+        self.misses = 0
+
+    @property
+    def entries(self) -> int:
+        return sum(len(b) for b in self._buckets.values())
+
+    def stats(self) -> CacheStats:
+        return CacheStats(self.hits, self.misses, self.entries)
+
+    def clear(self) -> None:
+        self._buckets.clear()
+        self.hits = 0
+        self.misses = 0
+
+
+# Node kinds worth memoizing: blocks (arbitrarily large sub-walks) and the
+# instructions with non-trivial math (op profiling / collective formulas).
+# Meta instructions (createvar & co) are cheaper to execute than to probe.
+_CACHEABLE = (GenericBlock, ForBlock, WhileBlock, ParForBlock,
+              Compute, Collective, JitCall)
+
+
 class CostEstimator:
     """Walks a :class:`Program` and produces a :class:`CostedProgram`."""
 
-    def __init__(self, cc: ClusterConfig, verbose: bool = False):
+    def __init__(self, cc: ClusterConfig, verbose: bool = False,
+                 cache: Optional[PlanCostCache] = None):
         self.cc = cc
         self.verbose = verbose
+        self.cache = cache
 
     # ------------------------------------------------------------------ API
     def estimate(self, program: Program) -> CostedProgram:
@@ -92,6 +163,9 @@ class CostEstimator:
             symtab.createvar(name, stat)
         self._peak_hbm = symtab.live_hbm_bytes()
         self._functions = program.functions
+        if self.cache is not None:
+            self._ctx_fp = (self.cc.fingerprint(),
+                            program.functions_signature())
         root = CostedNode(f"PROGRAM {program.name}", CostBreakdown())
         total = CostBreakdown()
         for node in program.blocks:
@@ -104,6 +178,45 @@ class CostEstimator:
     # ------------------------------------------------------- block walkers
     def _cost_node(self, node: Union[Instruction, Block], symtab: SymbolTable,
                    stack: Tuple[str, ...]) -> CostedNode:
+        if self.cache is not None and isinstance(node, _CACHEABLE):
+            return self._cost_cached(node, symtab, stack)
+        return self._cost_node_direct(node, symtab, stack)
+
+    def _cost_cached(self, node, symtab: SymbolTable,
+                     stack: Tuple[str, ...]) -> CostedNode:
+        cache = self.cache
+        key = (node_signature(node), self._ctx_fp, stack)
+        bucket = cache._buckets.get(key)
+        if bucket is not None:
+            for i, entry in enumerate(bucket):
+                if symtab.matches(entry.reads):
+                    cache.hits += 1
+                    if i:            # move-to-front: states recur in runs
+                        del bucket[i]
+                        bucket.insert(0, entry)
+                    peak = symtab.replay(entry.reads, entry.net,
+                                         entry.hbm_delta, entry.max_rel_hbm)
+                    if peak > self._peak_hbm:
+                        self._peak_hbm = peak
+                    return entry.node
+        cache.misses += 1
+        rec = symtab.begin_record()
+        try:
+            cn = self._cost_node_direct(node, symtab, stack)
+            net = symtab.net_delta(rec)
+            hbm_delta = symtab.live_hbm_bytes() - rec.start_hbm
+        finally:
+            symtab.end_record(rec)
+        if not rec.poisoned:
+            if bucket is None:
+                bucket = cache._buckets.setdefault(key, [])
+            bucket.append(_CacheEntry(rec.reads, net, hbm_delta,
+                                      rec.max_rel_hbm, cn))
+        return cn
+
+    def _cost_node_direct(self, node: Union[Instruction, Block],
+                          symtab: SymbolTable,
+                          stack: Tuple[str, ...]) -> CostedNode:
         if isinstance(node, Instruction):
             return self._cost_instruction(node, symtab, stack)
         if isinstance(node, GenericBlock):
@@ -365,6 +478,8 @@ def _path_legs(src: MemState, dst: MemState) -> List[str]:
     return list(reversed(legs_up[(b, a)]))
 
 
-def estimate(program: Program, cc: ClusterConfig) -> CostedProgram:
-    """Convenience wrapper: ``C(P, cc)``."""
-    return CostEstimator(cc).estimate(program)
+def estimate(program: Program, cc: ClusterConfig,
+             cache: Optional[PlanCostCache] = None) -> CostedProgram:
+    """Convenience wrapper: ``C(P, cc)``; pass ``cache`` to memoize
+    repeated sub-plans across (and within) programs."""
+    return CostEstimator(cc, cache=cache).estimate(program)

@@ -227,6 +227,12 @@ class Program:
     # Variables that exist before the program runs (persistent inputs).
     inputs: Dict[str, TensorStat] = dataclasses.field(default_factory=dict)
 
+    def functions_signature(self) -> Tuple:
+        """Hashable identity of the function table (part of the cache key:
+        two programs may bind the same function name to different bodies)."""
+        return tuple(sorted((name, node_signature(fb))
+                            for name, fb in self.functions.items()))
+
     def count_instructions(self) -> Dict[str, int]:
         counts: Dict[str, int] = {}
 
@@ -249,3 +255,84 @@ class Program:
         for f in self.functions.values():
             walk(f.body)
         return counts
+
+
+# ---------------------------------------------------------------------------
+# Hashable plan signatures (cost-memoization keys)
+# ---------------------------------------------------------------------------
+#
+# ``node_signature`` gives every plan node a structural identity: two nodes
+# with equal signatures cost identically under the same symbol-table state
+# and cluster config.  Signatures are computed once per node object and
+# cached on the instance — plan nodes must not be mutated after costing
+# begins (they never are: generation builds a plan, costing only reads it).
+
+
+def _attrs_sig(attrs: Dict[str, Any]) -> Tuple:
+    return tuple(sorted(attrs.items()))
+
+
+def node_signature(node) -> Tuple:
+    sig = getattr(node, "_sig", None)
+    if sig is None:
+        sig = _compute_signature(node)
+        node._sig = sig
+    return sig
+
+
+def _sig_list(nodes) -> Tuple:
+    return tuple(node_signature(n) for n in nodes)
+
+
+def _compute_signature(node) -> Tuple:
+    if isinstance(node, CreateVar):
+        return ("cv", node.name, node.stat.sig)
+    if isinstance(node, CpVar):
+        return ("cp", node.src, node.dst)
+    if isinstance(node, RmVar):
+        return ("rm", node.names)
+    if isinstance(node, DataGen):
+        return ("dg", node.opcode, node.output, node.stat.sig)
+    if isinstance(node, Compute):
+        return ("c", node.opcode, node.inputs, node.output, node.exec_type,
+                node.shard_axes, _attrs_sig(node.attrs))
+    if isinstance(node, IO):
+        return ("io", node.op, node.var, node.src.value, node.dst.value,
+                node.serialized)
+    if isinstance(node, Collective):
+        return ("co", node.kind, node.var, node.axes, node.output,
+                node.bytes_override)
+    if isinstance(node, JitCall):
+        return ("jit", node.name, node.reads, node.writes, node.donated,
+                _compiled_cost_sig(node.compiled_cost))
+    if isinstance(node, Call):
+        return ("call", node.func)
+    if isinstance(node, GenericBlock):
+        return ("g", node.label, _sig_list(node.children))
+    if isinstance(node, ForBlock):
+        return ("for", node.label, node.iterations,
+                _sig_list(node.predicate), _sig_list(node.body))
+    if isinstance(node, WhileBlock):
+        return ("while", node.label, node.iterations,
+                _sig_list(node.predicate), _sig_list(node.body))
+    if isinstance(node, ParForBlock):
+        return ("parfor", node.label, node.iterations, node.parallelism,
+                _sig_list(node.body))
+    if isinstance(node, IfBlock):
+        return ("if", node.label,
+                tuple(node.weights) if node.weights else None,
+                _sig_list(node.predicate),
+                tuple(_sig_list(br) for br in node.branches))
+    if isinstance(node, FunctionBlock):
+        return ("fn", node.name, _sig_list(node.body))
+    raise TypeError(f"unsignable plan node {type(node)}")
+
+
+def _compiled_cost_sig(cost) -> Tuple:
+    """Content signature for a JitCall's CompiledCost (pure-data record)."""
+    colls = tuple((c.kind, c.operand_bytes, c.result_bytes, c.group_size)
+                  for c in getattr(cost, "collectives", ()))
+    return (getattr(cost, "name", ""), getattr(cost, "flops_per_device", 0.0),
+            getattr(cost, "bytes_per_device", 0.0),
+            getattr(cost, "num_devices", 1),
+            getattr(cost, "dispatch_count", 1), colls)

@@ -28,7 +28,8 @@ from typing import Dict, List, Optional, Sequence, Tuple
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig, dtype_bytes
-from repro.core.costmodel import CostedProgram, estimate
+from repro.core.costmodel import (CacheStats, CostedProgram, PlanCostCache,
+                                  estimate)
 from repro.core.plan import (Collective, Compute, CreateVar, DataGen, ForBlock,
                              GenericBlock, IO, Program)
 from repro.core.symbols import MemState, TensorStat
@@ -411,9 +412,10 @@ def estimate_hbm(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         # params (+dp if fsdp); calibrated against compiled memory_analysis
         opt_shards = wsh * (dp if (fsdp > 1 or plan.zero1) else 1)
         mem += 4 * pc["total"] * 4 / max(opt_shards, wsh)
-        # gradients (fp32 accumulator when microbatching, else grad dtype)
-        gb = 4 if plan.microbatches > 1 else 4
-        mem += pc["total"] * gb / wsh
+        # gradients: resident fp32 accumulator regardless of microbatching
+        # (grad_reduce_dtype only changes the wire payload, not the buffer;
+        # calibrated against compiled memory_analysis)
+        mem += pc["total"] * 4 / wsh
         # activations saved for backward, per token per layer:
         #   replicated residual-stream parts (~d) + head/ff-sharded parts
         d = arch.d_model
@@ -485,44 +487,87 @@ class PlanDecision:
         return self.cost.total
 
 
-def enumerate_plans(arch: ArchConfig, shape: ShapeConfig,
-                    cc: ClusterConfig) -> List[ShardingPlan]:
-    """Candidate sharding plans for the fixed physical mesh of ``cc``."""
+@dataclasses.dataclass
+class SearchStats:
+    """Observability for one plan search: how many candidates were actually
+    costed vs. pruned, and how well the sub-plan cache worked."""
+
+    costed: int = 0
+    pruned_infeasible: int = 0   # skipped: cannot fit HBM even when frugal
+    pruned_dominated: int = 0    # skipped: a strictly better sibling exists
+    cache: Optional[CacheStats] = None
+
+    def describe(self) -> str:
+        bits = [f"costed={self.costed}",
+                f"pruned_oom={self.pruned_infeasible}",
+                f"pruned_dom={self.pruned_dominated}"]
+        if self.cache is not None:
+            bits.append(f"cache_hits={self.cache.hits}/"
+                        f"{self.cache.hits + self.cache.misses}")
+        return " ".join(bits)
+
+
+def _knob_space(shape: ShapeConfig) -> Tuple[List[str], List[int], List[str]]:
+    """The non-role decision knobs: remat x microbatches x grad dtype."""
+    if shape.mode == "train":
+        return (["none", "selective", "full"], [1, 2, 4, 8],
+                ["float32", "bfloat16"])
+    return (["none"], [1], ["float32"])
+
+
+def _model_roles(arch: ArchConfig, shape: ShapeConfig,
+                 cc: ClusterConfig) -> List[Dict]:
+    """Role assignments for the non-batch mesh axes (search stage 1)."""
     axes = cc.mesh_axes
     has_model = "model" in axes
-    has_pod = "pod" in axes
-    batch_base: Tuple[str, ...] = tuple(a for a in ("pod", "data") if a in axes)
-    plans: List[ShardingPlan] = []
-
-    remats = ["none", "selective", "full"] if shape.mode == "train" else ["none"]
-    micro_opts = [1, 2, 4, 8] if shape.mode == "train" else [1]
-    gdtypes = ["float32", "bfloat16"] if shape.mode == "train" else ["float32"]
-
-    model_roles: List[Dict] = [dict(name="dp+tp", tp=("model",))]
-    model_roles.append(dict(name="fsdp", fsdp=("model",)))
-    model_roles.append(dict(name="dp-pure", batch_extra=("model",)))
+    roles: List[Dict] = [dict(name="dp+tp", tp=("model",))]
+    roles.append(dict(name="fsdp", fsdp=("model",)))
+    roles.append(dict(name="dp-pure", batch_extra=("model",)))
     if arch.moe is not None and has_model:
-        model_roles.append(dict(name="dp+ep", ep=("model",)))
-        model_roles.append(dict(name="dp+ep+tp", ep=("model",), tp=("model",)))
+        roles.append(dict(name="dp+ep", ep=("model",)))
+        roles.append(dict(name="dp+ep+tp", ep=("model",), tp=("model",)))
     if shape.mode == "prefill":
-        model_roles.append(dict(name="dp+seq", seq=("model",)))
+        roles.append(dict(name="dp+seq", seq=("model",)))
+    if not has_model:
+        roles = [r for r in roles if r["name"] == "dp+tp"]
+    return roles
 
-    for role in model_roles:
-        if not has_model and role["name"] != "dp+tp":
-            continue
-        tp_axes = role.get("tp", ()) if has_model else ()
+
+def _batch_base(cc: ClusterConfig) -> Tuple[str, ...]:
+    return tuple(a for a in ("pod", "data") if a in cc.mesh_axes)
+
+
+def _role_plan(role: Dict, cc: ClusterConfig, remat: str, micro: int,
+               gd: str) -> ShardingPlan:
+    has_model = "model" in cc.mesh_axes
+    return ShardingPlan(
+        name=role["name"],
+        batch_axes=_batch_base(cc) + role.get("batch_extra", ()),
+        tp_axes=role.get("tp", ()) if has_model else (),
+        fsdp_axes=role.get("fsdp", ()),
+        ep_axes=role.get("ep", ()),
+        seq_axes=role.get("seq", ()),
+        remat=remat, microbatches=micro, grad_reduce_dtype=gd)
+
+
+def _micro_valid(role: Dict, shape: ShapeConfig, cc: ClusterConfig,
+                 micro: int) -> bool:
+    if micro == 1:
+        return True
+    base = _batch_base(cc) + role.get("batch_extra", ())
+    return shape.global_batch // (_deg(cc, base) * micro) >= 1
+
+
+def enumerate_plans(arch: ArchConfig, shape: ShapeConfig,
+                    cc: ClusterConfig) -> List[ShardingPlan]:
+    """The full candidate sharding-plan space for the fixed mesh of ``cc``."""
+    remats, micro_opts, gdtypes = _knob_space(shape)
+    plans: List[ShardingPlan] = []
+    for role in _model_roles(arch, shape, cc):
         for remat, micro, gd in itertools.product(remats, micro_opts, gdtypes):
-            if micro > 1 and shape.global_batch // (
-                    _deg(cc, batch_base + role.get("batch_extra", ())) * micro) < 1:
+            if not _micro_valid(role, shape, cc, micro):
                 continue
-            plans.append(ShardingPlan(
-                name=role["name"],
-                batch_axes=batch_base + role.get("batch_extra", ()),
-                tp_axes=tp_axes,
-                fsdp_axes=role.get("fsdp", ()),
-                ep_axes=role.get("ep", ()),
-                seq_axes=role.get("seq", ()),
-                remat=remat, microbatches=micro, grad_reduce_dtype=gd))
+            plans.append(_role_plan(role, cc, remat, micro, gd))
     # dedupe
     seen, out = set(), []
     for p in plans:
@@ -540,18 +585,151 @@ def _deg(cc: ClusterConfig, axes: Tuple[str, ...]) -> int:
     return d
 
 
+def _cost_candidate(arch: ArchConfig, shape: ShapeConfig, p: ShardingPlan,
+                    cc: ClusterConfig, cache: Optional[PlanCostCache],
+                    stats: SearchStats) -> PlanDecision:
+    cc_p = cc.with_overlap(0.7 if p.overlap else 0.0)
+    prog = build_step_program(arch, shape, p, cc_p)
+    costed = estimate(prog, cc_p, cache=cache)
+    hbm = estimate_hbm(arch, shape, p, cc_p)
+    stats.costed += 1
+    return PlanDecision(p, costed, hbm, hbm <= cc.hbm_budget)
+
+
+def _rank_key(d: PlanDecision) -> Tuple:
+    return (not d.feasible, d.time)
+
+
 def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
                 top_k: int = 5,
                 candidates: Optional[Sequence[ShardingPlan]] = None,
-                ) -> List[PlanDecision]:
-    """Rank candidate plans by C(P, cc); infeasible (OOM) plans sink."""
-    cands = list(candidates) if candidates is not None else enumerate_plans(arch, shape, cc)
-    decisions: List[PlanDecision] = []
-    for p in cands:
-        cc_p = cc.with_overlap(0.7 if p.overlap else 0.0)
-        prog = build_step_program(arch, shape, p, cc_p)
-        costed = estimate(prog, cc_p)
-        hbm = estimate_hbm(arch, shape, p, cc_p)
-        decisions.append(PlanDecision(p, costed, hbm, hbm <= cc.hbm_budget))
-    decisions.sort(key=lambda d: (not d.feasible, d.time))
-    return decisions[:top_k]
+                search: str = "beam", beam_width: int = 4,
+                cache: Optional[PlanCostCache] = None,
+                stats: Optional[SearchStats] = None) -> List[PlanDecision]:
+    """Pick the best sharding plans by ``C(P, cc)``; infeasible (OOM) sink.
+
+    ``search="beam"`` (default) runs the staged beam search over the
+    decision vector — axis roles, then remat/microbatch, then grad-dtype/
+    overlap — pruning HBM-infeasible and dominated prefixes without costing
+    them.  ``search="exhaustive"`` costs every enumerated candidate (the
+    seed behavior; also used whenever an explicit ``candidates`` list is
+    given).  Pass a shared :class:`PlanCostCache` to reuse sub-plan costs
+    across calls (scenario sweeps); by default each call gets a private
+    cache, which already dedupes the per-layer loop bodies shared between
+    candidates.
+    """
+    if stats is None:
+        stats = SearchStats()
+    if cache is None:
+        cache = PlanCostCache()
+    if candidates is not None or search == "exhaustive":
+        cands = (list(candidates) if candidates is not None
+                 else enumerate_plans(arch, shape, cc))
+        decisions = [_cost_candidate(arch, shape, p, cc, cache, stats)
+                     for p in cands]
+        decisions.sort(key=_rank_key)
+        stats.cache = cache.stats()
+        return decisions[:top_k]
+    if search != "beam":
+        raise ValueError(f"unknown search strategy {search!r}")
+    decisions = _beam_search(arch, shape, cc, top_k, beam_width, cache, stats)
+    stats.cache = cache.stats()
+    return decisions
+
+
+def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
+                 top_k: int, beam_width: int, cache: PlanCostCache,
+                 stats: SearchStats) -> List[PlanDecision]:
+    """Staged beam search over the sharding decision vector.
+
+    Stage 1 — axis roles, costed with neutral knobs (remat=none, micro=1,
+    fp32 grads).  A role whose *most frugal* completion (remat=full, max
+    microbatches) still exceeds the HBM budget is an infeasible prefix and
+    is dropped without expanding it — unless nothing fits, in which case
+    all roles stay so the caller sees the honest OOM ranking.
+
+    Stage 2 — remat x microbatch per surviving role.  For a fixed (role,
+    micro) the cost model makes recompute strictly slower and strictly
+    smaller, so every remat heavier than the lightest feasible one is
+    dominated and skipped without costing.
+
+    Stage 3 — grad-reduce dtype and collective overlap.  overlap=False is
+    dominated outright (the model can only discount collectives), so only
+    the dtype axis is expanded.
+    """
+    remats, micro_opts, gdtypes = _knob_space(shape)
+    budget = cc.hbm_budget
+
+    # ---- stage 1: axis roles --------------------------------------------
+    roles = _model_roles(arch, shape, cc)
+    stage1: List[Tuple[Dict, PlanDecision]] = []
+    kept: List[Tuple[Dict, PlanDecision]] = []
+    for role in roles:
+        d = _cost_candidate(arch, shape,
+                            _role_plan(role, cc, remats[0], 1, gdtypes[0]),
+                            cc, cache, stats)
+        stage1.append((role, d))
+        frugal_micro = max((m for m in micro_opts
+                            if _micro_valid(role, shape, cc, m)), default=1)
+        frugal = _role_plan(role, cc, remats[-1], frugal_micro, gdtypes[0])
+        if estimate_hbm(arch, shape, frugal, cc) <= budget:
+            kept.append((role, d))
+        else:
+            stats.pruned_infeasible += 1
+    if not kept:           # nothing can fit: keep every prefix, rank honestly
+        kept = stage1
+    kept.sort(key=lambda rd: _rank_key(rd[1]))
+    beam1 = kept[:beam_width]
+
+    # ---- stage 2: remat x microbatches ----------------------------------
+    stage2: List[PlanDecision] = []
+    oom_pairs: List[Tuple[Dict, int]] = []   # (role, micro) with no fit
+    for role, base_d in beam1:
+        for micro in micro_opts:
+            if not _micro_valid(role, shape, cc, micro):
+                continue
+            picked = None
+            for remat in remats:    # lightest-first: first fit dominates rest
+                if picked is not None:
+                    stats.pruned_dominated += 1
+                    continue
+                p = _role_plan(role, cc, remat, micro, gdtypes[0])
+                if estimate_hbm(arch, shape, p, cc) > budget:
+                    stats.pruned_infeasible += 1
+                    continue
+                if remat == remats[0] and micro == 1:
+                    picked = base_d          # already costed in stage 1
+                else:
+                    picked = _cost_candidate(arch, shape, p, cc, cache, stats)
+            if picked is not None:
+                stage2.append(picked)
+            else:
+                oom_pairs.append((role, micro))
+    if not any(d.feasible for d in stage2):
+        # Nothing fits: rank the infeasible space honestly.  Among plans
+        # that all OOM, the fastest has the lightest remat, so one
+        # representative per (role, micro) reproduces the exhaustive order.
+        for role, micro in oom_pairs:
+            p = _role_plan(role, cc, remats[0], micro, gdtypes[0])
+            if micro == 1:
+                d = next(d for r, d in beam1 if r is role)
+            else:
+                d = _cost_candidate(arch, shape, p, cc, cache, stats)
+            stage2.append(d)
+    stage2.sort(key=_rank_key)
+    beam2 = stage2[:beam_width]
+
+    # ---- stage 3: grad-reduce dtype (+ overlap, dominated) --------------
+    final: List[PlanDecision] = []
+    for d in beam2:
+        final.append(d)
+        for gd in gdtypes:
+            if gd == d.plan.grad_reduce_dtype:
+                continue
+            p = dataclasses.replace(d.plan, grad_reduce_dtype=gd)
+            final.append(_cost_candidate(arch, shape, p, cc, cache, stats))
+        # overlap=False is dominated outright (the model can only discount
+        # collectives) and is not part of the enumerated space — not
+        # expanded, and not counted against it either.
+    final.sort(key=_rank_key)
+    return final[:top_k]

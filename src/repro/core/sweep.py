@@ -1,0 +1,172 @@
+"""Scenario sweep engine: cost a grid of (config x shape x cluster).
+
+The ROADMAP's north star — "as fast as the hardware allows, as many
+scenarios as you can imagine" — needs plan costing cheap enough to run for
+*every* scenario an operator can dream up, not just the one in front of
+them.  This module turns the plan-search stack into exactly that: a grid
+of (architecture x input shape x cluster config) cells, each resolved to
+its best sharding plan by :func:`repro.core.planner.choose_plan`, all
+sharing one :class:`repro.core.costmodel.PlanCostCache` so sub-plans that
+repeat across scenarios (per-layer loop bodies, shared program prefixes,
+same-arch candidates under different knobs) are costed exactly once.
+
+The output is a ranked table — fastest feasible step time first, OOM
+cells sunk to the bottom, skipped cells (assignment rules) last — plus
+per-cell search statistics so regressions in pruning or cache behavior
+are visible in benchmarks and CI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.configs import SHAPES, get_config, shape_applicable
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.cluster import (ClusterConfig, multi_pod_config,
+                                single_pod_config)
+from repro.core.costmodel import CacheStats, PlanCostCache
+from repro.core.planner import PlanDecision, SearchStats, choose_plan
+
+# Named cluster shorthands accepted anywhere a cluster is given (pure
+# dataclass constants — building them never touches jax device state).
+CLUSTERS: Dict[str, ClusterConfig] = {
+    "pod": single_pod_config(),
+    "2pod": multi_pod_config(),
+}
+
+
+@dataclasses.dataclass
+class SweepCell:
+    """One costed scenario: the chosen plan plus search observability."""
+
+    arch_id: str
+    shape_id: str
+    cluster_id: str
+    decision: Optional[PlanDecision]     # None when the cell was skipped
+    stats: Optional[SearchStats]
+    elapsed_s: float = 0.0
+    skipped: str = ""                    # non-empty: why the cell was skipped
+
+    @property
+    def key(self) -> str:
+        return f"{self.arch_id}|{self.shape_id}|{self.cluster_id}"
+
+    @property
+    def time(self) -> float:
+        return self.decision.time if self.decision else float("inf")
+
+    @property
+    def feasible(self) -> bool:
+        return bool(self.decision and self.decision.feasible)
+
+
+class SweepEngine:
+    """Costs scenario grids through one shared sub-plan cache.
+
+    The engine is long-lived by design: successive :meth:`sweep` calls
+    (new shapes, a what-if cluster, one more architecture) keep hitting
+    the same cache, so the marginal cost of a new scenario drops toward
+    the cache-replay floor rather than paying full plan-walk price.
+    """
+
+    def __init__(self, search: str = "beam", beam_width: int = 4,
+                 cache: Optional[PlanCostCache] = None):
+        self.search = search
+        self.beam_width = beam_width
+        self.cache = cache if cache is not None else PlanCostCache()
+
+    def cost_cell(self, arch: Union[str, ArchConfig],
+                  shape: Union[str, ShapeConfig],
+                  cluster: Union[str, ClusterConfig],
+                  top_k: int = 1) -> SweepCell:
+        arch_id, arch = _resolve_arch(arch)
+        shape_id, shape = _resolve_shape(shape)
+        cluster_id, cc = _resolve_cluster(cluster)
+        ok, why = shape_applicable(arch, shape)
+        if not ok:
+            return SweepCell(arch_id, shape_id, cluster_id, None, None,
+                             skipped=why)
+        stats = SearchStats()
+        h0, m0 = self.cache.hits, self.cache.misses
+        t0 = time.perf_counter()
+        decisions = choose_plan(arch, shape, cc, top_k=top_k,
+                                search=self.search,
+                                beam_width=self.beam_width,
+                                cache=self.cache, stats=stats)
+        elapsed = time.perf_counter() - t0
+        # report this cell's marginal cache traffic, not the shared totals
+        stats.cache = CacheStats(self.cache.hits - h0,
+                                 self.cache.misses - m0, self.cache.entries)
+        return SweepCell(arch_id, shape_id, cluster_id, decisions[0], stats,
+                         elapsed)
+
+    def sweep(self, archs: Sequence[Union[str, ArchConfig]],
+              shapes: Sequence[Union[str, ShapeConfig]],
+              clusters: Sequence[Union[str, ClusterConfig]],
+              ) -> List[SweepCell]:
+        """Cost the full grid and return cells ranked fastest-first
+        (feasible before OOM, skipped cells last)."""
+        cells = [self.cost_cell(a, s, c)
+                 for c in clusters for a in archs for s in shapes]
+        return rank_cells(cells)
+
+
+def rank_cells(cells: Sequence[SweepCell]) -> List[SweepCell]:
+    return sorted(cells, key=lambda c: (bool(c.skipped), not c.feasible,
+                                        c.time))
+
+
+def format_table(cells: Sequence[SweepCell]) -> str:
+    """Render ranked cells as a fixed-width table (examples / EXPLAIN)."""
+    header = (f"{'#':>3} {'scenario':44s} {'step':>10} {'hbm/dev':>8} "
+              f"{'feas':>4}  {'chosen plan':40s} {'search':22s}")
+    lines = [header, "-" * len(header)]
+    for i, c in enumerate(rank_cells(cells), 1):
+        if c.skipped:
+            lines.append(f"{i:>3} {c.key:44s} {'--':>10} {'--':>8} "
+                         f"{'skip':>4}  {c.skipped[:64]}")
+            continue
+        d = c.decision
+        lines.append(
+            f"{i:>3} {c.key:44s} {d.time * 1e3:9.1f}ms "
+            f"{d.hbm_est / 1e9:7.1f}G {'y' if d.feasible else 'OOM':>4}  "
+            f"{d.plan.describe():40s} {c.stats.describe():22s}")
+    return "\n".join(lines)
+
+
+def sweep_rows(cells: Sequence[SweepCell]) -> List[str]:
+    """Benchmark-harness rows: ``sweep.<arch>|<shape>|<mesh>,us,derived``."""
+    rows = []
+    for c in rank_cells(cells):
+        if c.skipped:
+            rows.append(f"sweep.{c.key},0,SKIP;{c.skipped[:60]}")
+            continue
+        d = c.decision
+        st = c.stats
+        rows.append(
+            f"sweep.{c.key},{c.elapsed_s * 1e6:.0f},"
+            f"best={d.plan.describe()};T={d.time * 1e3:.2f}ms;"
+            f"hbm={d.hbm_est / 1e9:.1f}GB;feas={d.feasible};"
+            f"costed={st.costed};pruned={st.pruned_infeasible + st.pruned_dominated};"
+            f"cache={st.cache.hits}/{st.cache.hits + st.cache.misses}")
+    return rows
+
+
+def _resolve_arch(arch) -> Tuple[str, ArchConfig]:
+    if isinstance(arch, str):
+        return arch, get_config(arch)
+    return arch.name, arch
+
+
+def _resolve_shape(shape) -> Tuple[str, ShapeConfig]:
+    if isinstance(shape, str):
+        return shape, SHAPES[shape]
+    return shape.name, shape
+
+
+def _resolve_cluster(cluster) -> Tuple[str, ClusterConfig]:
+    if isinstance(cluster, str):
+        return cluster, CLUSTERS[cluster]
+    label = "x".join(str(s) for s in cluster.mesh_shape)
+    return f"{cluster.chip.name}[{label}]", cluster

@@ -24,6 +24,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams; accept either
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _ssd_kernel(xbar_ref, loga_ref, b_ref, c_ref, y_ref, state_out_ref,
                 state_ref, *, chunk: int, nc: int):
@@ -113,7 +117,7 @@ def ssd_scan_kernel(xbar: jax.Array, log_a: jax.Array, bmat: jax.Array,
             jax.ShapeDtypeStruct((b, h, p, n), jnp.float32),
         ],
         scratch_shapes=[pltpu.VMEM((p, n), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(xbar, log_a, bmat, cmat)

@@ -29,6 +29,10 @@ import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# pallas renamed TPUCompilerParams -> CompilerParams; accept either
+_CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams
+
 
 def _upper_pairs(nb: int) -> Tuple[np.ndarray, np.ndarray]:
     """Linearized upper-triangular block pairs (i <= j)."""
@@ -86,7 +90,7 @@ def tsmm_upper(x: jax.Array, *, bm: int = 512, bn: int = 256,
         functools.partial(_tsmm_kernel, k_steps=kk),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )

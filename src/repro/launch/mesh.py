@@ -15,13 +15,29 @@ import jax
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    # jax >= 0.5 takes axis_types (and defaults axes to Auto); 0.4.x has
+    # neither the kwarg nor jax.sharding.AxisType — same semantics either way
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))
+
+
+def abstract_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
+    """Version-portable jax.sharding.AbstractMesh (device-free mesh for
+    sharding-rule tests): jax 0.4.x wants ((name, size), ...) pairs, newer
+    jax wants (sizes, names)."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(shape), tuple(axes))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
 def make_host_mesh():

@@ -19,7 +19,15 @@ def _tiny(arch_id):
     return dataclasses.replace(get_config(arch_id).reduced(), dtype="float32")
 
 
-@pytest.mark.parametrize("arch_id", ARCH_IDS)
+# Two cheap-to-compile families stay in the fast tier as the smoke signal;
+# the rest jit-compile for tens of seconds each and run in the slow tier.
+FAST_ARCHS = ("qwen1.5-0.5b", "mamba2-1.3b")
+
+
+@pytest.mark.parametrize(
+    "arch_id",
+    [a if a in FAST_ARCHS else pytest.param(a, marks=pytest.mark.slow)
+     for a in ARCH_IDS])
 def test_forward_and_train_step(arch_id):
     cfg = _tiny(arch_id)
     model = build_model(cfg)

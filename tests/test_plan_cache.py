@@ -1,0 +1,167 @@
+"""Plan-search subsystem tests: sub-plan cost memoization (exactness, hit
+accounting, invalidation keys), the staged beam search vs. the exhaustive
+scan, and the scenario sweep engine."""
+import math
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core import (Compute, ForBlock, GenericBlock, IfBlock,
+                        PlanCostCache, Program, estimate, single_chip_config,
+                        single_pod_config)
+from repro.core.planner import (SearchStats, ShardingPlan, build_step_program,
+                                choose_plan, enumerate_plans)
+from repro.core.sweep import SweepEngine, format_table, sweep_rows
+from repro.core.symbols import MemState, TensorStat
+
+CC = single_pod_config()
+CHIP = single_chip_config()
+
+
+def _lm_programs(arch_id="qwen1.5-0.5b", shape_id="train_4k"):
+    arch = get_config(arch_id)
+    shape = SHAPES[shape_id]
+    return [build_step_program(arch, shape, p, CC)
+            for p in enumerate_plans(arch, shape, CC)]
+
+
+# ----------------------------------------------------------- cache: exactness
+def test_cached_total_equals_uncached_within_1e9():
+    """Cost invariance: memoization must be bit-for-bit (well under 1e-9)."""
+    cache = PlanCostCache()
+    for prog in _lm_programs():
+        base = estimate(prog, CC)
+        hit = estimate(prog, CC, cache=cache)
+        assert abs(base.total - hit.total) < 1e-9
+        assert abs(base.breakdown.io - hit.breakdown.io) < 1e-12
+        assert abs(base.breakdown.collective - hit.breakdown.collective) < 1e-9
+        assert abs(base.peak_hbm_per_device - hit.peak_hbm_per_device) < 1e-3
+
+
+def test_cache_hit_miss_counters():
+    prog_a = _lm_programs()[0]
+    cache = PlanCostCache()
+    estimate(prog_a, CC, cache=cache)
+    first = cache.stats()
+    assert first.misses > 0
+    assert first.entries == first.misses
+    # the per-layer ForBlock warm body must already hit within one program
+    assert first.hits > 0
+    # an identical program re-costed is (almost) all hits: the only misses
+    # allowed are none — every block/instruction state was seen already
+    estimate(prog_a, CC, cache=cache)
+    second = cache.stats()
+    assert second.misses == first.misses
+    assert second.hits > first.hits
+    assert 0.0 < second.hit_rate <= 1.0
+    cache.clear()
+    assert cache.stats() == type(first)(0, 0, 0)
+
+
+def test_cache_distinguishes_cluster_configs():
+    """Same program, different cluster: totals must differ (no false hits)."""
+    prog = _lm_programs()[0]
+    cache = PlanCostCache()
+    t_pod = estimate(prog, CC, cache=cache).total
+    slow_cc = CC.with_overlap(0.9)
+    t_overlap = estimate(prog, slow_cc, cache=cache).total
+    assert t_overlap < t_pod          # overlap discounts collectives
+    assert abs(estimate(prog, CC).total - t_pod) < 1e-9
+    assert abs(estimate(prog, slow_cc).total - t_overlap) < 1e-9
+
+
+def test_cache_respects_symbol_state_first_vs_warm():
+    """A loop body reading a DISK input pays IO only on the first pass even
+    through the cache (read-set fingerprints include memory state)."""
+    x = TensorStat((10_000, 1000), "float64", state=MemState.DISK)
+    body = [Compute("unary", ("X",), "Y", exec_type="CP")]
+    p = Program("t", blocks=[ForBlock("l", 5, body=body)], inputs={"X": x})
+    base = estimate(p, CHIP)
+    cached = estimate(p, CHIP, cache=(c := PlanCostCache()))
+    assert abs(base.total - cached.total) < 1e-12
+    assert abs(base.breakdown.io - cached.breakdown.io) < 1e-12
+    # first/warm bodies are distinct read states -> two entries, not one
+    assert c.stats().misses >= 2
+
+
+def test_if_blocks_are_costed_but_not_cached():
+    x = TensorStat((2048, 2048), "float32")
+    heavy = [Compute("matmul", ("X", "X"), "Y", exec_type="CP")]
+    light = [Compute("unary", ("X",), "Y", exec_type="CP")]
+    p = Program("t", blocks=[IfBlock("if", branches=[heavy, light],
+                                     weights=[0.25, 0.75])], inputs={"X": x})
+    cache = PlanCostCache()
+    t0 = estimate(p, CHIP, cache=cache).total
+    t1 = estimate(p, CHIP, cache=cache).total
+    assert math.isclose(t0, estimate(p, CHIP).total, rel_tol=1e-12)
+    assert math.isclose(t0, t1, rel_tol=1e-12)
+
+
+def test_cache_shared_across_candidates_saves_walks():
+    progs = _lm_programs()
+    cache = PlanCostCache()
+    for prog in progs:
+        estimate(prog, CC, cache=cache)
+    st = cache.stats()
+    # candidates share per-layer bodies: most lookups must be hits
+    assert st.hits > st.misses
+
+
+# ------------------------------------------------------ beam vs. exhaustive
+@pytest.mark.parametrize("arch_id", ["qwen1.5-0.5b", "gemma3-12b"])
+def test_beam_matches_exhaustive_winner(arch_id):
+    arch = get_config(arch_id)
+    shape = SHAPES["train_4k"]
+    stats = SearchStats()
+    beam = choose_plan(arch, shape, CC, top_k=1, search="beam", stats=stats)
+    exhaustive = choose_plan(arch, shape, CC, top_k=1, search="exhaustive")
+    assert beam[0].plan == exhaustive[0].plan
+    assert math.isclose(beam[0].time, exhaustive[0].time, rel_tol=1e-12)
+    # the beam must actually search less than the full space
+    assert stats.costed < len(enumerate_plans(arch, shape, CC))
+    assert stats.pruned_infeasible + stats.pruned_dominated > 0
+
+
+def test_beam_handles_all_infeasible_space():
+    d = choose_plan(get_config("deepseek-v3-671b"), SHAPES["train_4k"], CC,
+                    top_k=1, search="beam")[0]
+    assert not d.feasible
+
+
+def test_explicit_candidates_still_scanned_linearly():
+    arch = get_config("qwen1.5-0.5b")
+    shape = SHAPES["train_4k"]
+    cands = [ShardingPlan(tp_axes=("model",)),
+             ShardingPlan(name="dp-pure", batch_axes=("data", "model"))]
+    stats = SearchStats()
+    out = choose_plan(arch, shape, CC, candidates=cands, stats=stats)
+    assert len(out) == 2
+    assert stats.costed == 2
+
+
+# ------------------------------------------------------------- sweep engine
+def test_sweep_engine_ranks_and_reuses_cache():
+    eng = SweepEngine()
+    cells = eng.sweep(["qwen1.5-0.5b"], ["train_4k", "decode_32k"], ["pod"])
+    assert len(cells) == 2
+    times = [c.time for c in cells if not c.skipped]
+    assert times == sorted(times)
+    total = eng.cache.stats()
+    assert total.hits > 0
+    # a repeated cell is nearly free: no new cache entries are created
+    before = eng.cache.entries
+    cell = eng.cost_cell("qwen1.5-0.5b", "train_4k", "pod")
+    assert eng.cache.entries == before
+    assert cell.stats.cache.misses == 0
+
+
+def test_sweep_skips_inapplicable_cells_and_formats():
+    eng = SweepEngine()
+    cells = eng.sweep(["qwen1.5-0.5b"], ["long_500k", "decode_32k"], ["pod"])
+    skipped = [c for c in cells if c.skipped]
+    assert len(skipped) == 1 and skipped[0].shape_id == "long_500k"
+    table = format_table(cells)
+    assert "skip" in table and "decode_32k" in table
+    rows = sweep_rows(cells)
+    assert any(r.startswith("sweep.qwen1.5-0.5b|decode_32k|pod,") for r in rows)
+    assert any(";cache=" in r for r in rows)

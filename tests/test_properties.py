@@ -1,6 +1,11 @@
 """Hypothesis property tests on the cost model's invariants."""
 import math
 
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Collective, Compute, GenericBlock, Program, estimate,

@@ -19,13 +19,16 @@ def _tiny(arch_id):
     return dataclasses.replace(get_config(arch_id).reduced(), dtype="float32")
 
 
+slow = pytest.mark.slow      # heavy jit-compiles: slow tier only
+
+
 @pytest.mark.parametrize("arch_id", [
-    "qwen1.5-0.5b",            # dense, full cache
-    "gemma3-12b",              # local/global cycle, ring caches
-    "mamba2-1.3b",             # ssm state decode
-    "zamba2-2.7b",             # hybrid: ssm + shared attn caches
-    "whisper-small",           # enc-dec: self + cross caches
-    "deepseek-v3-671b",        # MLA absorbed decode (dropless MoE)
+    "qwen1.5-0.5b",                            # dense, full cache
+    pytest.param("gemma3-12b", marks=slow),    # local/global cycle, ring caches
+    "mamba2-1.3b",                             # ssm state decode
+    pytest.param("zamba2-2.7b", marks=slow),   # hybrid: ssm + shared attn caches
+    pytest.param("whisper-small", marks=slow),  # enc-dec: self + cross caches
+    pytest.param("deepseek-v3-671b", marks=slow),  # MLA absorbed decode
 ])
 def test_prefill_decode_matches_forward(arch_id):
     cfg = _tiny(arch_id)

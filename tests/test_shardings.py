@@ -3,14 +3,15 @@ ZeRO-1 moment sharding — on an AbstractMesh shaped like the production pod."""
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config
 from repro.core.planner import ShardingPlan
 from repro.launch import shardings as S
+from repro.launch.mesh import abstract_mesh
 from repro.models.model import build_model
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
 PLAN_TP = ShardingPlan(batch_axes=("data",), tp_axes=("model",))
 PLAN_EPTP = ShardingPlan(batch_axes=("data",), tp_axes=("model",),
                          ep_axes=("model",))

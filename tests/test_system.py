@@ -5,6 +5,7 @@ import dataclasses
 
 import jax
 import numpy as np
+import pytest
 
 from repro.configs import SHAPES, get_config
 from repro.core import (estimate, explain, multi_pod_config,
@@ -12,6 +13,8 @@ from repro.core import (estimate, explain, multi_pod_config,
 from repro.core.cluster import ClusterConfig, CPU_HOST
 from repro.core.linreg import SCENARIOS, build_linreg_program
 from repro.core.planner import build_step_program, choose_plan
+
+pytestmark = pytest.mark.slow   # end-to-end: jit-compiles the full stack
 
 
 def test_end_to_end_costing_pipeline():

@@ -15,6 +15,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.optim import adamw
 from repro.runtime.train_loop import Trainer, TrainerConfig
 
+pytestmark = pytest.mark.slow   # jit-compiles the real train step on CPU
+
 TINY_SHAPE = ShapeConfig("tiny", seq_len=32, global_batch=8, mode="train")
 
 
