@@ -1,0 +1,74 @@
+"""Resource-optimizer gates: the co-search must return the exhaustive
+(cluster x plan) winner while evaluating a small fraction of the space.
+
+Rows:
+  * ``resource_opt.<arch>|<shape>|<objective>`` — the winning cluster+plan,
+    the search cost (plan evaluations vs. the exhaustive space, gated at
+    >=3x fewer) and winner-match vs. the exhaustive scan.
+  * ``resource_opt.cache`` — shared sub-plan cache traffic across the whole
+    grid, gated on a minimum hit rate (the co-search only stays cheap if
+    candidates keep replaying each other's sub-plans).
+
+Any gate failure prints FAIL/MISMATCH in the derived column; CI greps for
+both.
+"""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs import SHAPES, get_config
+from repro.core.costmodel import PlanCostCache
+from repro.core.resource import (ResourceSearchStats, enumerate_clusters,
+                                 optimize_resources)
+
+GRID_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b")
+GRID_SHAPES = ("train_4k", "decode_32k")
+OBJECTIVES = (("step_time", None), ("cost", None), ("slo", 0.25))
+
+MIN_EVALS_RATIO = 3.0
+# quick mode runs a single-arch grid with less cross-candidate reuse; the
+# full grid clears ~0.6 — gate with headroom for both
+MIN_HIT_RATE = 0.4
+
+
+def run(quick: bool = False) -> List[str]:
+    rows: List[str] = []
+    archs = GRID_ARCHS[:1] if quick else GRID_ARCHS
+    clusters = enumerate_clusters(pod_counts=(1, 2) if quick else (1, 2, 4))
+    cache = PlanCostCache()
+    ex_cache = PlanCostCache()
+    total_evals = total_space = 0
+    for arch_id in archs:
+        arch = get_config(arch_id)
+        for shape_id in GRID_SHAPES:
+            shape = SHAPES[shape_id]
+            for objective, slo in OBJECTIVES:
+                stats = ResourceSearchStats()
+                t0 = time.perf_counter()
+                dec = optimize_resources(arch, shape, clusters,
+                                         objective=objective, slo=slo,
+                                         cache=cache, stats=stats)
+                us = (time.perf_counter() - t0) * 1e6
+                ex = optimize_resources(arch, shape, clusters,
+                                        objective=objective, slo=slo,
+                                        search="exhaustive", cache=ex_cache)
+                match = (dec[0].cluster_id == ex[0].cluster_id
+                         and dec[0].decision.plan == ex[0].decision.plan)
+                total_evals += stats.plan_evals
+                total_space += stats.exhaustive_plan_space
+                rows.append(
+                    f"resource_opt.{arch_id}|{shape_id}|{objective},{us:.0f},"
+                    f"win={dec[0].cluster_id}+{dec[0].decision.plan.describe()};"
+                    f"T={dec[0].time * 1e3:.2f}ms;$={dec[0].cost_per_step:.5f};"
+                    f"evals={stats.plan_evals}/{stats.exhaustive_plan_space};"
+                    f"{'MATCH' if match else 'MISMATCH'}")
+    ratio = total_space / max(total_evals, 1)
+    st = cache.stats()
+    gate = (ratio >= MIN_EVALS_RATIO and st.hit_rate >= MIN_HIT_RATE)
+    rows.append(
+        f"resource_opt.cache,0,evals={total_evals}/{total_space};"
+        f"ratio={ratio:.1f}x;claim={MIN_EVALS_RATIO:.0f}x;"
+        f"hit_rate={st.hit_rate:.2f};min_hit_rate={MIN_HIT_RATE};"
+        f"entries={st.entries};{'PASS' if gate else 'FAIL'}")
+    return rows

@@ -15,6 +15,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           engine must be >=5x the uncached path on an
                           enumerated candidate set, bit-exact) and
                           ``beam_matches_exhaustive`` per config
+  * bench_resource_opt  — the cluster/plan co-search gates: the resource
+                          optimizer must return the exhaustive
+                          (cluster x plan) winner (``MATCH`` per cell) with
+                          >=3x fewer plan evaluations and a minimum shared
+                          cache hit rate (``resource_opt.cache,...,PASS``)
   * bench_roofline      — (beyond paper) roofline terms per dry-run cell
 
 ``--quick`` shrinks every module to tiny configs (CI smoke tier); any
@@ -44,13 +49,14 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_costing_speed,
-                            bench_plan_costing, bench_roofline,
-                            bench_scenarios)
+                            bench_plan_costing, bench_resource_opt,
+                            bench_roofline, bench_scenarios)
     mods = [
         ("scenarios", bench_scenarios),
         ("plan_costing", bench_plan_costing),
         ("accuracy", bench_accuracy),
         ("costing_speed", bench_costing_speed),
+        ("resource_opt", bench_resource_opt),
         ("roofline", bench_roofline),
     ]
     if args.only:

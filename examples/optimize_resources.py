@@ -1,0 +1,60 @@
+"""Resource optimizer: which cluster should this workload run on?
+
+Enumerates cluster candidates (chip type x pod count x mesh layout x
+ICI/DCN topology), co-searches the sharding-plan space on each through one
+shared sub-plan cost cache, and ranks them under your objective — fastest
+step, cheapest step ($/step via ChipSpec.cost_per_chip_hour), or cheapest
+config meeting a step-time SLO.
+
+Run:
+  PYTHONPATH=src python examples/optimize_resources.py
+  PYTHONPATH=src python examples/optimize_resources.py \
+      --arch gemma3-12b --shape train_4k --objective cost
+  PYTHONPATH=src python examples/optimize_resources.py \
+      --arch qwen1.5-0.5b --shape decode_32k --objective slo --slo-ms 50
+"""
+import argparse
+import time
+
+from repro.configs import ARCH_IDS, SHAPES, get_config
+from repro.core.resource import (OBJECTIVES, ResourceSearchStats,
+                                 enumerate_clusters, format_decisions,
+                                 optimize_resources)
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ARCH_IDS)
+    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
+    ap.add_argument("--objective", default="step_time",
+                    choices=list(OBJECTIVES) + ["device_seconds"])
+    ap.add_argument("--slo-ms", type=float, default=None,
+                    help="step-time target in ms (objective=slo)")
+    ap.add_argument("--chips", nargs="+", default=None,
+                    metavar="CHIP", help="restrict the chip table")
+    ap.add_argument("--pod-counts", nargs="+", type=int, default=(1, 2, 4))
+    ap.add_argument("--search", default="beam",
+                    choices=["beam", "exhaustive"])
+    args = ap.parse_args()
+
+    clusters = enumerate_clusters(chips=args.chips,
+                                  pod_counts=tuple(args.pod_counts))
+    slo = args.slo_ms / 1e3 if args.slo_ms is not None else None
+    stats = ResourceSearchStats()
+    t0 = time.perf_counter()
+    decisions = optimize_resources(
+        get_config(args.arch), SHAPES[args.shape], clusters,
+        objective=args.objective, slo=slo, search=args.search, stats=stats)
+    dt = time.perf_counter() - t0
+
+    print(f"{args.arch} x {args.shape}, objective={args.objective}"
+          + (f" (slo={args.slo_ms}ms)" if slo else ""))
+    print(format_decisions(decisions, slo=slo))
+    print(f"\nwinner: {decisions[0].describe()}")
+    print(f"search: {stats.describe()} in {dt * 1e3:.0f}ms "
+          f"({args.search}); exhaustive scan would cost "
+          f"{stats.exhaustive_plan_space} plan evaluations")
+
+
+if __name__ == "__main__":
+    main()

@@ -11,11 +11,16 @@ Run:
   PYTHONPATH=src python examples/sweep_plans.py \
       --archs qwen1.5-0.5b gemma3-12b --shapes train_4k decode_32k \
       --clusters pod 2pod --search beam
+  PYTHONPATH=src python examples/sweep_plans.py --resources \
+      --objective cost      # sweep the full enumerated cluster grid and
+                            # rank (arch x shape x cluster) cells, then
+                            # print each workload's winning cluster
 """
 import argparse
 import time
 
-from repro.configs import ARCH_IDS, SHAPES
+from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
+from repro.core.resource import OBJECTIVES, enumerate_clusters
 from repro.core.sweep import CLUSTERS, SweepEngine, format_table
 
 
@@ -29,16 +34,43 @@ def main():
                     choices=list(SHAPES), metavar="SHAPE")
     ap.add_argument("--clusters", nargs="+", default=["pod"],
                     choices=list(CLUSTERS), metavar="CLUSTER")
+    ap.add_argument("--resources", action="store_true",
+                    help="sweep the enumerated cluster grid (chip x pods x "
+                         "mesh x ICI/DCN) instead of --clusters, and report "
+                         "each workload's winning cluster")
+    ap.add_argument("--objective", default="step_time",
+                    choices=list(OBJECTIVES) + ["device_seconds"])
+    ap.add_argument("--slo-ms", type=float, default=None)
     ap.add_argument("--search", default="beam",
                     choices=["beam", "exhaustive"])
     args = ap.parse_args()
 
     engine = SweepEngine(search=args.search)
+    clusters = (enumerate_clusters() if args.resources
+                else list(args.clusters))
     t0 = time.perf_counter()
-    cells = engine.sweep(args.archs, args.shapes, args.clusters)
+    cells = engine.sweep(args.archs, args.shapes, clusters)
     dt = time.perf_counter() - t0
 
     print(format_table(cells))
+    if args.resources:
+        slo = args.slo_ms / 1e3 if args.slo_ms is not None else None
+        print(f"\nresource winners (objective={args.objective}):")
+        for arch in args.archs:
+            for shape in args.shapes:
+                ok, why = shape_applicable(get_config(arch), SHAPES[shape])
+                if not ok:
+                    print(f"  {arch} x {shape}: {why}")
+                    continue
+                try:
+                    decisions, stats = engine.optimize_cell(
+                        arch, shape, clusters, objective=args.objective,
+                        slo=slo)
+                except ValueError as e:
+                    print(f"  {arch} x {shape}: {e}")
+                    continue
+                print(f"  {arch} x {shape}: {decisions[0].describe()} "
+                      f"[{stats.describe()}]")
     st = engine.cache.stats()
     costed = sum(c.stats.costed for c in cells if c.stats)
     print(f"\n{len(cells)} scenarios, {costed} candidate plans costed in "

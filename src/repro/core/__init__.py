@@ -9,7 +9,8 @@ Public API:
   * plan optimizer     — :mod:`repro.core.planner`
   * running example    — :mod:`repro.core.linreg` (paper §2, LinReg DS)
 """
-from repro.core.cluster import (ClusterConfig, ChipSpec, TPU_V5E, CPU_HOST,
+from repro.core.cluster import (ClusterConfig, ChipSpec, CHIPS, TPU_V5E,
+                                TPU_V5P, TPU_V6E, CPU_HOST,
                                 single_pod_config, multi_pod_config,
                                 single_chip_config, cpu_host_config,
                                 dtype_bytes)
@@ -24,13 +25,19 @@ from repro.core.plan import (Block, Call, Collective, Compute, CpVar,
                              ParForBlock, Program, RmVar, WhileBlock)
 from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
                                 build_step_program, choose_plan,
-                                enumerate_plans, estimate_hbm)
+                                enumerate_plans, estimate_hbm,
+                                resident_components)
+from repro.core.resource import (ClusterCandidate, ResourceDecision,
+                                 ResourceSearchStats, cluster_floor_time,
+                                 enumerate_clusters, format_decisions,
+                                 mesh_candidates, optimize_resources)
 from repro.core.symbols import MemState, SymbolTable, TensorStat
 from repro.core.sweep import (SweepCell, SweepEngine, format_table,
                               rank_cells, sweep_rows)
 
 __all__ = [
-    "ClusterConfig", "ChipSpec", "TPU_V5E", "CPU_HOST", "single_pod_config",
+    "ClusterConfig", "ChipSpec", "CHIPS", "TPU_V5E", "TPU_V5P", "TPU_V6E",
+    "CPU_HOST", "single_pod_config",
     "multi_pod_config", "single_chip_config", "cpu_host_config", "dtype_bytes",
     "CacheStats", "CostBreakdown", "CostEstimator", "CostedProgram",
     "PlanCostCache", "estimate", "explain",
@@ -40,6 +47,10 @@ __all__ = [
     "IfBlock", "Instruction", "IO", "JitCall", "ParForBlock", "Program",
     "RmVar", "WhileBlock", "PlanDecision", "SearchStats", "ShardingPlan",
     "build_step_program", "choose_plan", "enumerate_plans", "estimate_hbm",
+    "resident_components",
+    "ClusterCandidate", "ResourceDecision", "ResourceSearchStats",
+    "cluster_floor_time", "enumerate_clusters", "format_decisions",
+    "mesh_candidates", "optimize_resources",
     "MemState", "SymbolTable", "TensorStat",
     "SweepCell", "SweepEngine", "format_table", "rank_cells", "sweep_rows",
 ]

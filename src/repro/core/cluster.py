@@ -45,6 +45,13 @@ class ChipSpec:
     disk_bw: float = 1.0e9         # persistent storage (checkpoints, data)
     # Data-center network between pods (bytes/s per host NIC).
     dcn_bw: float = 25e9 / 8 * 8   # 25 GB/s effective per pod-slice edge
+    # Largest single ICI-connected slice this chip generation builds; beyond
+    # it, scaling crosses DCN (the resource optimizer enumerates both).
+    ici_domain: int = 256
+    # On-demand $/chip-hour — the resource optimizer's $-cost proxy
+    # (device-seconds weighted by price).  Analytical constant like the
+    # rest of the table; 0.0 means "free" and disables cost ranking.
+    cost_per_chip_hour: float = 0.0
 
     def peak(self, dtype: str) -> float:
         key = _canon_dtype(dtype)
@@ -79,6 +86,53 @@ TPU_V5E = ChipSpec(
     vmem_bytes=128 * 2 ** 20,
     ici_bw_per_link=50e9,
     ici_links_per_axis=1,
+    ici_domain=256,
+    cost_per_chip_hour=1.20,
+)
+
+# TPU v5p — the training-class sibling: ~2.3x the bf16 rate, ~6x the HBM,
+# bigger ICI domain, at a materially higher price point.  The interesting
+# resource decisions (is a smaller count of fat chips cheaper than a pod of
+# thin ones?) need exactly this contrast in the table.
+TPU_V5P = ChipSpec(
+    name="tpu_v5p",
+    peak_flops={
+        "bfloat16": 459e12,
+        "float16": 459e12,
+        "int8": 918e12,
+        "float8": 918e12,
+        "float32": 114.75e12,
+        "float64": 4.0e12,
+    },
+    hbm_bytes=95e9,
+    hbm_bw=2765e9,
+    vmem_bytes=128 * 2 ** 20,
+    ici_bw_per_link=90e9,
+    ici_links_per_axis=1,
+    ici_domain=1024,           # v5p slices scale far further over ICI (3D torus)
+    cost_per_chip_hour=4.20,
+)
+
+# TPU v6e (Trillium) — ~4.7x the v5e bf16 rate and 2x its HBM bandwidth at
+# ~2.2x the price: usually the fastest *and* the cheapest per step, unless
+# the workload is HBM-capacity bound (32 GB/chip).
+TPU_V6E = ChipSpec(
+    name="tpu_v6e",
+    peak_flops={
+        "bfloat16": 918e12,
+        "float16": 918e12,
+        "int8": 1836e12,
+        "float8": 1836e12,
+        "float32": 229.5e12,
+        "float64": 4.0e12,
+    },
+    hbm_bytes=32e9,
+    hbm_bw=1640e9,
+    vmem_bytes=128 * 2 ** 20,
+    ici_bw_per_link=90e9,
+    ici_links_per_axis=1,
+    ici_domain=256,
+    cost_per_chip_hour=2.70,
 )
 
 # A CPU "chip" used ONLY by the accuracy benchmark (paper §3.4): the cost
@@ -97,7 +151,17 @@ CPU_HOST = ChipSpec(
     ici_bw_per_link=1e10,
     pcie_bw=1e12,              # host==device: transfers are memcpy-free-ish
     disk_bw=0.5e9,
+    ici_domain=1,
+    cost_per_chip_hour=0.10,
 )
+
+# The chip table the resource optimizer enumerates over (cpu_host excluded:
+# it exists for the accuracy benchmark, not as a serving/training target).
+CHIPS: Dict[str, ChipSpec] = {
+    "tpu_v5e": TPU_V5E,
+    "tpu_v5p": TPU_V5P,
+    "tpu_v6e": TPU_V6E,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -195,6 +259,7 @@ class ClusterConfig:
                   chip.hbm_bytes, chip.hbm_bw, chip.vmem_bytes,
                   chip.ici_bw_per_link, chip.ici_links_per_axis, chip.pcie_bw,
                   chip.host_dram_bw, chip.disk_bw, chip.dcn_bw,
+                  chip.ici_domain, chip.cost_per_chip_hour,
                   self.mesh_shape, self.mesh_axes, self.dispatch_latency,
                   self.collective_phase_latency, self.host_callback_latency,
                   self.matmul_util, self.small_matmul_util, self.vpu_util,

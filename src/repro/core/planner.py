@@ -144,6 +144,25 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     setup = GenericBlock("setup (stage batch, embed)")
     setup.children.append(IO("read", "batch_tokens",
                              src=MemState.HOST, dst=MemState.HBM))
+    # Materialize the persistent HBM residents (optimizer state, activation
+    # stash, KV cache, ...) as variables, so the costed walk's peak-HBM is
+    # never below the estimate_hbm pre-filter that shares this formula.
+    # Components the program materializes itself are not double-counted:
+    # "params" is a program input (sharded by tp*fsdp, i.e. never below the
+    # component, which ep-shards MoE experts too), and the logits-like
+    # component is emitted only net of the logits variable the loss/lm-head
+    # block creates at the very point the peak is taken.
+    comps = dict(resident_components(arch, shape, plan, cc))
+    logits_like = "ce_head" if mode == "train" else "logits"
+    if logits_like in comps:
+        logits_var = (tokens * arch.vocab_size
+                      * (4 if mode == "train" else bpe) / max(head_sh, 1))
+        comps[logits_like] = max(comps[logits_like] - logits_var, 0.0)
+    for comp_name, comp_bytes in comps.items():
+        if comp_name == "params" or comp_bytes < 1.0:
+            continue
+        setup.children.append(CreateVar(f"resident_{comp_name}",
+                                        _ts((int(comp_bytes + 0.999),), "int8")))
     setup.children.append(CreateVar("embed_table",
                                     _ts((arch.vocab_size, d), dt, weight_shards)))
     setup.children.append(Compute("embedding", ("batch_tokens", "embed_table"),
@@ -392,8 +411,18 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
 # ---------------------------------------------------------------------------
 
 
-def estimate_hbm(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
-                 cc: ClusterConfig) -> float:
+def resident_components(arch: ArchConfig, shape: ShapeConfig,
+                        plan: ShardingPlan, cc: ClusterConfig
+                        ) -> Dict[str, float]:
+    """Persistent per-device HBM residents (bytes) for one step, by name.
+
+    This is the single source of truth for the HBM-feasibility pre-filter
+    (:func:`estimate_hbm` sums it) AND for the generated plan itself:
+    :func:`build_step_program` materializes every non-params component as a
+    resident variable, so the cost walk's ``peak_hbm_per_device`` is always
+    at least ``estimate_hbm`` — the pre-filter can never reject a plan whose
+    costed peak-HBM excursion fits (asserted by tests/test_planner.py).
+    """
     pc = arch.param_counts()
     mb0 = max(shape.global_batch
               // (plan.microbatches if shape.mode == "train" else 1), 1)
@@ -405,17 +434,16 @@ def estimate_hbm(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                          1 if shape.mode == "decode" else shape.seq_len)
     bpe = dtype_bytes(arch.dtype)
     wsh = max(tp * fsdp * (ep if arch.moe else 1), 1)
-    params = pc["total"] * bpe / wsh
-    mem = params
+    comp: Dict[str, float] = {"params": pc["total"] * bpe / wsh}
     if shape.mode == "train":
         # adam m,v (fp32) + fp32 transients during the update, sharded like
         # params (+dp if fsdp); calibrated against compiled memory_analysis
         opt_shards = wsh * (dp if (fsdp > 1 or plan.zero1) else 1)
-        mem += 4 * pc["total"] * 4 / max(opt_shards, wsh)
+        comp["opt_state"] = 4 * pc["total"] * 4 / max(opt_shards, wsh)
         # gradients: resident fp32 accumulator regardless of microbatching
         # (grad_reduce_dtype only changes the wire payload, not the buffer;
         # calibrated against compiled memory_analysis)
-        mem += pc["total"] * 4 / wsh
+        comp["grads"] = pc["total"] * 4 / wsh
         # activations saved for backward, per token per layer:
         #   replicated residual-stream parts (~d) + head/ff-sharded parts
         d = arch.d_model
@@ -432,9 +460,9 @@ def estimate_hbm(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         per_tok = (fac[0] * d * bpe
                    + fac[1] * (hd_total + ff_eff) * bpe / max(tp, 1))
         tokens_dev = shape.tokens / max(dp * sp * plan.microbatches, 1)
-        mem += tokens_dev * arch.n_layers * per_tok
+        comp["act_stash"] = tokens_dev * arch.n_layers * per_tok
         # chunked-CE head: [ce_chunk, vocab] fp32 (+bwd copy), tp-sharded
-        mem += 2 * 2048 * arch.vocab_size * 4 / max(tp, 1)
+        comp["ce_head"] = 2 * 2048 * arch.vocab_size * 4 / max(tp, 1)
     else:
         tokens_dev = shape.tokens / max(dp * sp, 1)
         if shape.mode == "decode":
@@ -461,13 +489,19 @@ def estimate_hbm(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                     kv_len_eff = w_sum
                 cache = (shape.global_batch / dp * kv_len_eff
                          * 2 * arch.n_kv_heads * arch.head_dim_ / max(tp, 1))
-            mem += cache * arch.n_layers * bpe
+            comp["kv_cache"] = cache * arch.n_layers * bpe
             live_tokens = shape.global_batch / max(dp, 1)   # one token/seq
-            mem += live_tokens * arch.d_model * bpe * 4
-            mem += live_tokens * arch.vocab_size * 4 / max(tp, 1)  # logits
+            comp["live_acts"] = live_tokens * arch.d_model * bpe * 4
+            comp["logits"] = live_tokens * arch.vocab_size * 4 / max(tp, 1)
         else:
-            mem += tokens_dev * arch.d_model * bpe * 8 / max(tp, 1)
-    return mem
+            comp["act_workspace"] = tokens_dev * arch.d_model * bpe * 8 / max(tp, 1)
+    return comp
+
+
+def estimate_hbm(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
+                 cc: ClusterConfig) -> float:
+    """Per-device resident HBM (bytes): the feasibility pre-filter's bound."""
+    return sum(resident_components(arch, shape, plan, cc).values())
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,524 @@
+"""Resource optimization: co-search cluster configs and sharding plans.
+
+The paper's cost model exists *for* optimizers — SystemML's resource
+optimizer enumerates cluster configurations and re-costs the program under
+each.  The TPU analogue enumerates **cluster candidates** (chip type from
+the :data:`repro.core.cluster.CHIPS` table, pod count, mesh shape / axis
+layout, DCN- vs ICI-linked multi-slice topologies) and, for each, runs the
+staged beam :func:`repro.core.planner.choose_plan` through one shared
+:class:`repro.core.costmodel.PlanCostCache`, ranking the results under a
+pluggable objective:
+
+  * ``step_time``       — fastest feasible step,
+  * ``cost`` (alias ``device_seconds``) — cheapest step: step time x chips
+    weighted by :attr:`ChipSpec.cost_per_chip_hour` (the $-cost proxy),
+  * ``slo``             — cheapest config whose step time meets an SLO.
+
+Candidate clusters are pruned *soundly* before any plan is costed: a
+cluster whose analytic **cost floor** (an aggregate compute/memory roofline
+lower bound that no plan on that cluster can beat — see
+:func:`cluster_floor_time`) already loses to the incumbent cannot contain
+the winner, so the whole (cluster x plan) subtree is skipped.  Together
+with the staged beam inside each cluster and the shared sub-plan cache,
+the co-search returns the exact exhaustive-scan winner at a small fraction
+of the full plan evaluations (gated by tests and benchmarks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import math
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core import linalg_ops
+from repro.core.cluster import CHIPS, ChipSpec, ClusterConfig
+from repro.core.costmodel import (VPU_FRACTION, CacheStats, PlanCostCache)
+from repro.core.plan import (Call, Collective, Compute, CpVar, CreateVar,
+                             DataGen, ForBlock, FunctionBlock, GenericBlock,
+                             IfBlock, IO, JitCall, ParForBlock, Program,
+                             RmVar, WhileBlock)
+from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
+                                build_step_program, choose_plan,
+                                enumerate_plans)
+
+OBJECTIVES = ("step_time", "cost", "slo")
+_OBJECTIVE_ALIASES = {
+    "step_time": "step_time", "time": "step_time",
+    "cost": "cost", "device_seconds": "cost", "cost_per_step": "cost",
+    "slo": "slo", "slo_cheapest": "slo",
+}
+
+# Purchasable slice granularity per chip generation (chips per pod slice).
+POD_CHIPS = {"tpu_v5e": 256, "tpu_v5p": 64, "tpu_v6e": 256}
+
+
+# ---------------------------------------------------------------------------
+# Cluster candidates
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterCandidate:
+    """One enumerable cluster configuration, with a stable display id."""
+
+    cid: str
+    cc: ClusterConfig
+
+
+def _short(chip: ChipSpec) -> str:
+    return chip.name.replace("tpu_", "")
+
+
+def _make_cc(chip: ChipSpec, mesh_shape: Tuple[int, ...],
+             mesh_axes: Tuple[str, ...],
+             base: Optional[ClusterConfig] = None) -> ClusterConfig:
+    if base is not None:
+        return dataclasses.replace(base, chip=chip, mesh_shape=mesh_shape,
+                                   mesh_axes=mesh_axes)
+    return ClusterConfig(chip=chip, mesh_shape=mesh_shape, mesh_axes=mesh_axes)
+
+
+def mesh_factorizations(n: int, variants: int = 2
+                        ) -> List[Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+    """(data, model) splits of an n-chip slice: balanced first, then a
+    wide-data / narrow-model variant (the axis-layout dimension)."""
+    if n <= 1:
+        return [((1,), ("data",))]
+    out: List[Tuple[Tuple[int, ...], Tuple[str, ...]]] = []
+    balanced_model = 1
+    while balanced_model * balanced_model * 4 <= n:
+        balanced_model *= 2
+    seen = set()
+    for model in (balanced_model, max(balanced_model // 4, min(4, n))):
+        if n % model:
+            continue
+        mesh = (n // model, model) if model > 1 else (n,)
+        axes = ("data", "model") if model > 1 else ("data",)
+        if mesh not in seen:
+            seen.add(mesh)
+            out.append((mesh, axes))
+        if len(out) >= variants:
+            break
+    return out or [((n,), ("data",))]
+
+
+def mesh_candidates(chip: ChipSpec, num_chips: int,
+                    base: Optional[ClusterConfig] = None
+                    ) -> List[ClusterCandidate]:
+    """All single-slice mesh layouts for a fixed chip count (elastic
+    re-meshing: the devices that survived, re-factored)."""
+    out = []
+    seen = set()
+    for model in (1, 2, 4, 8, 16, 32):
+        if num_chips % model or model > num_chips:
+            continue
+        mesh = (num_chips // model, model) if model > 1 else (num_chips,)
+        axes = ("data", "model") if model > 1 else ("data",)
+        if mesh in seen:
+            continue
+        seen.add(mesh)
+        out.append(ClusterCandidate(
+            f"{_short(chip)}-{'x'.join(map(str, mesh))}",
+            _make_cc(chip, mesh, axes, base)))
+    return out
+
+
+def enumerate_clusters(chips: Optional[Sequence[Union[str, ChipSpec]]] = None,
+                       pod_counts: Sequence[int] = (1, 2, 4),
+                       mesh_variants: int = 2,
+                       base: Optional[ClusterConfig] = None
+                       ) -> List[ClusterCandidate]:
+    """The default cluster grid: chip type x pod count x mesh layout, with
+    both ICI-linked superslices (when the chip's ICI domain allows) and
+    DCN-linked multi-pod topologies."""
+    chip_specs = [CHIPS[c] if isinstance(c, str) else c
+                  for c in (chips if chips is not None else CHIPS)]
+    out: List[ClusterCandidate] = []
+    for chip in chip_specs:
+        pod = POD_CHIPS.get(chip.name, 256)
+        for p in pod_counts:
+            total = pod * p
+            fits_ici = total <= chip.ici_domain
+            if fits_ici:
+                for mesh, axes in mesh_factorizations(total, mesh_variants):
+                    out.append(ClusterCandidate(
+                        f"{_short(chip)}-{'x'.join(map(str, mesh))}",
+                        _make_cc(chip, mesh, axes, base)))
+            if p > 1:
+                # DCN multi-slice: "pod" axis crosses the data-center network
+                nv = 1 if fits_ici else mesh_variants
+                for mesh, axes in mesh_factorizations(pod, nv):
+                    out.append(ClusterCandidate(
+                        f"{_short(chip)}-{p}x{'x'.join(map(str, mesh))}-dcn",
+                        _make_cc(chip, (p,) + mesh, ("pod",) + axes, base)))
+    return out
+
+
+def _as_candidate(c) -> ClusterCandidate:
+    if isinstance(c, ClusterCandidate):
+        return c
+    if isinstance(c, ClusterConfig):
+        label = "x".join(str(s) for s in c.mesh_shape)
+        return ClusterCandidate(f"{c.chip.name}[{label}]", c)
+    if isinstance(c, tuple) and len(c) == 2:
+        return ClusterCandidate(str(c[0]), c[1])
+    raise TypeError(f"not a cluster candidate: {c!r}")
+
+
+# ---------------------------------------------------------------------------
+# Sound per-cluster cost floors (prune whole clusters without costing plans)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ProgramFloor:
+    """Cluster-independent work totals of a step program: global MXU FLOPs
+    by dtype, VPU FLOPs, and HBM bytes moved — every candidate plan for the
+    same (arch, shape) executes at least this much work."""
+
+    mxu_flops: Tuple[Tuple[str, float], ...]
+    vpu_flops: float
+    hbm_bytes: float
+
+
+def _walk_totals(nodes, env: Dict, mult: float, functions: Dict,
+                 stack: Tuple[str, ...], acc: Dict) -> None:
+    for node in nodes:
+        if isinstance(node, CreateVar):
+            env[node.name] = node.stat
+        elif isinstance(node, CpVar):
+            if node.src in env:
+                env[node.dst] = env[node.src]
+        elif isinstance(node, RmVar):
+            for n in node.names:
+                env.pop(n, None)
+        elif isinstance(node, DataGen):
+            env[node.output] = node.stat
+        elif isinstance(node, Compute):
+            stats = [env[n] for n in node.inputs]
+            prof = linalg_ops.profile(node.opcode, stats, **node.attrs)
+            if prof.util == "mxu":
+                dt = stats[0].dtype if stats else "bfloat16"
+                acc["mxu"][dt] = acc["mxu"].get(dt, 0.0) + prof.flops * mult
+            else:
+                acc["vpu"] += prof.flops * mult
+            acc["bytes"] += prof.bytes * mult
+            env[node.output] = prof.out
+        elif isinstance(node, Collective):
+            if node.output and node.var in env:
+                env[node.output] = env[node.var]
+        elif isinstance(node, (IO, JitCall)):
+            pass                       # adds cost only; no flop/byte floor
+        elif isinstance(node, Call):
+            if node.func not in stack:
+                fn = functions.get(node.func)
+                if fn is not None:
+                    _walk_totals(fn.body, env, mult, functions,
+                                 stack + (node.func,), acc)
+        elif isinstance(node, GenericBlock):
+            _walk_totals(node.children, env, mult, functions, stack, acc)
+        elif isinstance(node, (ForBlock, WhileBlock)):
+            n = max(int(node.iterations), 1) if node.iterations else 1
+            _walk_totals(node.predicate, env, mult * n, functions, stack, acc)
+            _walk_totals(node.body, env, mult * n, functions, stack, acc)
+        elif isinstance(node, ParForBlock):
+            n = max(int(node.iterations), 1) if node.iterations else 1
+            w = math.ceil(n / max(int(node.parallelism), 1))
+            _walk_totals(node.body, env, mult * w, functions, stack, acc)
+        elif isinstance(node, IfBlock):
+            _walk_totals(node.predicate, env, mult, functions, stack, acc)
+            nb = max(len(node.branches), 1)
+            weights = list(node.weights) if node.weights else [1.0 / nb] * nb
+            base = dict(env)
+            branch_envs = []
+            for br, w in zip(node.branches, weights):
+                benv = dict(base)      # each branch starts from the pre-If env
+                _walk_totals(br, benv, mult * w, functions, stack, acc)
+                branch_envs.append(benv)
+            # merge like CostEstimator._cost_if: a name survives only when
+            # every branch leaves it defined (shapes from the first branch)
+            merged = branch_envs[0] if branch_envs else base
+            for benv in branch_envs[1:]:
+                for name in list(merged):
+                    if name not in benv:
+                        del merged[name]
+            env.clear()
+            env.update(merged)
+        elif isinstance(node, FunctionBlock):
+            _walk_totals(node.body, env, mult, functions, stack, acc)
+        else:
+            raise TypeError(f"unknown plan node {type(node)}")
+
+
+def program_totals(prog: Program) -> ProgramFloor:
+    """Global (plan- and cluster-independent) work totals of a program."""
+    acc = {"mxu": {}, "vpu": 0.0, "bytes": 0.0}
+    env = dict(prog.inputs)
+    _walk_totals(prog.blocks, env, 1.0, prog.functions, (), acc)
+    return ProgramFloor(tuple(sorted(acc["mxu"].items())), acc["vpu"],
+                        acc["bytes"])
+
+
+@functools.lru_cache(maxsize=None)
+def _plan_space_size(arch: ArchConfig, shape: ShapeConfig,
+                     mesh_shape: Tuple[int, ...],
+                     mesh_axes: Tuple[str, ...]) -> int:
+    """|enumerate_plans| for the exhaustive-scan statistic.  The space
+    depends only on the mesh geometry (roles/knobs never consult the chip),
+    so the count is cached instead of re-enumerated per optimize call."""
+    cc = ClusterConfig(mesh_shape=mesh_shape, mesh_axes=mesh_axes)
+    return len(enumerate_plans(arch, shape, cc))
+
+
+@functools.lru_cache(maxsize=None)
+def _floor_for(arch: ArchConfig, shape: ShapeConfig) -> ProgramFloor:
+    # The minimal-work reference: remat=none (no recompute), micro=1.  All
+    # candidate plans emit the same compute ops at the same global shapes
+    # (sharding divides per-device work, never global work), so this is a
+    # true floor over the whole plan space.
+    ref = ShardingPlan(name="floor-ref", batch_axes=("data",),
+                       remat="none", microbatches=1)
+    ref_cc = ClusterConfig(mesh_shape=(1,), mesh_axes=("data",))
+    return program_totals(build_step_program(arch, shape, ref, ref_cc))
+
+
+def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
+                       cc: ClusterConfig) -> float:
+    """A sound lower bound on ``C(P, cc)`` over EVERY sharding plan P.
+
+    Per instruction the estimator charges max(flops/(shards·peak·util),
+    bytes/(shards·hbm_bw)); shards never exceeds the chip count (times one
+    duplicated axis for MoE ep+tp plans), util never exceeds matmul_util,
+    and collectives/latency/IO only add — so aggregate compute and memory
+    rooflines at full-cluster parallelism bound any plan from below."""
+    fl = _floor_for(arch, shape)
+    dup = max(cc.mesh_shape) if arch.moe is not None else 1
+    denom = max(cc.num_chips * dup, 1)
+    util = max(cc.matmul_util, cc.small_matmul_util)
+    t_flops = sum(f / (denom * cc.chip.peak(dt) * util)
+                  for dt, f in fl.mxu_flops)
+    t_flops += fl.vpu_flops / (denom * cc.chip.peak("float32") * VPU_FRACTION)
+    t_mem = fl.hbm_bytes / (denom * cc.hbm_bw_eff)
+    return max(t_flops, t_mem)
+
+
+# ---------------------------------------------------------------------------
+# Decisions + ranking
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ResourceDecision:
+    """One cluster candidate's outcome: its best plan (or why it was pruned)
+    plus the objective values the ranking uses."""
+
+    cluster_id: str
+    cc: ClusterConfig
+    decision: Optional[PlanDecision]        # None when pruned before costing
+    floor_time: float
+    pruned: str = ""                        # non-empty: skipped, why
+    search: Optional[SearchStats] = None
+
+    @property
+    def time(self) -> float:
+        return self.decision.time if self.decision else float("inf")
+
+    @property
+    def feasible(self) -> bool:
+        return bool(self.decision and self.decision.feasible)
+
+    @property
+    def device_seconds(self) -> float:
+        return self.time * self.cc.num_chips
+
+    @property
+    def cost_per_step(self) -> float:
+        """$ per step: device-seconds priced at cost_per_chip_hour."""
+        return self.device_seconds * self.cc.chip.cost_per_chip_hour / 3600.0
+
+    def meets(self, slo: Optional[float]) -> bool:
+        return self.feasible and slo is not None and self.time <= slo
+
+    def describe(self) -> str:
+        if self.pruned:
+            return f"{self.cluster_id}: pruned ({self.pruned})"
+        return (f"{self.cluster_id}: {self.decision.plan.describe()} "
+                f"T={self.time * 1e3:.2f}ms ${self.cost_per_step:.4f}/step")
+
+
+@dataclasses.dataclass
+class ResourceSearchStats:
+    """Observability for one co-search: how much of the (cluster x plan)
+    space was actually evaluated."""
+
+    clusters_total: int = 0
+    clusters_costed: int = 0
+    clusters_pruned: int = 0
+    plan_evals: int = 0                 # full generate+cost evaluations run
+    exhaustive_plan_space: int = 0      # sum over clusters of |enumerate_plans|
+    cache: Optional[CacheStats] = None
+
+    @property
+    def evals_ratio(self) -> float:
+        """How many times fewer evaluations than the exhaustive scan."""
+        return self.exhaustive_plan_space / max(self.plan_evals, 1)
+
+    def describe(self) -> str:
+        bits = [f"clusters={self.clusters_costed}/{self.clusters_total}",
+                f"evals={self.plan_evals}/{self.exhaustive_plan_space}"
+                f"({self.evals_ratio:.1f}x)"]
+        if self.cache is not None:
+            bits.append(f"cache={self.cache.hits}/"
+                        f"{self.cache.hits + self.cache.misses}")
+        return " ".join(bits)
+
+
+def _canon_objective(objective: str, slo: Optional[float]) -> str:
+    key = _OBJECTIVE_ALIASES.get(objective)
+    if key is None:
+        raise ValueError(f"unknown objective {objective!r}; "
+                         f"one of {sorted(set(_OBJECTIVE_ALIASES))}")
+    if key == "slo" and slo is None:
+        raise ValueError("objective 'slo' needs a step-time target (slo=...)")
+    return key
+
+
+def _rank_key(objective: str, slo: Optional[float]):
+    def key(rd: ResourceDecision) -> Tuple:
+        if rd.pruned:
+            return (1, 0, rd.floor_time, 0.0, rd.cluster_id)
+        if objective == "step_time":
+            vals: Tuple = (rd.time, rd.cost_per_step)
+        elif objective == "cost":
+            vals = (rd.cost_per_step, rd.time)
+        else:
+            vals = (0 if rd.meets(slo) else 1, rd.cost_per_step, rd.time)
+        return (0, 0 if rd.feasible else 1) + vals + (rd.cluster_id,)
+    return key
+
+
+def _floor_cannot_win(objective: str, slo: Optional[float],
+                      incumbent: ResourceDecision, cc: ClusterConfig,
+                      floor_t: float) -> bool:
+    """Sound pruning test: could ANY plan on this cluster outrank the
+    (feasible) incumbent?  Uses strict inequalities so exact ties are still
+    costed and resolved by the deterministic tie-break."""
+    floor_cost = floor_t * cc.num_chips * cc.chip.cost_per_chip_hour / 3600.0
+    if objective == "step_time":
+        return floor_t > incumbent.time
+    if objective == "cost":
+        return floor_cost > incumbent.cost_per_step
+    if incumbent.meets(slo):
+        return floor_t > slo or floor_cost > incumbent.cost_per_step
+    return floor_t > slo and floor_cost > incumbent.cost_per_step
+
+
+def _visit_order_key(objective: str, slo: Optional[float]):
+    def key(entry) -> Tuple:
+        cand, floor_t = entry
+        floor_cost = (floor_t * cand.cc.num_chips
+                      * cand.cc.chip.cost_per_chip_hour / 3600.0)
+        if objective == "step_time":
+            return (floor_t, floor_cost, cand.cid)
+        if objective == "cost":
+            return (floor_cost, floor_t, cand.cid)
+        return (0 if (slo is None or floor_t <= slo) else 1,
+                floor_cost, floor_t, cand.cid)
+    return key
+
+
+# ---------------------------------------------------------------------------
+# The co-search
+# ---------------------------------------------------------------------------
+
+
+def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
+                       clusters: Optional[Sequence] = None,
+                       objective: str = "step_time",
+                       slo: Optional[float] = None, *,
+                       search: str = "beam", beam_width: int = 4,
+                       prune: Optional[bool] = None,
+                       cache: Optional[PlanCostCache] = None,
+                       stats: Optional[ResourceSearchStats] = None
+                       ) -> List[ResourceDecision]:
+    """Rank cluster candidates (with their best sharding plan) under an
+    objective.  ``search="beam"`` (default) prunes clusters by their sound
+    cost floor and plans by the staged beam; ``search="exhaustive"`` costs
+    every (cluster x plan) cell — the verification oracle.  Pass a shared
+    :class:`PlanCostCache` to reuse sub-plan costs across calls."""
+    objective = _canon_objective(objective, slo)
+    if prune is None:
+        prune = search == "beam"
+    cands = [_as_candidate(c) for c in
+             (clusters if clusters is not None else enumerate_clusters())]
+    if cache is None:
+        cache = PlanCostCache()
+    if stats is None:
+        stats = ResourceSearchStats()
+    entries = [(cand, cluster_floor_time(arch, shape, cand.cc))
+               for cand in cands]
+    stats.clusters_total += len(entries)
+    stats.exhaustive_plan_space += sum(
+        _plan_space_size(arch, shape, cand.cc.mesh_shape, cand.cc.mesh_axes)
+        for cand, _ in entries)
+    if prune:
+        entries.sort(key=_visit_order_key(objective, slo))
+    key = _rank_key(objective, slo)
+    incumbent: Optional[ResourceDecision] = None
+    out: List[ResourceDecision] = []
+    for cand, floor_t in entries:
+        if (prune and incumbent is not None
+                and _floor_cannot_win(objective, slo, incumbent, cand.cc,
+                                      floor_t)):
+            stats.clusters_pruned += 1
+            out.append(ResourceDecision(
+                cand.cid, cand.cc, None, floor_t,
+                pruned=f"floor {floor_t * 1e3:.2f}ms loses to "
+                       f"{incumbent.cluster_id}"))
+            continue
+        pstats = SearchStats()
+        best = choose_plan(arch, shape, cand.cc, top_k=1, search=search,
+                           beam_width=beam_width, cache=cache,
+                           stats=pstats)[0]
+        stats.plan_evals += pstats.costed
+        stats.clusters_costed += 1
+        rd = ResourceDecision(cand.cid, cand.cc, best, floor_t, search=pstats)
+        if rd.time < floor_t * (1.0 - 1e-9):
+            # Tripwire for the one invariant pruning depends on: the floor
+            # walker (_walk_totals) mirroring CostEstimator's semantics.
+            # Drift shows up here on every search instead of as a silently
+            # mispruned winner.
+            raise RuntimeError(
+                f"unsound cluster floor for {cand.cid}: best plan costs "
+                f"{rd.time:.6g}s < floor {floor_t:.6g}s — _walk_totals has "
+                "drifted from CostEstimator; fix it before trusting pruning")
+        out.append(rd)
+        if rd.feasible and (incumbent is None or key(rd) < key(incumbent)):
+            incumbent = rd
+    stats.cache = cache.stats()
+    out.sort(key=key)
+    return out
+
+
+def format_decisions(decisions: Sequence[ResourceDecision],
+                     slo: Optional[float] = None) -> str:
+    """Fixed-width ranked table for examples / EXPLAIN output."""
+    header = (f"{'#':>3} {'cluster':24} {'chips':>6} {'step':>10} "
+              f"{'$/step':>9} {'feas':>4}  {'chosen plan':40} {'search':28}")
+    lines = [header, "-" * len(header)]
+    for i, rd in enumerate(decisions, 1):
+        if rd.pruned:
+            lines.append(f"{i:>3} {rd.cluster_id:24} "
+                         f"{rd.cc.num_chips:>6} {'--':>10} {'--':>9} "
+                         f"{'cut':>4}  pruned: {rd.pruned[:56]}")
+            continue
+        feas = "y" if rd.feasible else "OOM"
+        if slo is not None:
+            feas = "slo" if rd.meets(slo) else feas
+        lines.append(
+            f"{i:>3} {rd.cluster_id:24} {rd.cc.num_chips:>6} "
+            f"{rd.time * 1e3:9.2f}ms {rd.cost_per_step:9.5f} {feas:>4}  "
+            f"{rd.decision.plan.describe():40} "
+            f"{rd.search.describe() if rd.search else '':28}")
+    return "\n".join(lines)

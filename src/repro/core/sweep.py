@@ -23,16 +23,22 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs import SHAPES, get_config, shape_applicable
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.cluster import (ClusterConfig, multi_pod_config,
-                                single_pod_config)
+from repro.core.cluster import (TPU_V5P, TPU_V6E, ClusterConfig,
+                                multi_pod_config, single_pod_config)
 from repro.core.costmodel import CacheStats, PlanCostCache
 from repro.core.planner import PlanDecision, SearchStats, choose_plan
+from repro.core.resource import (ClusterCandidate, ResourceDecision,
+                                 ResourceSearchStats, optimize_resources)
 
 # Named cluster shorthands accepted anywhere a cluster is given (pure
 # dataclass constants — building them never touches jax device state).
 CLUSTERS: Dict[str, ClusterConfig] = {
     "pod": single_pod_config(),
     "2pod": multi_pod_config(),
+    "v5p-pod": ClusterConfig(chip=TPU_V5P, mesh_shape=(8, 8),
+                             mesh_axes=("data", "model")),
+    "v6e-pod": ClusterConfig(chip=TPU_V6E, mesh_shape=(16, 16),
+                             mesh_axes=("data", "model")),
 }
 
 
@@ -111,6 +117,25 @@ class SweepEngine:
                  for c in clusters for a in archs for s in shapes]
         return rank_cells(cells)
 
+    def optimize_cell(self, arch: Union[str, ArchConfig],
+                      shape: Union[str, ShapeConfig],
+                      clusters: Optional[Sequence] = None,
+                      objective: str = "step_time",
+                      slo: Optional[float] = None,
+                      ) -> Tuple[List[ResourceDecision], ResourceSearchStats]:
+        """The ``--resources`` dimension: instead of costing one fixed
+        cluster, co-search the cluster grid for this (arch x shape) through
+        the engine's shared sub-plan cache and return the ranked
+        :class:`ResourceDecision` table plus search stats."""
+        _, arch = _resolve_arch(arch)
+        _, shape = _resolve_shape(shape)
+        stats = ResourceSearchStats()
+        decisions = optimize_resources(
+            arch, shape, clusters, objective=objective, slo=slo,
+            search=self.search, beam_width=self.beam_width,
+            cache=self.cache, stats=stats)
+        return decisions, stats
+
 
 def rank_cells(cells: Sequence[SweepCell]) -> List[SweepCell]:
     return sorted(cells, key=lambda c: (bool(c.skipped), not c.feasible,
@@ -168,5 +193,7 @@ def _resolve_shape(shape) -> Tuple[str, ShapeConfig]:
 def _resolve_cluster(cluster) -> Tuple[str, ClusterConfig]:
     if isinstance(cluster, str):
         return cluster, CLUSTERS[cluster]
+    if isinstance(cluster, ClusterCandidate):
+        return cluster.cid, cluster.cc
     label = "x".join(str(s) for s in cluster.mesh_shape)
     return f"{cluster.chip.name}[{label}]", cluster

@@ -15,7 +15,9 @@ import jax
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig
+from repro.core.costmodel import PlanCostCache
 from repro.core.planner import PlanDecision, ShardingPlan, choose_plan
+from repro.core.resource import mesh_candidates, optimize_resources
 
 
 @dataclasses.dataclass
@@ -28,14 +30,38 @@ class ElasticPlan:
 
 
 def replan(arch: ArchConfig, shape: ShapeConfig, *,
-           old_cc: ClusterConfig, new_mesh_shape: Tuple[int, ...],
-           new_mesh_axes: Optional[Tuple[str, ...]] = None) -> ElasticPlan:
-    axes = new_mesh_axes or old_cc.mesh_axes
-    new_cc = old_cc.with_mesh(new_mesh_shape, axes)
-    decision = choose_plan(arch, shape, new_cc, top_k=1)[0]
+           old_cc: ClusterConfig,
+           new_mesh_shape: Optional[Tuple[int, ...]] = None,
+           new_mesh_axes: Optional[Tuple[str, ...]] = None,
+           available_chips: Optional[int] = None,
+           objective: str = "step_time",
+           cache: Optional[PlanCostCache] = None) -> ElasticPlan:
+    """Re-cost the program for a resized cluster.
+
+    Pass ``new_mesh_shape`` to pin the mesh explicitly (the old behavior),
+    or just ``available_chips`` — e.g. the device count that survived a
+    failure — and the resource optimizer picks the best mesh factorization
+    of the survivors (same chip, every (data x model) layout) by ``C(P,
+    cc)`` under ``objective``, instead of a hand-rolled dp-degree guess.
+    """
+    if new_mesh_shape is not None:
+        axes = new_mesh_axes or old_cc.mesh_axes
+        new_cc = old_cc.with_mesh(new_mesh_shape, axes)
+        decision = choose_plan(arch, shape, new_cc, top_k=1, cache=cache)[0]
+    elif available_chips is not None:
+        cands = mesh_candidates(old_cc.chip, available_chips, base=old_cc)
+        if not cands:
+            raise ValueError(f"no candidate meshes for {available_chips} "
+                             "surviving chips")
+        best = optimize_resources(arch, shape, cands, objective=objective,
+                                  cache=cache)[0]
+        new_cc, decision = best.cc, best.decision
+    else:
+        raise ValueError("replan needs new_mesh_shape or available_chips")
     old_dp = _dp_degree(old_cc)
     new_dp = _dp_degree(new_cc)
-    return ElasticPlan(new_cc, tuple(new_mesh_shape), tuple(axes), decision,
+    return ElasticPlan(new_cc, tuple(new_cc.mesh_shape),
+                       tuple(new_cc.mesh_axes), decision,
                        lr_scale=new_dp / max(old_dp, 1))
 
 

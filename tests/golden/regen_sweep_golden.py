@@ -1,0 +1,57 @@
+"""Regenerate tests/golden/sweep_golden.json — the expected
+(arch, shape, cluster) -> winning plan + cost cells that tests/
+test_golden_sweep.py diffs against, so cost-model drift is visible (and
+reviewable) instead of silent.
+
+Run after any *intentional* cost-model change:
+  PYTHONPATH=src python tests/golden/regen_sweep_golden.py
+and commit the JSON diff alongside the change that caused it.
+"""
+import json
+import os
+import sys
+
+_HERE = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(os.path.dirname(_HERE)), "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)
+
+GOLDEN_PATH = os.path.join(_HERE, "sweep_golden.json")
+
+# 3 archs x 2 shapes x 4 clusters (two chip generations among them) = 24
+# cells — small enough to re-cost in seconds, broad enough that any change
+# to op formulas, collective models, HBM accounting, or plan enumeration
+# shows up as a diff.
+GOLDEN_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b")
+GOLDEN_SHAPES = ("train_4k", "decode_32k")
+GOLDEN_CLUSTERS = ("pod", "2pod", "v5p-pod", "v6e-pod")
+
+
+def compute_cells():
+    """Cost the golden grid and return {cell-key: expected values}."""
+    from repro.core.sweep import SweepEngine
+
+    engine = SweepEngine(search="beam")
+    cells = engine.sweep(GOLDEN_ARCHS, GOLDEN_SHAPES, GOLDEN_CLUSTERS)
+    out = {}
+    for c in cells:
+        d = c.decision
+        out[c.key] = {
+            "plan": d.plan.describe(),
+            "step_time_s": d.time,
+            "hbm_est_bytes": d.hbm_est,
+            "feasible": d.feasible,
+        }
+    return out
+
+
+def main():
+    cells = compute_cells()
+    with open(GOLDEN_PATH, "w") as f:
+        json.dump(cells, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {len(cells)} cells to {GOLDEN_PATH}")
+
+
+if __name__ == "__main__":
+    main()

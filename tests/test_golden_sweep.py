@@ -1,0 +1,52 @@
+"""Golden regression: the sweep grid's winning plans and costs must match
+the checked-in tests/golden/sweep_golden.json cell for cell.
+
+Cost-model drift (op formulas, collective models, HBM accounting, plan
+enumeration, search behavior) shows up here as a readable diff at review
+time.  If the change is intentional, regenerate and commit:
+
+  PYTHONPATH=src python tests/golden/regen_sweep_golden.py
+"""
+import importlib.util
+import json
+import math
+import os
+
+_GOLDEN_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                           "golden")
+
+# Import the regen script itself, so the grid definition and the cell
+# builder can never drift between the test and the regeneration path.
+_spec = importlib.util.spec_from_file_location(
+    "regen_sweep_golden", os.path.join(_GOLDEN_DIR, "regen_sweep_golden.py"))
+_regen = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(_regen)
+
+
+def test_sweep_grid_matches_golden():
+    with open(_regen.GOLDEN_PATH) as f:
+        golden = json.load(f)
+    got = _regen.compute_cells()
+    assert len(golden) >= 24
+    assert set(got) == set(golden), (
+        "grid keys drifted — regenerate the golden file if intentional")
+    drift = []
+    for key, want in golden.items():
+        cell = got[key]
+        if cell["plan"] != want["plan"]:
+            drift.append(f"{key}: plan {want['plan']} -> {cell['plan']}")
+        if not math.isclose(cell["step_time_s"], want["step_time_s"],
+                            rel_tol=1e-9):
+            drift.append(f"{key}: step {want['step_time_s']:.6g}s -> "
+                         f"{cell['step_time_s']:.6g}s")
+        if not math.isclose(cell["hbm_est_bytes"], want["hbm_est_bytes"],
+                            rel_tol=1e-9):
+            drift.append(f"{key}: hbm {want['hbm_est_bytes']:.6g} -> "
+                         f"{cell['hbm_est_bytes']:.6g}")
+        if cell["feasible"] != want["feasible"]:
+            drift.append(f"{key}: feasible {want['feasible']} -> "
+                         f"{cell['feasible']}")
+    assert not drift, (
+        "cost-model drift vs tests/golden/sweep_golden.json "
+        "(PYTHONPATH=src python tests/golden/regen_sweep_golden.py "
+        "if intentional):\n  " + "\n  ".join(drift))

@@ -6,8 +6,9 @@ import pytest
 from repro.configs import SHAPES, get_config
 from repro.core.cluster import multi_pod_config, single_pod_config
 from repro.core.planner import (ShardingPlan, build_step_program, choose_plan,
-                                enumerate_plans, estimate_hbm)
-from repro.core.costmodel import estimate
+                                enumerate_plans, estimate_hbm,
+                                resident_components)
+from repro.core.costmodel import PlanCostCache, estimate
 
 CC = single_pod_config()
 
@@ -99,6 +100,39 @@ def test_decode_plan_prefers_tp_for_big_models():
                     top_k=1)[0]
     assert d.feasible
     assert d.plan.tp_axes, d.plan.describe()
+
+
+def test_hbm_prefilter_agrees_with_costed_peak():
+    """The HBM-feasibility pre-filter (estimate_hbm) must never reject a
+    plan whose costed peak-HBM excursion fits: the generated plan
+    materializes every resident component the pre-filter counts, so the
+    walk's peak is always >= the pre-filter's bound."""
+    cache = PlanCostCache()
+    budget = CC.hbm_budget
+    for arch_id in ("qwen1.5-0.5b", "gemma3-12b", "phi3.5-moe-42b-a6.6b",
+                    "mamba2-1.3b"):
+        arch = get_config(arch_id)
+        for shape_id in ("train_4k", "decode_32k"):
+            shape = SHAPES[shape_id]
+            for plan in enumerate_plans(arch, shape, CC):
+                est = estimate_hbm(arch, shape, plan, CC)
+                costed = estimate(build_step_program(arch, shape, plan, CC),
+                                  CC, cache=cache)
+                label = (arch_id, shape_id, plan.describe())
+                assert costed.peak_hbm_per_device >= est - 1.0, label
+                # therefore: a rejected plan's costed peak never fits
+                if est > budget:
+                    assert costed.peak_hbm_per_device > budget, label
+
+
+def test_resident_components_sum_to_estimate():
+    arch, shape = get_config("gemma3-12b"), SHAPES["train_4k"]
+    plan = ShardingPlan(tp_axes=("model",))
+    comp = resident_components(arch, shape, plan, CC)
+    assert {"params", "opt_state", "grads", "act_stash", "ce_head"} \
+        <= set(comp)
+    assert sum(comp.values()) == pytest.approx(
+        estimate_hbm(arch, shape, plan, CC))
 
 
 def test_step_program_costs_scale_with_model():

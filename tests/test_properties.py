@@ -8,8 +8,9 @@ hypothesis = pytest.importorskip(
     "(pip install -r requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (Collective, Compute, GenericBlock, Program, estimate,
-                        single_chip_config, single_pod_config)
+from repro.core import (Collective, Compute, ForBlock, GenericBlock, IfBlock,
+                        IO, ParForBlock, PlanCostCache, Program, WhileBlock,
+                        estimate, single_chip_config, single_pod_config)
 from repro.core.linalg_ops import collective_cost, profile
 from repro.core.symbols import MemState, TensorStat
 
@@ -78,6 +79,109 @@ def test_block_cost_is_sum_of_children(n_ops):
     costed = estimate(p, CC)
     child_sum = sum(c.cost.total for c in costed.root.children[0].children)
     assert math.isclose(costed.total, child_sum, rel_tol=1e-9)
+
+
+# ------------------------------------------------------------------------
+# Randomized programs with loops/branches: memoized costing must be
+# bit-exact vs. the uncached estimator, including warm replays.
+# ------------------------------------------------------------------------
+
+_INPUT_NAMES = ("X0", "X1", "X2")
+
+_tensor_stats = st.builds(
+    TensorStat,
+    shape=st.tuples(st.integers(1, 64).map(lambda x: x * 4),
+                    st.integers(1, 64).map(lambda x: x * 4)),
+    dtype=st.sampled_from(["float32", "bfloat16"]),
+    sparsity=st.floats(min_value=0.2, max_value=1.0),
+    state=st.sampled_from([MemState.HBM, MemState.HOST, MemState.DISK]),
+    shards=st.sampled_from([1, 2, 4]),
+)
+
+_out_names = st.sampled_from([f"V{i}" for i in range(6)])
+
+
+def _leaf_nodes():
+    x = st.sampled_from(_INPUT_NAMES)
+    return st.one_of(
+        st.builds(Compute, opcode=st.just("unary"),
+                  inputs=x.map(lambda n: (n,)), output=_out_names,
+                  exec_type=st.just("CP")),
+        st.builds(Compute, opcode=st.just("tsmm"),
+                  inputs=x.map(lambda n: (n,)), output=_out_names,
+                  exec_type=st.just("DIST"),
+                  shard_axes=st.just(("data",))),
+        st.builds(Collective, kind=st.just("all_reduce"), var=x,
+                  axes=st.just(("data",))),
+        st.builds(IO, op=st.just("read"), var=x,
+                  src=st.sampled_from([MemState.HOST, MemState.DISK]),
+                  dst=st.just(MemState.HBM)),
+    )
+
+
+def _block_nodes(children):
+    body = st.lists(children, min_size=1, max_size=3)
+    return st.one_of(
+        st.builds(GenericBlock, label=st.just("g"), children=body),
+        st.builds(ForBlock, label=st.just("f"),
+                  iterations=st.one_of(st.none(), st.integers(1, 4)),
+                  body=body),
+        st.builds(WhileBlock, label=st.just("w"), body=body,
+                  predicate=st.lists(_leaf_nodes(), max_size=1),
+                  iterations=st.one_of(st.none(), st.integers(1, 3))),
+        st.builds(ParForBlock, label=st.just("p"),
+                  iterations=st.integers(1, 6),
+                  parallelism=st.integers(1, 4), body=body),
+        st.builds(IfBlock, label=st.just("i"),
+                  branches=st.lists(body, min_size=1, max_size=3),
+                  weights=st.none()),
+    )
+
+
+_programs = st.builds(
+    Program, name=st.just("rnd"),
+    blocks=st.lists(_block_nodes(st.one_of(_leaf_nodes(),
+                                           _block_nodes(_leaf_nodes()))),
+                    min_size=1, max_size=4),
+    inputs=st.fixed_dictionaries(
+        {name: _tensor_stats for name in _INPUT_NAMES}),
+)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prog=_programs)
+def test_cached_costing_bit_exact_on_random_programs(prog):
+    base = estimate(prog, POD)
+    cache = PlanCostCache()
+    cold = estimate(prog, POD, cache=cache)      # record path
+    warm = estimate(prog, POD, cache=cache)      # replay path
+    for got in (cold, warm):
+        assert math.isclose(base.total, got.total,
+                            rel_tol=1e-9, abs_tol=1e-12)
+        for field in ("io", "compute", "collective", "latency"):
+            assert math.isclose(getattr(base.breakdown, field),
+                                getattr(got.breakdown, field),
+                                rel_tol=1e-9, abs_tol=1e-12), field
+        assert math.isclose(base.peak_hbm_per_device,
+                            got.peak_hbm_per_device,
+                            rel_tol=1e-9, abs_tol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(progs=st.lists(_programs, min_size=2, max_size=4))
+def test_shared_cache_never_leaks_across_random_programs(progs):
+    """One cache serving many random programs must stay exact for each."""
+    cache = PlanCostCache()
+    bases = [estimate(p, POD) for p in progs]
+    for p, base in zip(progs, bases):
+        got = estimate(p, POD, cache=cache)
+        assert math.isclose(base.total, got.total,
+                            rel_tol=1e-9, abs_tol=1e-12)
+    # and again, fully warm, in reverse order
+    for p, base in zip(reversed(progs), reversed(bases)):
+        got = estimate(p, POD, cache=cache)
+        assert math.isclose(base.total, got.total,
+                            rel_tol=1e-9, abs_tol=1e-12)
 
 
 @settings(max_examples=30, deadline=None)
