@@ -3,13 +3,18 @@
 Enumerates cluster candidates (chip type x pod count x mesh layout x
 ICI/DCN topology), co-searches the sharding-plan space on each through one
 shared sub-plan cost cache, and ranks them under your objective — fastest
-step, cheapest step ($/step via ChipSpec.cost_per_chip_hour), or cheapest
-config meeting a step-time SLO.
+step, cheapest step ($/step via ChipSpec.cost_per_chip_hour), cheapest
+*job* ($/job with startup, checkpoint-restore and expected-preemption
+overheads amortized over --steps-per-job steps), or cheapest config
+meeting a step-time SLO.
 
 Run:
   PYTHONPATH=src python examples/optimize_resources.py
   PYTHONPATH=src python examples/optimize_resources.py \
       --arch gemma3-12b --shape train_4k --objective cost
+  PYTHONPATH=src python examples/optimize_resources.py \
+      --arch qwen1.5-0.5b --shape decode_32k --objective job_cost \
+      --steps-per-job 50000
   PYTHONPATH=src python examples/optimize_resources.py \
       --arch qwen1.5-0.5b --shape decode_32k --objective slo --slo-ms 50
 """
@@ -17,9 +22,9 @@ import argparse
 import time
 
 from repro.configs import ARCH_IDS, SHAPES, get_config
-from repro.core.resource import (OBJECTIVES, ResourceSearchStats,
-                                 enumerate_clusters, format_decisions,
-                                 optimize_resources)
+from repro.core.resource import (DEFAULT_STEPS_PER_JOB, OBJECTIVES,
+                                 ResourceSearchStats, enumerate_clusters,
+                                 format_decisions, optimize_resources)
 
 
 def main():
@@ -30,6 +35,9 @@ def main():
                     choices=list(OBJECTIVES) + ["device_seconds"])
     ap.add_argument("--slo-ms", type=float, default=None,
                     help="step-time target in ms (objective=slo)")
+    ap.add_argument("--steps-per-job", type=int,
+                    default=DEFAULT_STEPS_PER_JOB,
+                    help="job length priced by objective=job_cost")
     ap.add_argument("--chips", nargs="+", default=None,
                     metavar="CHIP", help="restrict the chip table")
     ap.add_argument("--pod-counts", nargs="+", type=int, default=(1, 2, 4))
@@ -44,7 +52,8 @@ def main():
     t0 = time.perf_counter()
     decisions = optimize_resources(
         get_config(args.arch), SHAPES[args.shape], clusters,
-        objective=args.objective, slo=slo, search=args.search, stats=stats)
+        objective=args.objective, slo=slo, search=args.search,
+        steps_per_job=args.steps_per_job, stats=stats)
     dt = time.perf_counter() - t0
 
     print(f"{args.arch} x {args.shape}, objective={args.objective}"

@@ -20,7 +20,8 @@ import argparse
 import time
 
 from repro.configs import ARCH_IDS, SHAPES, get_config, shape_applicable
-from repro.core.resource import OBJECTIVES, enumerate_clusters
+from repro.core.resource import (DEFAULT_STEPS_PER_JOB, OBJECTIVES,
+                                 enumerate_clusters)
 from repro.core.sweep import CLUSTERS, SweepEngine, format_table
 
 
@@ -41,6 +42,9 @@ def main():
     ap.add_argument("--objective", default="step_time",
                     choices=list(OBJECTIVES) + ["device_seconds"])
     ap.add_argument("--slo-ms", type=float, default=None)
+    ap.add_argument("--steps-per-job", type=int,
+                    default=DEFAULT_STEPS_PER_JOB,
+                    help="job length priced by --objective job_cost")
     ap.add_argument("--search", default="beam",
                     choices=["beam", "exhaustive"])
     args = ap.parse_args()
@@ -65,7 +69,7 @@ def main():
                 try:
                     decisions, stats = engine.optimize_cell(
                         arch, shape, clusters, objective=args.objective,
-                        slo=slo)
+                        slo=slo, steps_per_job=args.steps_per_job)
                 except ValueError as e:
                     print(f"  {arch} x {shape}: {e}")
                     continue

@@ -1,12 +1,22 @@
 """The paper's contribution: costing generated runtime execution plans.
 
-Public API:
+Public API (see ``docs/ARCHITECTURE.md`` for the paper-section -> module
+map and ``docs/COST_MODEL.md`` for the formulas):
+
   * plan IR            — :mod:`repro.core.plan`
   * symbol table       — :mod:`repro.core.symbols`
-  * cost estimator     — :func:`repro.core.costmodel.estimate` (``C(P, cc)``)
+  * cost estimator     — :func:`repro.core.costmodel.estimate` (``C(P, cc)``),
+                         emitting :class:`~repro.core.costmodel.ProgramTotals`
+                         work totals alongside the costed tree
   * compiled-plan cost — :mod:`repro.core.hlo_cost` (cost the generated HLO)
   * EXPLAIN            — :func:`repro.core.explain.explain`
-  * plan optimizer     — :mod:`repro.core.planner`
+  * plan optimizer     — :func:`repro.core.planner.choose_plan` (staged beam
+                         over sharding plans, memoized via
+                         :class:`~repro.core.costmodel.PlanCostCache`)
+  * resource optimizer — :func:`repro.core.resource.optimize_resources`
+                         (cluster x plan co-search under step-time / $-per-
+                         step / $-per-job / SLO objectives)
+  * scenario sweeps    — :class:`repro.core.sweep.SweepEngine`
   * running example    — :mod:`repro.core.linreg` (paper §2, LinReg DS)
 """
 from repro.core.cluster import (ClusterConfig, ChipSpec, CHIPS, TPU_V5E,
@@ -15,7 +25,8 @@ from repro.core.cluster import (ClusterConfig, ChipSpec, CHIPS, TPU_V5E,
                                 single_chip_config, cpu_host_config,
                                 dtype_bytes)
 from repro.core.costmodel import (CacheStats, CostBreakdown, CostEstimator,
-                                  CostedProgram, PlanCostCache, estimate)
+                                  CostedProgram, PlanCostCache, ProgramTotals,
+                                  estimate)
 from repro.core.explain import explain
 from repro.core.hlo_cost import (CompiledCost, CollectiveStat, from_compiled,
                                  lower_and_cost, parse_collectives)
@@ -26,10 +37,11 @@ from repro.core.plan import (Block, Call, Collective, Compute, CpVar,
 from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
                                 build_step_program, choose_plan,
                                 enumerate_plans, estimate_hbm,
-                                resident_components)
-from repro.core.resource import (ClusterCandidate, ResourceDecision,
-                                 ResourceSearchStats, cluster_floor_time,
-                                 enumerate_clusters, format_decisions,
+                                reference_plans, resident_components)
+from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
+                                 ResourceDecision, ResourceSearchStats,
+                                 cluster_floor_time, enumerate_clusters,
+                                 format_decisions, job_dollars, job_seconds,
                                  mesh_candidates, optimize_resources)
 from repro.core.symbols import MemState, SymbolTable, TensorStat
 from repro.core.sweep import (SweepCell, SweepEngine, format_table,
@@ -40,16 +52,17 @@ __all__ = [
     "CPU_HOST", "single_pod_config",
     "multi_pod_config", "single_chip_config", "cpu_host_config", "dtype_bytes",
     "CacheStats", "CostBreakdown", "CostEstimator", "CostedProgram",
-    "PlanCostCache", "estimate", "explain",
+    "PlanCostCache", "ProgramTotals", "estimate", "explain",
     "CompiledCost", "CollectiveStat", "from_compiled", "lower_and_cost",
     "parse_collectives", "Block", "Call", "Collective", "Compute", "CpVar",
     "CreateVar", "DataGen", "ForBlock", "FunctionBlock", "GenericBlock",
     "IfBlock", "Instruction", "IO", "JitCall", "ParForBlock", "Program",
     "RmVar", "WhileBlock", "PlanDecision", "SearchStats", "ShardingPlan",
     "build_step_program", "choose_plan", "enumerate_plans", "estimate_hbm",
-    "resident_components",
-    "ClusterCandidate", "ResourceDecision", "ResourceSearchStats",
-    "cluster_floor_time", "enumerate_clusters", "format_decisions",
+    "reference_plans", "resident_components",
+    "DEFAULT_STEPS_PER_JOB", "ClusterCandidate", "ResourceDecision",
+    "ResourceSearchStats", "cluster_floor_time", "enumerate_clusters",
+    "format_decisions", "job_dollars", "job_seconds",
     "mesh_candidates", "optimize_resources",
     "MemState", "SymbolTable", "TensorStat",
     "SweepCell", "SweepEngine", "format_table", "rank_cells", "sweep_rows",

@@ -207,6 +207,17 @@ class ClusterConfig:
     default_loop_iterations: int = 16   # N-hat for unknown while/for bounds
     default_branch_weights: Tuple[float, ...] = ()  # empty => uniform
 
+    # --- job-level pricing constants (resource optimizer, $/job) ---
+    # Analytical constants like everything else in this table (R1): they
+    # never touch the per-step cost walk, only the job-level amortization
+    # in ``repro.core.resource.job_seconds`` / ``job_dollars``.
+    job_startup_seconds: float = 180.0     # provision + weight load + compile
+    checkpoint_restore_seconds: float = 60.0   # read + reshard one checkpoint
+    # Expected preemptions per chip-hour (large slices are preempted more
+    # often in absolute terms: the rate scales with chip count).
+    preemption_rate_per_chip_hour: float = 1e-4
+    checkpoint_interval_steps: int = 1000  # work at risk between checkpoints
+
     # ----- derived -----
     @property
     def num_chips(self) -> int:
@@ -238,9 +249,17 @@ class ClusterConfig:
     def dcn_bw_eff(self) -> float:
         return self.chip.dcn_bw * self.dcn_eff
 
+    def link_class(self, axis: str) -> str:
+        """``"dcn"`` for the pod axis (crosses the data-center network),
+        ``"ici"`` for every other mesh axis.  The single source of truth
+        for axis->fabric mapping: :meth:`link_bw` and the cost estimator's
+        collective-volume accounting both route through it."""
+        return "dcn" if axis == "pod" else "ici"
+
     def link_bw(self, axis: str) -> float:
         """Per-device interconnect bandwidth along a mesh axis."""
-        return self.dcn_bw_eff if axis == "pod" else self.ici_bw_eff
+        return (self.dcn_bw_eff if self.link_class(axis) == "dcn"
+                else self.ici_bw_eff)
 
     def with_mesh(self, shape: Tuple[int, ...], axes: Tuple[str, ...]) -> "ClusterConfig":
         return dataclasses.replace(self, mesh_shape=tuple(shape), mesh_axes=tuple(axes))
@@ -266,7 +285,10 @@ class ClusterConfig:
                   self.hbm_eff, self.ici_eff, self.dcn_eff,
                   self.overlap_fraction, self.hbm_budget_fraction,
                   self.default_loop_iterations,
-                  tuple(self.default_branch_weights))
+                  tuple(self.default_branch_weights),
+                  self.job_startup_seconds, self.checkpoint_restore_seconds,
+                  self.preemption_rate_per_chip_hour,
+                  self.checkpoint_interval_steps)
             object.__setattr__(self, "_fp", fp)
         return fp
 

@@ -21,7 +21,16 @@ per-layer ``ForBlock`` body, shared program prefixes, identical candidates'
 common blocks — are costed once and replayed afterwards.  Cache keys are
 (structural node signature, symbol-table read-set fingerprint, cluster
 fingerprint), so a hit is *exact*: same cost, same symbol-table effects,
-same peak-HBM excursion.
+same peak-HBM excursion, same work totals.
+
+Alongside the time breakdown, the same walk accumulates
+:class:`ProgramTotals` — the charged per-device MXU FLOPs (by dtype), VPU
+FLOPs, HBM bytes, and collective wire volume by link class (ICI vs DCN) —
+aggregated with exactly the Eq (1) weights the costs use.  Consumers that
+need the *work* a program does (the resource optimizer's sound cluster
+floors, roofline reports) read it off the costed result instead of
+re-walking the plan with hand-mirrored semantics; see
+``docs/COST_MODEL.md``.
 """
 from __future__ import annotations
 
@@ -31,6 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import linalg_ops
 from repro.core.cluster import ClusterConfig
+from repro.core.linalg_ops import collective_wire
 from repro.core.plan import (
     Block, Call, Collective, Compute, CpVar, CreateVar, DataGen, ForBlock,
     FunctionBlock, GenericBlock, IfBlock, Instruction, IO, JitCall,
@@ -40,6 +50,86 @@ from repro.core.symbols import MemState, SymbolTable, TensorStat
 
 TINY = 4.7e-9            # bookkeeping-instruction cost (paper Fig. 4 shows 4.7E-9s)
 VPU_FRACTION = 0.10      # VPU throughput as a fraction of fp32 MXU peak
+
+
+class ProgramTotals:
+    """Charged work totals of one (sub-)walk — the estimator-native
+    counterpart of :class:`CostBreakdown`.
+
+    Where the breakdown holds *time*, the totals hold the quantities the
+    time was computed from, aggregated with the same control-flow weights:
+
+      * ``mxu_flops``   — per-device MXU FLOPs by input dtype (after the
+                          shard division each Compute was charged with),
+      * ``vpu_flops``   — per-device VPU FLOPs,
+      * ``hbm_bytes``   — per-device HBM bytes on the compute roofline
+                          (op reads+writes and datagen materialization;
+                          first-use staging IO is *not* included — it is an
+                          IO-term cost, not roofline work),
+      * ``ici_bytes`` / ``dcn_bytes`` — collective wire volume per device
+                          by link class, *before* the overlap discount.
+
+    Instances are immutable by convention (``__add__``/``scaled`` return
+    new objects; :data:`ZERO_TOTALS` is shared), which is what lets
+    :class:`PlanCostCache` replay a cached sub-walk's totals bit-exact.
+    """
+
+    __slots__ = ("mxu_flops", "vpu_flops", "hbm_bytes", "ici_bytes",
+                 "dcn_bytes")
+
+    def __init__(self, mxu_flops: Optional[Dict[str, float]] = None,
+                 vpu_flops: float = 0.0, hbm_bytes: float = 0.0,
+                 ici_bytes: float = 0.0, dcn_bytes: float = 0.0):
+        self.mxu_flops = mxu_flops if mxu_flops is not None else {}
+        self.vpu_flops = vpu_flops
+        self.hbm_bytes = hbm_bytes
+        self.ici_bytes = ici_bytes
+        self.dcn_bytes = dcn_bytes
+
+    @property
+    def collective_bytes(self) -> float:
+        """Total collective wire volume per device (ICI + DCN)."""
+        return self.ici_bytes + self.dcn_bytes
+
+    def __add__(self, o: "ProgramTotals") -> "ProgramTotals":
+        if self is ZERO_TOTALS:
+            return o
+        if o is ZERO_TOTALS:
+            return self
+        mxu = dict(self.mxu_flops)
+        for dt, f in o.mxu_flops.items():
+            mxu[dt] = mxu.get(dt, 0.0) + f
+        return ProgramTotals(mxu, self.vpu_flops + o.vpu_flops,
+                             self.hbm_bytes + o.hbm_bytes,
+                             self.ici_bytes + o.ici_bytes,
+                             self.dcn_bytes + o.dcn_bytes)
+
+    def scaled(self, w: float) -> "ProgramTotals":
+        if self is ZERO_TOTALS or w == 1.0:
+            return self
+        return ProgramTotals({dt: f * w for dt, f in self.mxu_flops.items()},
+                             self.vpu_flops * w, self.hbm_bytes * w,
+                             self.ici_bytes * w, self.dcn_bytes * w)
+
+    def as_tuple(self) -> Tuple:
+        """Hashable snapshot (sorted dtype pairs) for tests/fingerprints."""
+        return (tuple(sorted(self.mxu_flops.items())), self.vpu_flops,
+                self.hbm_bytes, self.ici_bytes, self.dcn_bytes)
+
+    def __eq__(self, o) -> bool:
+        return isinstance(o, ProgramTotals) and self.as_tuple() == o.as_tuple()
+
+    def __hash__(self) -> int:
+        return hash(self.as_tuple())
+
+    def __repr__(self) -> str:
+        mxu = sum(self.mxu_flops.values())
+        return (f"ProgramTotals(mxu={mxu:.4g}F, vpu={self.vpu_flops:.4g}F, "
+                f"hbm={self.hbm_bytes:.4g}B, ici={self.ici_bytes:.4g}B, "
+                f"dcn={self.dcn_bytes:.4g}B)")
+
+
+ZERO_TOTALS = ProgramTotals()
 
 
 @dataclasses.dataclass
@@ -66,20 +156,31 @@ class CostBreakdown:
 
 @dataclasses.dataclass
 class CostedNode:
-    """One plan node with its (aggregated) cost — feeds EXPLAIN output."""
+    """One plan node with its (aggregated) cost — feeds EXPLAIN output.
+
+    ``totals`` carries the subtree's :class:`ProgramTotals`, aggregated with
+    the same weights as ``cost`` (loops scale, branches weight, blocks sum),
+    so a cached replay of the node reproduces both bit-exact.
+    """
 
     label: str
     cost: CostBreakdown
     children: List["CostedNode"] = dataclasses.field(default_factory=list)
     note: str = ""
+    totals: ProgramTotals = ZERO_TOTALS
 
 
 @dataclasses.dataclass
 class CostedProgram:
+    """The result of :func:`estimate`: the annotated cost tree, the
+    linearized scalar (R2), its four-way breakdown, the peak per-device
+    HBM excursion, and the program's charged work totals."""
+
     root: CostedNode
     total: float
     breakdown: CostBreakdown
     peak_hbm_per_device: float
+    totals: ProgramTotals = ZERO_TOTALS
 
     def __repr__(self) -> str:
         return (f"CostedProgram(total={self.total:.4g}s, io={self.breakdown.io:.4g}, "
@@ -158,6 +259,8 @@ class CostEstimator:
 
     # ------------------------------------------------------------------ API
     def estimate(self, program: Program) -> CostedProgram:
+        """Walk ``program`` once and return its :class:`CostedProgram`
+        (cost tree + scalar + breakdown + peak HBM + work totals)."""
         symtab = SymbolTable()
         for name, stat in program.inputs.items():
             symtab.createvar(name, stat)
@@ -168,12 +271,15 @@ class CostEstimator:
                             program.functions_signature())
         root = CostedNode(f"PROGRAM {program.name}", CostBreakdown())
         total = CostBreakdown()
+        totals = ZERO_TOTALS
         for node in program.blocks:
             cn = self._cost_node(node, symtab, stack=())
             root.children.append(cn)
             total = total + cn.cost
+            totals = totals + cn.totals
         root.cost = total
-        return CostedProgram(root, total.total, total, self._peak_hbm)
+        root.totals = totals
+        return CostedProgram(root, total.total, total, self._peak_hbm, totals)
 
     # ------------------------------------------------------- block walkers
     def _cost_node(self, node: Union[Instruction, Block], symtab: SymbolTable,
@@ -234,11 +340,14 @@ class CostEstimator:
     def _sum_children(self, label: str, children, symtab, stack) -> CostedNode:
         out = CostedNode(label, CostBreakdown())
         agg = CostBreakdown()
+        totals = ZERO_TOTALS
         for c in children:
             cn = self._cost_node(c, symtab, stack)
             out.children.append(cn)
             agg = agg + cn.cost
+            totals = totals + cn.totals
         out.cost = agg
+        out.totals = totals
         return out
 
     def _cost_loop(self, node, symtab, stack) -> CostedNode:
@@ -255,13 +364,16 @@ class CostEstimator:
         if n > 1:
             warm = self._sum_children("body[warm]", node.body, symtab, stack)
             agg = pred.cost.scaled(n) + first.cost + warm.cost.scaled(n - 1)
+            totals = (pred.totals.scaled(n) + first.totals
+                      + warm.totals.scaled(n - 1))
         else:
             warm = None
             agg = pred.cost + first.cost
+            totals = pred.totals + first.totals
         kind = "FOR" if isinstance(node, ForBlock) else "WHILE"
         label = f"{kind} {node.label} (N={n}{'' if node.iterations is not None else ' est'})"
         children = [pred, first] + ([warm] if warm else [])
-        return CostedNode(label, agg, children)
+        return CostedNode(label, agg, children, totals=totals)
 
     def _cost_parfor(self, node: ParForBlock, symtab, stack) -> CostedNode:
         n = node.iterations if node.iterations is not None else self.cc.default_loop_iterations
@@ -271,11 +383,14 @@ class CostEstimator:
         if w > 1:
             warm = self._sum_children("body[warm]", node.body, symtab, stack)
             agg = first.cost + warm.cost.scaled(w - 1)
+            totals = first.totals + warm.totals.scaled(w - 1)
             children = [first, warm]
         else:
             agg = first.cost
+            totals = first.totals
             children = [first]
-        return CostedNode(f"PARFOR {node.label} (N={n}, k={k}, w={w})", agg, children)
+        return CostedNode(f"PARFOR {node.label} (N={n}, k={k}, w={w})", agg,
+                          children, totals=totals)
 
     def _cost_if(self, node: IfBlock, symtab, stack) -> CostedNode:
         pred = self._sum_children("predicate", node.predicate, symtab, stack)
@@ -284,12 +399,14 @@ class CostEstimator:
         branch_nodes, branch_tabs = [], []
         base = symtab.snapshot()
         agg = pred.cost
+        totals = pred.totals
         for i, br in enumerate(node.branches):
             symtab.restore(base)
             bn = self._sum_children(f"branch[{i}] w={weights[i]:.2f}", br, symtab, stack)
             branch_nodes.append(bn)
             branch_tabs.append(symtab.snapshot())
             agg = agg + bn.cost.scaled(weights[i])
+            totals = totals + bn.totals.scaled(weights[i])
         # pessimistic merge: a var is HBM-resident only if resident in every
         # branch that defines it; otherwise keep the colder state.
         merged = branch_tabs[0] if branch_tabs else base
@@ -302,7 +419,8 @@ class CostEstimator:
                     colder = st if st.state != MemState.HBM else other
                     merged[name] = dataclasses.replace(st, state=colder.state)
         symtab.restore(merged)
-        return CostedNode(f"IF {node.label}", agg, [pred] + branch_nodes)
+        return CostedNode(f"IF {node.label}", agg, [pred] + branch_nodes,
+                          totals=totals)
 
     # ------------------------------------------------------- instructions
     def _cost_instruction(self, inst: Instruction, symtab: SymbolTable,
@@ -320,8 +438,10 @@ class CostEstimator:
         if isinstance(inst, DataGen):
             stat = dataclasses.replace(inst.stat, state=MemState.HBM)
             symtab.createvar(inst.output, stat)
-            t = stat.bytes_per_device() / cc.hbm_bw_eff
-            return self._leaf(inst, CostBreakdown(compute=t), symtab)
+            bytes_gen = stat.bytes_per_device()
+            t = bytes_gen / cc.hbm_bw_eff
+            return self._leaf(inst, CostBreakdown(compute=t), symtab,
+                              totals=ProgramTotals(hbm_bytes=bytes_gen))
         if isinstance(inst, Compute):
             return self._cost_compute(inst, symtab)
         if isinstance(inst, IO):
@@ -335,9 +455,10 @@ class CostEstimator:
         raise TypeError(f"unknown instruction {type(inst)}")
 
     def _leaf(self, inst: Instruction, cost: CostBreakdown,
-              symtab: SymbolTable, note: str = "") -> CostedNode:
+              symtab: SymbolTable, note: str = "",
+              totals: ProgramTotals = ZERO_TOTALS) -> CostedNode:
         self._peak_hbm = max(self._peak_hbm, symtab.live_hbm_bytes())
-        return CostedNode(inst.describe(), cost, note=note)
+        return CostedNode(inst.describe(), cost, note=note, totals=totals)
 
     # -- first-use IO (the "pays the read" rule) --------------------------
     def _stage_in(self, name: str, symtab: SymbolTable) -> float:
@@ -389,8 +510,14 @@ class CostEstimator:
         if self.verbose:
             note = (f"flops={prof.flops:.3g}/shard{n_shards} "
                     f"t_flops={t_flops:.3g} t_mem={t_mem:.3g}")
+        if prof.util == "mxu":
+            totals = ProgramTotals(mxu_flops={dtype: flops},
+                                   hbm_bytes=bytes_moved)
+        else:
+            totals = ProgramTotals(vpu_flops=flops, hbm_bytes=bytes_moved)
         return self._leaf(inst, CostBreakdown(io=io_t, compute=compute_t,
-                                              latency=TINY), symtab, note)
+                                              latency=TINY), symtab, note,
+                          totals=totals)
 
     def _cost_io(self, inst: IO, symtab: SymbolTable) -> CostedNode:
         st = symtab.get(inst.var)
@@ -417,28 +544,40 @@ class CostEstimator:
         else:
             raise KeyError(f"collective on undefined var '{inst.var}'")
         t = 0.0
+        wire = {"ici": 0.0, "dcn": 0.0}
         for ax in inst.axes:
-            t += linalg_ops.collective_cost(
-                inst.kind, payload, cc.axis_size(ax), cc.link_bw(ax),
-                cc.collective_phase_latency)
+            w, hops = collective_wire(inst.kind, payload, cc.axis_size(ax))
+            t += w / cc.link_bw(ax) + hops * cc.collective_phase_latency
+            wire[cc.link_class(ax)] += w
             if inst.kind == "all_gather":
                 payload *= cc.axis_size(ax)   # hierarchical gather grows payload
         t *= (1.0 - cc.overlap_fraction)
         if inst.output and st is not None:
             symtab.createvar(inst.output, dataclasses.replace(st))
-        return self._leaf(inst, CostBreakdown(collective=t), symtab)
+        return self._leaf(inst, CostBreakdown(collective=t), symtab,
+                          totals=ProgramTotals(ici_bytes=wire["ici"],
+                                               dcn_bytes=wire["dcn"]))
 
     def _cost_jitcall(self, inst: JitCall, symtab: SymbolTable) -> CostedNode:
         io_t = sum(self._stage_in(n, symtab) for n in inst.reads)
-        bd = inst.compiled_cost.time_breakdown(self.cc)
+        cost_rec = inst.compiled_cost
+        bd = cost_rec.time_breakdown(self.cc)
         for w in inst.writes:
             if w in symtab:
                 symtab.touch_hbm(w)
         cost = CostBreakdown(io=io_t + bd.io, compute=bd.compute,
                              collective=bd.collective * (1.0 - self.cc.overlap_fraction),
                              latency=bd.latency + self.cc.dispatch_latency)
-        return self._leaf(inst, cost, symtab,
-                          note=f"from compiled HLO: {inst.compiled_cost.summary()}")
+        # Compiled modules report bf16-dominated MXU work; collectives in
+        # generated HLO ride ICI (time_breakdown prices them at ici_bw_eff).
+        ici = sum(collective_wire(c.kind, c.operand_bytes, c.group_size)[0]
+                  for c in getattr(cost_rec, "collectives", ()))
+        totals = ProgramTotals(
+            mxu_flops={"bfloat16": getattr(cost_rec, "flops_per_device", 0.0)},
+            hbm_bytes=getattr(cost_rec, "bytes_per_device", 0.0),
+            ici_bytes=ici)
+        return self._leaf(inst, cost, symtab, totals=totals,
+                          note=f"from compiled HLO: {cost_rec.summary()}")
 
     def _cost_call(self, inst: Call, symtab: SymbolTable,
                    stack: Tuple[str, ...]) -> CostedNode:
@@ -480,6 +619,19 @@ def _path_legs(src: MemState, dst: MemState) -> List[str]:
 
 def estimate(program: Program, cc: ClusterConfig,
              cache: Optional[PlanCostCache] = None) -> CostedProgram:
-    """Convenience wrapper: ``C(P, cc)``; pass ``cache`` to memoize
-    repeated sub-plans across (and within) programs."""
+    """``C(P, cc)`` — cost a runtime plan under a cluster config.
+
+    One recursive pass in execution order (no profiling, R1) returning a
+    :class:`CostedProgram`: the annotated cost tree (feed it to
+    :func:`repro.core.explain.explain` for the paper's Fig 4/5 text form),
+    the linearized scalar ``total`` (R2) with its
+    io/compute/collective/latency :class:`CostBreakdown`, the peak
+    per-device HBM excursion, and the charged :class:`ProgramTotals`.
+    Re-cost the same plan under any other ``cc`` freely (R3).
+
+    Pass one shared :class:`PlanCostCache` across calls to memoize
+    repeated sub-plans (per-layer loop bodies, shared prefixes, common
+    blocks of sibling candidates) — hits replay cost, totals, symbol-table
+    effects and peak-HBM bit-exact.
+    """
     return CostEstimator(cc, cache=cache).estimate(program)

@@ -270,39 +270,48 @@ def _adamw(p: TensorStat, **attrs) -> OpProfile:
 # ---------------------------------------------------------------------------
 
 
-def collective_cost(kind: str, bytes_per_device: float, axis_size: int,
-                    link_bw: float, phase_latency: float) -> float:
-    """Time for one collective over an axis of ``axis_size`` devices.
+def collective_wire(kind: str, bytes_per_device: float,
+                    axis_size: int) -> Tuple[float, int]:
+    """(wire bytes per device, hop count) for one collective over an axis.
 
     Ring formulas (bytes are the *per-device* payload B):
       all_gather / reduce_scatter: (n-1)/n * B_total_or_shard semantics —
         we take B as the per-device INPUT payload:
-          all_gather:      each device ends with n*B; wire time (n-1)*B/bw
+          all_gather:      each device ends with n*B; wire bytes (n-1)*B
           reduce_scatter:  input n*B-ish handled by caller; here B is the
-                           per-device input, wire time (n-1)/n * B/bw
-      all_reduce = reduce_scatter + all_gather = 2*(n-1)/n * B/bw
-      all_to_all: (n-1)/n * B/bw
-      permute: B/bw, 1 hop
+                           per-device input, wire bytes (n-1)/n * B
+      all_reduce = reduce_scatter + all_gather = 2*(n-1)/n * B
+      all_to_all: (n-1)/n * B
+      permute: B, 1 hop
+
+    The wire volume is the bandwidth-bound part of the collective's cost
+    (time = wire/link_bw + hops*phase_latency); the cost estimator also
+    accumulates it into :class:`repro.core.costmodel.ProgramTotals`, where
+    it feeds the resource optimizer's sound collective floors.
     """
     n = max(int(axis_size), 1)
     if n == 1:
-        return 0.0
+        return 0.0, 0
     b = float(bytes_per_device)
     if kind == "all_reduce":
-        wire = 2.0 * (n - 1) / n * b
-        hops = 2 * (n - 1)
-    elif kind == "all_gather":
-        wire = (n - 1) * b
-        hops = n - 1
-    elif kind == "reduce_scatter":
-        wire = (n - 1) / n * b
-        hops = n - 1
-    elif kind == "all_to_all":
-        wire = (n - 1) / n * b
-        hops = n - 1
-    elif kind in ("permute", "collective_permute"):
-        wire = b
-        hops = 1
-    else:
-        raise KeyError(f"unknown collective kind '{kind}'")
+        return 2.0 * (n - 1) / n * b, 2 * (n - 1)
+    if kind == "all_gather":
+        return (n - 1) * b, n - 1
+    if kind == "reduce_scatter":
+        return (n - 1) / n * b, n - 1
+    if kind == "all_to_all":
+        return (n - 1) / n * b, n - 1
+    if kind in ("permute", "collective_permute"):
+        return b, 1
+    raise KeyError(f"unknown collective kind '{kind}'")
+
+
+def collective_cost(kind: str, bytes_per_device: float, axis_size: int,
+                    link_bw: float, phase_latency: float) -> float:
+    """Time for one collective over an axis of ``axis_size`` devices:
+    ``wire_bytes / link_bw + hops * phase_latency`` with the ring-algorithm
+    wire volumes of :func:`collective_wire`."""
+    wire, hops = collective_wire(kind, bytes_per_device, axis_size)
+    if not hops:
+        return 0.0
     return wire / link_bw + hops * phase_latency

@@ -34,6 +34,12 @@ from repro.core.plan import (Collective, Compute, CreateVar, DataGen, ForBlock,
                              GenericBlock, IO, Program)
 from repro.core.symbols import MemState, TensorStat
 
+# Fraction of collective time hidden under compute when a plan enables
+# overlap (all enumerated plans do).  Candidate costing applies it via
+# ``cc.with_overlap``; the resource optimizer's collective floors discount
+# by the same constant, so a drift here cannot silently unsound the floors.
+OVERLAP_FRACTION = 0.7
+
 
 # ---------------------------------------------------------------------------
 # Sharding plan: the searchable decision vector
@@ -141,9 +147,7 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     prog.inputs["batch_tokens"] = _ts((mb_batch, q_len), "int32",
                                       shards=act_sh, state=MemState.HOST)
 
-    setup = GenericBlock("setup (stage batch, embed)")
-    setup.children.append(IO("read", "batch_tokens",
-                             src=MemState.HOST, dst=MemState.HBM))
+    setup = GenericBlock("setup (persistent residents)")
     # Materialize the persistent HBM residents (optimizer state, activation
     # stash, KV cache, ...) as variables, so the costed walk's peak-HBM is
     # never below the estimate_hbm pre-filter that shares this formula.
@@ -165,9 +169,18 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                                         _ts((int(comp_bytes + 0.999),), "int8")))
     setup.children.append(CreateVar("embed_table",
                                     _ts((arch.vocab_size, d), dt, weight_shards)))
-    setup.children.append(Compute("embedding", ("batch_tokens", "embed_table"),
-                                  "h", exec_type="DIST", shard_axes=act_axes))
     prog.blocks.append(setup)
+
+    # Batch staging + embedding run once per *microbatch* (the micro loop
+    # wraps body_blocks below), so a step's total embedding work is the
+    # full global batch no matter how it is microbatched — emitting them
+    # once with per-microbatch tokens would under-charge ubatch>1 plans
+    # (and break the within-role monotonicity the cluster floors rest on).
+    stage = GenericBlock("stage batch + embed (per microbatch)")
+    stage.children.append(IO("read", "batch_tokens",
+                             src=MemState.HOST, dst=MemState.HBM))
+    stage.children.append(Compute("embedding", ("batch_tokens", "embed_table"),
+                                  "h", exec_type="DIST", shard_axes=act_axes))
 
     # ------------------------------------------------------------ sublayers
     def emit_attention(ops: List, prefix: str, reps: int) -> None:
@@ -331,7 +344,7 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         return ops
 
     main_kind = "ssm" if arch.family in ("ssm", "hybrid") else "attn+ffn"
-    body_blocks: List = []
+    body_blocks: List = [stage]
     fwd = ForBlock(f"fwd layers x{arch.n_layers}", arch.n_layers,
                    body=layer_body("L_", False, main_kind))
     body_blocks.append(fwd)
@@ -354,6 +367,14 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
 
     if mode == "train":
         recompute = {"none": 0.0, "selective": 0.35, "full": 1.0}[plan.remat]
+        # Per-microbatch loss: like staging/embedding, the loss head runs
+        # once per microbatch, so its work scales with the full batch.
+        loss = GenericBlock("loss (per microbatch)")
+        loss.children.append(CreateVar("logits",
+                                       _ts((tokens, arch.vocab_size), "float32", head_sh)))
+        loss.children.append(Compute("cross_entropy", ("logits",), "loss",
+                                     exec_type="DIST", shard_axes=mm_axes))
+        body_blocks.append(loss)
         bwd_body = layer_body("B_", True, main_kind)
         if recompute > 0:
             extra = layer_body("R_", False, main_kind)
@@ -365,11 +386,7 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
             body_blocks.append(ForBlock(f"bwd shared attn x{n_app}", n_app,
                                         body=layer_body("AB_", True, "attn-shared")))
 
-        tail = GenericBlock("loss + grad reduce + update")
-        tail.children.append(CreateVar("logits",
-                                       _ts((tokens, arch.vocab_size), "float32", head_sh)))
-        tail.children.append(Compute("cross_entropy", ("logits",), "loss",
-                                     exec_type="DIST", shard_axes=mm_axes))
+        tail = GenericBlock("grad reduce + update")
         grad_bytes = pc["total"] * dtype_bytes(plan.grad_reduce_dtype) / weight_shards
         if arch.moe is not None and ep > 1:
             grad_bytes /= ep
@@ -619,10 +636,40 @@ def _deg(cc: ClusterConfig, axes: Tuple[str, ...]) -> int:
     return d
 
 
+def reference_plans(arch: ArchConfig, shape: ShapeConfig,
+                    cc: ClusterConfig) -> List[ShardingPlan]:
+    """One minimum-work representative per axis-role class of
+    :func:`enumerate_plans` — the basis of the resource optimizer's sound
+    cluster floors (:func:`repro.core.resource.cluster_floor_time`).
+
+    Every enumerated plan belongs to exactly one role (its mesh-axis
+    assignment); within a role the knobs can only *add* charged work
+    relative to this representative:
+
+      * ``remat`` heavier than ``none`` re-emits forward ops (and, under
+        FSDP, their gathers) into the backward pass;
+      * ``microbatches > 1`` keeps global work and total collective volume
+        the same at best, and inflates both when the smaller per-microbatch
+        batch stops dividing the data axes (``eff_degree`` collapses to
+        replication);
+      * the widest ``grad_reduce_dtype`` payload is avoided by picking the
+        narrowest enumerated dtype here.
+
+    So the representative's charged per-device totals (flops, HBM bytes,
+    collective wire volume — :class:`repro.core.costmodel.ProgramTotals`)
+    lower-bound every plan in its role, and a minimum over roles
+    lower-bounds the whole plan space.
+    """
+    remats, _, gdtypes = _knob_space(shape)
+    gd_min = min(gdtypes, key=dtype_bytes)
+    return [_role_plan(role, cc, remats[0], 1, gd_min)
+            for role in _model_roles(arch, shape, cc)]
+
+
 def _cost_candidate(arch: ArchConfig, shape: ShapeConfig, p: ShardingPlan,
                     cc: ClusterConfig, cache: Optional[PlanCostCache],
                     stats: SearchStats) -> PlanDecision:
-    cc_p = cc.with_overlap(0.7 if p.overlap else 0.0)
+    cc_p = cc.with_overlap(OVERLAP_FRACTION if p.overlap else 0.0)
     prog = build_step_program(arch, shape, p, cc_p)
     costed = estimate(prog, cc_p, cache=cache)
     hbm = estimate_hbm(arch, shape, p, cc_p)

@@ -12,42 +12,52 @@ pluggable objective:
   * ``step_time``       — fastest feasible step,
   * ``cost`` (alias ``device_seconds``) — cheapest step: step time x chips
     weighted by :attr:`ChipSpec.cost_per_chip_hour` (the $-cost proxy),
+  * ``job_cost``        — cheapest **job**: :func:`job_dollars` amortizes
+    startup, checkpoint restore and expected-preemption overhead over
+    ``steps_per_job`` steps (big cheap-per-step slices get preempted more),
   * ``slo``             — cheapest config whose step time meets an SLO.
 
 Candidate clusters are pruned *soundly* before any plan is costed: a
-cluster whose analytic **cost floor** (an aggregate compute/memory roofline
-lower bound that no plan on that cluster can beat — see
-:func:`cluster_floor_time`) already loses to the incumbent cannot contain
-the winner, so the whole (cluster x plan) subtree is skipped.  Together
-with the staged beam inside each cluster and the shared sub-plan cache,
-the co-search returns the exact exhaustive-scan winner at a small fraction
-of the full plan evaluations (gated by tests and benchmarks).
+cluster whose analytic **cost floor** already loses to the incumbent
+cannot contain the winner, so the whole (cluster x plan) subtree is
+skipped.  The floor (:func:`cluster_floor_time`) is built from the cost
+estimator's own work totals (:class:`repro.core.costmodel.ProgramTotals`)
+of one minimum-work reference plan per axis-role class — compute/memory
+rooflines *plus* the role's unavoidable collective wire volume over
+ICI/DCN — so the floor shares the estimator's linearization semantics by
+construction, and memory-bound decode cells (whose collectives dominate)
+prune as hard as train cells.  Together with the staged beam inside each
+cluster and the shared sub-plan cache, the co-search returns the exact
+exhaustive-scan winner at a small fraction of the full plan evaluations
+(gated by tests and benchmarks).  The soundness argument is spelled out in
+``docs/COST_MODEL.md``.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-import math
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core import linalg_ops
 from repro.core.cluster import CHIPS, ChipSpec, ClusterConfig
-from repro.core.costmodel import (VPU_FRACTION, CacheStats, PlanCostCache)
-from repro.core.plan import (Call, Collective, Compute, CpVar, CreateVar,
-                             DataGen, ForBlock, FunctionBlock, GenericBlock,
-                             IfBlock, IO, JitCall, ParForBlock, Program,
-                             RmVar, WhileBlock)
-from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
+from repro.core.costmodel import (VPU_FRACTION, CacheStats, PlanCostCache,
+                                  ProgramTotals, estimate)
+from repro.core.planner import (OVERLAP_FRACTION, PlanDecision, SearchStats,
                                 build_step_program, choose_plan,
-                                enumerate_plans)
+                                enumerate_plans, reference_plans)
 
-OBJECTIVES = ("step_time", "cost", "slo")
+OBJECTIVES = ("step_time", "cost", "job_cost", "slo")
 _OBJECTIVE_ALIASES = {
     "step_time": "step_time", "time": "step_time",
     "cost": "cost", "device_seconds": "cost", "cost_per_step": "cost",
+    "job_cost": "job_cost", "cost_per_job": "job_cost", "job": "job_cost",
     "slo": "slo", "slo_cheapest": "slo",
 }
+
+# Default job length for the job-level objective: long enough that compute
+# dominates startup on healthy configs, short enough that preemption-heavy
+# giant slices pay visibly for their restarts.
+DEFAULT_STEPS_PER_JOB = 10_000
 
 # Purchasable slice granularity per chip generation (chips per pod slice).
 POD_CHIPS = {"tpu_v5e": 256, "tpu_v5p": 64, "tpu_v6e": 256}
@@ -169,95 +179,16 @@ def _as_candidate(c) -> ClusterCandidate:
 # ---------------------------------------------------------------------------
 # Sound per-cluster cost floors (prune whole clusters without costing plans)
 # ---------------------------------------------------------------------------
+#
+# One minimum-work reference plan per axis-role class is generated and
+# costed through the estimator itself; the floor is read off the resulting
+# ProgramTotals.  There is no second plan walker to keep in sync (the old
+# ``_walk_totals`` hand-mirror and its runtime tripwire are gone): the
+# totals come from the same recursive pass that produces the costs, so the
+# floor inherits the estimator's semantics by construction.
 
-
-@dataclasses.dataclass(frozen=True)
-class ProgramFloor:
-    """Cluster-independent work totals of a step program: global MXU FLOPs
-    by dtype, VPU FLOPs, and HBM bytes moved — every candidate plan for the
-    same (arch, shape) executes at least this much work."""
-
-    mxu_flops: Tuple[Tuple[str, float], ...]
-    vpu_flops: float
-    hbm_bytes: float
-
-
-def _walk_totals(nodes, env: Dict, mult: float, functions: Dict,
-                 stack: Tuple[str, ...], acc: Dict) -> None:
-    for node in nodes:
-        if isinstance(node, CreateVar):
-            env[node.name] = node.stat
-        elif isinstance(node, CpVar):
-            if node.src in env:
-                env[node.dst] = env[node.src]
-        elif isinstance(node, RmVar):
-            for n in node.names:
-                env.pop(n, None)
-        elif isinstance(node, DataGen):
-            env[node.output] = node.stat
-        elif isinstance(node, Compute):
-            stats = [env[n] for n in node.inputs]
-            prof = linalg_ops.profile(node.opcode, stats, **node.attrs)
-            if prof.util == "mxu":
-                dt = stats[0].dtype if stats else "bfloat16"
-                acc["mxu"][dt] = acc["mxu"].get(dt, 0.0) + prof.flops * mult
-            else:
-                acc["vpu"] += prof.flops * mult
-            acc["bytes"] += prof.bytes * mult
-            env[node.output] = prof.out
-        elif isinstance(node, Collective):
-            if node.output and node.var in env:
-                env[node.output] = env[node.var]
-        elif isinstance(node, (IO, JitCall)):
-            pass                       # adds cost only; no flop/byte floor
-        elif isinstance(node, Call):
-            if node.func not in stack:
-                fn = functions.get(node.func)
-                if fn is not None:
-                    _walk_totals(fn.body, env, mult, functions,
-                                 stack + (node.func,), acc)
-        elif isinstance(node, GenericBlock):
-            _walk_totals(node.children, env, mult, functions, stack, acc)
-        elif isinstance(node, (ForBlock, WhileBlock)):
-            n = max(int(node.iterations), 1) if node.iterations else 1
-            _walk_totals(node.predicate, env, mult * n, functions, stack, acc)
-            _walk_totals(node.body, env, mult * n, functions, stack, acc)
-        elif isinstance(node, ParForBlock):
-            n = max(int(node.iterations), 1) if node.iterations else 1
-            w = math.ceil(n / max(int(node.parallelism), 1))
-            _walk_totals(node.body, env, mult * w, functions, stack, acc)
-        elif isinstance(node, IfBlock):
-            _walk_totals(node.predicate, env, mult, functions, stack, acc)
-            nb = max(len(node.branches), 1)
-            weights = list(node.weights) if node.weights else [1.0 / nb] * nb
-            base = dict(env)
-            branch_envs = []
-            for br, w in zip(node.branches, weights):
-                benv = dict(base)      # each branch starts from the pre-If env
-                _walk_totals(br, benv, mult * w, functions, stack, acc)
-                branch_envs.append(benv)
-            # merge like CostEstimator._cost_if: a name survives only when
-            # every branch leaves it defined (shapes from the first branch)
-            merged = branch_envs[0] if branch_envs else base
-            for benv in branch_envs[1:]:
-                for name in list(merged):
-                    if name not in benv:
-                        del merged[name]
-            env.clear()
-            env.update(merged)
-        elif isinstance(node, FunctionBlock):
-            _walk_totals(node.body, env, mult, functions, stack, acc)
-        else:
-            raise TypeError(f"unknown plan node {type(node)}")
-
-
-def program_totals(prog: Program) -> ProgramFloor:
-    """Global (plan- and cluster-independent) work totals of a program."""
-    acc = {"mxu": {}, "vpu": 0.0, "bytes": 0.0}
-    env = dict(prog.inputs)
-    _walk_totals(prog.blocks, env, 1.0, prog.functions, (), acc)
-    return ProgramFloor(tuple(sorted(acc["mxu"].items())), acc["vpu"],
-                        acc["bytes"])
+# Reference walks share one cache: role bodies repeat across geometries.
+_FLOOR_CACHE = PlanCostCache()
 
 
 @functools.lru_cache(maxsize=None)
@@ -272,35 +203,91 @@ def _plan_space_size(arch: ArchConfig, shape: ShapeConfig,
 
 
 @functools.lru_cache(maxsize=None)
-def _floor_for(arch: ArchConfig, shape: ShapeConfig) -> ProgramFloor:
-    # The minimal-work reference: remat=none (no recompute), micro=1.  All
-    # candidate plans emit the same compute ops at the same global shapes
-    # (sharding divides per-device work, never global work), so this is a
-    # true floor over the whole plan space.
-    ref = ShardingPlan(name="floor-ref", batch_axes=("data",),
-                       remat="none", microbatches=1)
-    ref_cc = ClusterConfig(mesh_shape=(1,), mesh_axes=("data",))
-    return program_totals(build_step_program(arch, shape, ref, ref_cc))
+def _floor_totals(arch: ArchConfig, shape: ShapeConfig,
+                  mesh_shape: Tuple[int, ...],
+                  mesh_axes: Tuple[str, ...]) -> Tuple[ProgramTotals, ...]:
+    """Estimator-charged work totals of each role's minimum-work reference
+    plan (:func:`repro.core.planner.reference_plans`) on a mesh geometry.
+
+    Totals (per-device flops/bytes after sharding, collective wire volume
+    per link class) never consult the chip, so one entry serves every chip
+    generation with that geometry — the walks amortize across the whole
+    candidate grid and across optimize calls."""
+    cc = ClusterConfig(mesh_shape=mesh_shape, mesh_axes=mesh_axes)
+    return tuple(
+        estimate(build_step_program(arch, shape, plan, cc), cc,
+                 cache=_FLOOR_CACHE).totals
+        for plan in reference_plans(arch, shape, cc))
 
 
 def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
                        cc: ClusterConfig) -> float:
-    """A sound lower bound on ``C(P, cc)`` over EVERY sharding plan P.
+    """A sound lower bound on ``C(P, cc)`` over every enumerated plan P.
 
-    Per instruction the estimator charges max(flops/(shards·peak·util),
-    bytes/(shards·hbm_bw)); shards never exceeds the chip count (times one
-    duplicated axis for MoE ep+tp plans), util never exceeds matmul_util,
-    and collectives/latency/IO only add — so aggregate compute and memory
-    rooflines at full-cluster parallelism bound any plan from below."""
-    fl = _floor_for(arch, shape)
-    dup = max(cc.mesh_shape) if arch.moe is not None else 1
-    denom = max(cc.num_chips * dup, 1)
+    For each axis-role class, the estimator charges its reference plan a
+    set of per-device totals that every plan in the class must at least
+    match (see :func:`repro.core.planner.reference_plans`).  The estimator
+    prices those totals as a *sum over instructions* of
+    ``max(t_flops, t_mem)`` plus collectives at
+    ``(wire/link_bw + hops·latency) · (1 − overlap)`` plus nonnegative
+    IO/latency terms; this floor keeps only
+
+      ``max(Σ t_flops, Σ t_mem) + Σ wire/link_bw · (1 − OVERLAP_FRACTION)``
+
+    at the most generous rates (``matmul_util`` for every MXU op, effective
+    link bandwidths, no phase latency), each a term-wise lower bound of
+    what the estimator charges.  The minimum over role classes then bounds
+    the whole plan space — including memory-bound decode cells, whose
+    unavoidable tensor-parallel collectives now tighten the floor instead
+    of being ignored."""
     util = max(cc.matmul_util, cc.small_matmul_util)
-    t_flops = sum(f / (denom * cc.chip.peak(dt) * util)
-                  for dt, f in fl.mxu_flops)
-    t_flops += fl.vpu_flops / (denom * cc.chip.peak("float32") * VPU_FRACTION)
-    t_mem = fl.hbm_bytes / (denom * cc.hbm_bw_eff)
-    return max(t_flops, t_mem)
+    vpu_peak = cc.chip.peak("float32") * VPU_FRACTION
+    best = float("inf")
+    for t in _floor_totals(arch, shape, cc.mesh_shape, cc.mesh_axes):
+        t_flops = sum(f / (cc.chip.peak(dt) * util)
+                      for dt, f in t.mxu_flops.items())
+        t_flops += t.vpu_flops / vpu_peak
+        t_mem = t.hbm_bytes / cc.hbm_bw_eff
+        t_coll = (t.ici_bytes / cc.ici_bw_eff
+                  + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - OVERLAP_FRACTION)
+        best = min(best, max(t_flops, t_mem) + t_coll)
+    return best
+
+
+# ---------------------------------------------------------------------------
+# Job-level pricing ($/job: amortized startup, restore, preemption)
+# ---------------------------------------------------------------------------
+
+
+def job_seconds(cc: ClusterConfig, step_time: float,
+                steps_per_job: int = DEFAULT_STEPS_PER_JOB) -> float:
+    """Expected wall-clock seconds to complete ``steps_per_job`` steps.
+
+    ``startup + compute + E[preemptions] · (restart + lost work)`` with
+
+      * compute          = ``steps_per_job · step_time``,
+      * E[preemptions]   = ``preemption_rate_per_chip_hour · num_chips ·
+                           compute_hours`` (first-order: rate applied to
+                           the compute time, not the inflated wall time),
+      * each preemption  = startup + checkpoint restore + half a
+        checkpoint interval of recomputed steps.
+
+    Strictly increasing in ``step_time`` for a fixed cluster — which is
+    what lets the job-cost objective prune clusters by their step-time
+    floor (:func:`cluster_floor_time`) without losing soundness."""
+    compute = step_time * max(int(steps_per_job), 1)
+    restart = (cc.job_startup_seconds + cc.checkpoint_restore_seconds
+               + 0.5 * cc.checkpoint_interval_steps * step_time)
+    expected_preemptions = (cc.preemption_rate_per_chip_hour * cc.num_chips
+                            * compute / 3600.0)
+    return cc.job_startup_seconds + compute + expected_preemptions * restart
+
+
+def job_dollars(cc: ClusterConfig, step_time: float,
+                steps_per_job: int = DEFAULT_STEPS_PER_JOB) -> float:
+    """$ to complete a job: expected wall seconds x chips x $/chip-hour."""
+    return (job_seconds(cc, step_time, steps_per_job) * cc.num_chips
+            * cc.chip.cost_per_chip_hour / 3600.0)
 
 
 # ---------------------------------------------------------------------------
@@ -319,6 +306,7 @@ class ResourceDecision:
     floor_time: float
     pruned: str = ""                        # non-empty: skipped, why
     search: Optional[SearchStats] = None
+    steps_per_job: int = DEFAULT_STEPS_PER_JOB
 
     @property
     def time(self) -> float:
@@ -337,6 +325,16 @@ class ResourceDecision:
         """$ per step: device-seconds priced at cost_per_chip_hour."""
         return self.device_seconds * self.cc.chip.cost_per_chip_hour / 3600.0
 
+    @property
+    def job_seconds(self) -> float:
+        """Expected wall seconds for a ``steps_per_job``-step job."""
+        return job_seconds(self.cc, self.time, self.steps_per_job)
+
+    @property
+    def cost_per_job(self) -> float:
+        """$ per job, overheads amortized (see :func:`job_dollars`)."""
+        return job_dollars(self.cc, self.time, self.steps_per_job)
+
     def meets(self, slo: Optional[float]) -> bool:
         return self.feasible and slo is not None and self.time <= slo
 
@@ -344,7 +342,8 @@ class ResourceDecision:
         if self.pruned:
             return f"{self.cluster_id}: pruned ({self.pruned})"
         return (f"{self.cluster_id}: {self.decision.plan.describe()} "
-                f"T={self.time * 1e3:.2f}ms ${self.cost_per_step:.4f}/step")
+                f"T={self.time * 1e3:.2f}ms ${self.cost_per_step:.4f}/step "
+                f"${self.cost_per_job:.2f}/job")
 
 
 @dataclasses.dataclass
@@ -392,6 +391,8 @@ def _rank_key(objective: str, slo: Optional[float]):
             vals: Tuple = (rd.time, rd.cost_per_step)
         elif objective == "cost":
             vals = (rd.cost_per_step, rd.time)
+        elif objective == "job_cost":
+            vals = (rd.cost_per_job, rd.time)
         else:
             vals = (0 if rd.meets(slo) else 1, rd.cost_per_step, rd.time)
         return (0, 0 if rd.feasible else 1) + vals + (rd.cluster_id,)
@@ -400,21 +401,27 @@ def _rank_key(objective: str, slo: Optional[float]):
 
 def _floor_cannot_win(objective: str, slo: Optional[float],
                       incumbent: ResourceDecision, cc: ClusterConfig,
-                      floor_t: float) -> bool:
+                      floor_t: float, steps_per_job: int) -> bool:
     """Sound pruning test: could ANY plan on this cluster outrank the
     (feasible) incumbent?  Uses strict inequalities so exact ties are still
-    costed and resolved by the deterministic tie-break."""
+    costed and resolved by the deterministic tie-break.  For the job-cost
+    objective the step-time floor maps through :func:`job_dollars`, which
+    is strictly increasing in step time, so the mapped value is still a
+    lower bound on any plan's $/job."""
     floor_cost = floor_t * cc.num_chips * cc.chip.cost_per_chip_hour / 3600.0
     if objective == "step_time":
         return floor_t > incumbent.time
     if objective == "cost":
         return floor_cost > incumbent.cost_per_step
+    if objective == "job_cost":
+        return job_dollars(cc, floor_t, steps_per_job) > incumbent.cost_per_job
     if incumbent.meets(slo):
         return floor_t > slo or floor_cost > incumbent.cost_per_step
     return floor_t > slo and floor_cost > incumbent.cost_per_step
 
 
-def _visit_order_key(objective: str, slo: Optional[float]):
+def _visit_order_key(objective: str, slo: Optional[float],
+                     steps_per_job: int):
     def key(entry) -> Tuple:
         cand, floor_t = entry
         floor_cost = (floor_t * cand.cc.num_chips
@@ -423,6 +430,9 @@ def _visit_order_key(objective: str, slo: Optional[float]):
             return (floor_t, floor_cost, cand.cid)
         if objective == "cost":
             return (floor_cost, floor_t, cand.cid)
+        if objective == "job_cost":
+            return (job_dollars(cand.cc, floor_t, steps_per_job), floor_t,
+                    cand.cid)
         return (0 if (slo is None or floor_t <= slo) else 1,
                 floor_cost, floor_t, cand.cid)
     return key
@@ -439,14 +449,22 @@ def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
                        slo: Optional[float] = None, *,
                        search: str = "beam", beam_width: int = 4,
                        prune: Optional[bool] = None,
+                       steps_per_job: int = DEFAULT_STEPS_PER_JOB,
                        cache: Optional[PlanCostCache] = None,
                        stats: Optional[ResourceSearchStats] = None
                        ) -> List[ResourceDecision]:
     """Rank cluster candidates (with their best sharding plan) under an
-    objective.  ``search="beam"`` (default) prunes clusters by their sound
-    cost floor and plans by the staged beam; ``search="exhaustive"`` costs
-    every (cluster x plan) cell — the verification oracle.  Pass a shared
-    :class:`PlanCostCache` to reuse sub-plan costs across calls."""
+    objective.
+
+    ``search="beam"`` (default) prunes clusters by their sound cost floor
+    and plans by the staged beam; ``search="exhaustive"`` costs every
+    (cluster x plan) cell — the verification oracle.  Both return the
+    identical winner (gated by tests/benchmarks).  ``steps_per_job`` sizes
+    the job the ``job_cost`` objective prices (ignored otherwise).  Pass a
+    shared :class:`PlanCostCache` to reuse sub-plan costs across calls and
+    a :class:`ResourceSearchStats` to observe how much of the space was
+    actually evaluated.
+    """
     objective = _canon_objective(objective, slo)
     if prune is None:
         prune = search == "beam"
@@ -463,19 +481,20 @@ def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
         _plan_space_size(arch, shape, cand.cc.mesh_shape, cand.cc.mesh_axes)
         for cand, _ in entries)
     if prune:
-        entries.sort(key=_visit_order_key(objective, slo))
+        entries.sort(key=_visit_order_key(objective, slo, steps_per_job))
     key = _rank_key(objective, slo)
     incumbent: Optional[ResourceDecision] = None
     out: List[ResourceDecision] = []
     for cand, floor_t in entries:
         if (prune and incumbent is not None
                 and _floor_cannot_win(objective, slo, incumbent, cand.cc,
-                                      floor_t)):
+                                      floor_t, steps_per_job)):
             stats.clusters_pruned += 1
             out.append(ResourceDecision(
                 cand.cid, cand.cc, None, floor_t,
                 pruned=f"floor {floor_t * 1e3:.2f}ms loses to "
-                       f"{incumbent.cluster_id}"))
+                       f"{incumbent.cluster_id}",
+                steps_per_job=steps_per_job))
             continue
         pstats = SearchStats()
         best = choose_plan(arch, shape, cand.cc, top_k=1, search=search,
@@ -483,16 +502,8 @@ def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
                            stats=pstats)[0]
         stats.plan_evals += pstats.costed
         stats.clusters_costed += 1
-        rd = ResourceDecision(cand.cid, cand.cc, best, floor_t, search=pstats)
-        if rd.time < floor_t * (1.0 - 1e-9):
-            # Tripwire for the one invariant pruning depends on: the floor
-            # walker (_walk_totals) mirroring CostEstimator's semantics.
-            # Drift shows up here on every search instead of as a silently
-            # mispruned winner.
-            raise RuntimeError(
-                f"unsound cluster floor for {cand.cid}: best plan costs "
-                f"{rd.time:.6g}s < floor {floor_t:.6g}s — _walk_totals has "
-                "drifted from CostEstimator; fix it before trusting pruning")
+        rd = ResourceDecision(cand.cid, cand.cc, best, floor_t, search=pstats,
+                              steps_per_job=steps_per_job)
         out.append(rd)
         if rd.feasible and (incumbent is None or key(rd) < key(incumbent)):
             incumbent = rd
@@ -505,20 +516,22 @@ def format_decisions(decisions: Sequence[ResourceDecision],
                      slo: Optional[float] = None) -> str:
     """Fixed-width ranked table for examples / EXPLAIN output."""
     header = (f"{'#':>3} {'cluster':24} {'chips':>6} {'step':>10} "
-              f"{'$/step':>9} {'feas':>4}  {'chosen plan':40} {'search':28}")
+              f"{'$/step':>9} {'$/job':>9} {'feas':>4}  "
+              f"{'chosen plan':40} {'search':28}")
     lines = [header, "-" * len(header)]
     for i, rd in enumerate(decisions, 1):
         if rd.pruned:
             lines.append(f"{i:>3} {rd.cluster_id:24} "
                          f"{rd.cc.num_chips:>6} {'--':>10} {'--':>9} "
-                         f"{'cut':>4}  pruned: {rd.pruned[:56]}")
+                         f"{'--':>9} {'cut':>4}  pruned: {rd.pruned[:56]}")
             continue
         feas = "y" if rd.feasible else "OOM"
         if slo is not None:
             feas = "slo" if rd.meets(slo) else feas
         lines.append(
             f"{i:>3} {rd.cluster_id:24} {rd.cc.num_chips:>6} "
-            f"{rd.time * 1e3:9.2f}ms {rd.cost_per_step:9.5f} {feas:>4}  "
+            f"{rd.time * 1e3:9.2f}ms {rd.cost_per_step:9.5f} "
+            f"{rd.cost_per_job:9.2f} {feas:>4}  "
             f"{rd.decision.plan.describe():40} "
             f"{rd.search.describe() if rd.search else '':28}")
     return "\n".join(lines)

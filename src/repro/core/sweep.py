@@ -27,8 +27,9 @@ from repro.core.cluster import (TPU_V5P, TPU_V6E, ClusterConfig,
                                 multi_pod_config, single_pod_config)
 from repro.core.costmodel import CacheStats, PlanCostCache
 from repro.core.planner import PlanDecision, SearchStats, choose_plan
-from repro.core.resource import (ClusterCandidate, ResourceDecision,
-                                 ResourceSearchStats, optimize_resources)
+from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
+                                 ResourceDecision, ResourceSearchStats,
+                                 optimize_resources)
 
 # Named cluster shorthands accepted anywhere a cluster is given (pure
 # dataclass constants — building them never touches jax device state).
@@ -122,18 +123,20 @@ class SweepEngine:
                       clusters: Optional[Sequence] = None,
                       objective: str = "step_time",
                       slo: Optional[float] = None,
+                      steps_per_job: int = DEFAULT_STEPS_PER_JOB,
                       ) -> Tuple[List[ResourceDecision], ResourceSearchStats]:
         """The ``--resources`` dimension: instead of costing one fixed
         cluster, co-search the cluster grid for this (arch x shape) through
         the engine's shared sub-plan cache and return the ranked
-        :class:`ResourceDecision` table plus search stats."""
+        :class:`ResourceDecision` table plus search stats.
+        ``steps_per_job`` sizes the job priced by ``objective="job_cost"``."""
         _, arch = _resolve_arch(arch)
         _, shape = _resolve_shape(shape)
         stats = ResourceSearchStats()
         decisions = optimize_resources(
             arch, shape, clusters, objective=objective, slo=slo,
             search=self.search, beam_width=self.beam_width,
-            cache=self.cache, stats=stats)
+            steps_per_job=steps_per_job, cache=self.cache, stats=stats)
         return decisions, stats
 
 

@@ -17,7 +17,8 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig
 from repro.core.costmodel import PlanCostCache
 from repro.core.planner import PlanDecision, ShardingPlan, choose_plan
-from repro.core.resource import mesh_candidates, optimize_resources
+from repro.core.resource import (DEFAULT_STEPS_PER_JOB, mesh_candidates,
+                                 optimize_resources)
 
 
 @dataclasses.dataclass
@@ -35,6 +36,7 @@ def replan(arch: ArchConfig, shape: ShapeConfig, *,
            new_mesh_axes: Optional[Tuple[str, ...]] = None,
            available_chips: Optional[int] = None,
            objective: str = "step_time",
+           steps_per_job: int = DEFAULT_STEPS_PER_JOB,
            cache: Optional[PlanCostCache] = None) -> ElasticPlan:
     """Re-cost the program for a resized cluster.
 
@@ -43,6 +45,9 @@ def replan(arch: ArchConfig, shape: ShapeConfig, *,
     failure — and the resource optimizer picks the best mesh factorization
     of the survivors (same chip, every (data x model) layout) by ``C(P,
     cc)`` under ``objective``, instead of a hand-rolled dp-degree guess.
+    ``objective="job_cost"`` (with ``steps_per_job`` for the remaining job
+    length) picks the cheapest way to *finish the job* — relevant after a
+    loss, when restart overheads have just been paid.
     """
     if new_mesh_shape is not None:
         axes = new_mesh_axes or old_cc.mesh_axes
@@ -54,6 +59,7 @@ def replan(arch: ArchConfig, shape: ShapeConfig, *,
             raise ValueError(f"no candidate meshes for {available_chips} "
                              "surviving chips")
         best = optimize_resources(arch, shape, cands, objective=objective,
+                                  steps_per_job=steps_per_job,
                                   cache=cache)[0]
         new_cc, decision = best.cc, best.decision
     else:

@@ -1,0 +1,92 @@
+"""Docs suite checks (fast tier + CI `docs` job).
+
+* Every ``>>>`` block in the README and docs/ is a doctest — run them, so
+  the quickstart and the cost-model examples can never silently rot.
+* Every relative markdown link must resolve to a real file (anchors
+  stripped; external http(s) links are not fetched — no network in CI).
+"""
+import doctest
+import os
+import re
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOCTEST_FILES = (
+    "README.md",
+    os.path.join("docs", "ARCHITECTURE.md"),
+    os.path.join("docs", "COST_MODEL.md"),
+    "CONTRIBUTING.md",
+)
+
+# [text](target) — excluding images; inline code spans are not links
+_LINK_RE = re.compile(r"(?<!\!)\[[^\]]+\]\(([^)\s]+)\)")
+
+
+def _markdown_files():
+    out = []
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".github")]
+        out.extend(os.path.join(dirpath, f) for f in filenames
+                   if f.endswith(".md"))
+    return sorted(out)
+
+
+@pytest.mark.parametrize("relpath", DOCTEST_FILES)
+def test_doc_doctests(relpath):
+    path = os.path.join(ROOT, relpath)
+    assert os.path.exists(path), f"{relpath} missing — the docs suite is " \
+                                 "part of the repo contract"
+    results = doctest.testfile(path, module_relative=False, verbose=False)
+    assert results.failed == 0, (
+        f"{relpath}: {results.failed}/{results.attempted} doctests failed "
+        "(run `PYTHONPATH=src python -m doctest " + relpath + "` for detail)")
+
+
+def test_quickstart_doctest_exists():
+    """The README quickstart must actually BE a doctest (>=3 examples), not
+    a dead code block."""
+    path = os.path.join(ROOT, "README.md")
+    with open(path) as f:
+        examples = doctest.DocTestParser().get_examples(f.read())
+    assert len(examples) >= 3
+
+
+def test_markdown_links_resolve():
+    bad = []
+    for md in _markdown_files():
+        base = os.path.dirname(md)
+        with open(md) as f:
+            text = f.read()
+        for target in _LINK_RE.findall(text):
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            rel = target.split("#", 1)[0]
+            if not rel:               # pure in-page anchor
+                continue
+            if not os.path.exists(os.path.normpath(os.path.join(base, rel))):
+                bad.append(f"{os.path.relpath(md, ROOT)} -> {target}")
+    assert not bad, "broken markdown links:\n  " + "\n  ".join(bad)
+
+
+def test_docs_name_only_living_symbols():
+    """Back-tick references like `module.symbol` in docs/ must exist in the
+    public core API when they name repro.core members — docs rot check."""
+    import repro.core as core
+    pat = re.compile(r"`(?:repro\.core\.)?(?:costmodel|resource|planner|"
+                     r"sweep|cluster)\.([A-Za-z_][A-Za-z0-9_]*)`")
+    missing = []
+    for rel in ("docs/ARCHITECTURE.md", "docs/COST_MODEL.md"):
+        with open(os.path.join(ROOT, rel)) as f:
+            text = f.read()
+        for name in pat.findall(text):
+            if not (hasattr(core, name)
+                    or any(hasattr(getattr(core, m), name)
+                           for m in ("costmodel", "resource", "planner",
+                                     "sweep", "cluster")
+                           if hasattr(core, m))):
+                missing.append(f"{rel}: {name}")
+    assert not missing, "docs reference symbols that do not exist:\n  " \
+                        + "\n  ".join(missing)

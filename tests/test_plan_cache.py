@@ -107,6 +107,41 @@ def test_cache_shared_across_candidates_saves_walks():
     assert st.hits > st.misses
 
 
+def test_program_totals_round_trip_bit_exact_through_cache():
+    """ProgramTotals (the floor's input) must replay bit-exact from the
+    cache: cold record and warm replay both equal the uncached walk, field
+    for field, with exact float equality (not isclose)."""
+    cache = PlanCostCache()
+    for prog in _lm_programs()[:6]:
+        base = estimate(prog, CC).totals
+        cold = estimate(prog, CC, cache=cache).totals
+        warm = estimate(prog, CC, cache=cache).totals
+        assert base.as_tuple() == cold.as_tuple() == warm.as_tuple()
+        # totals carry real work in every bucket this program exercises
+        assert sum(base.mxu_flops.values()) > 0
+        assert base.vpu_flops > 0 and base.hbm_bytes > 0
+        assert base.collective_bytes == base.ici_bytes + base.dcn_bytes
+
+
+def test_program_totals_track_link_classes():
+    """Collective volume lands in the bucket of the axis's fabric: "pod"
+    crosses DCN, every other axis rides ICI."""
+    from repro.core import multi_pod_config
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["train_4k"]
+    pod_cc = CC
+    dcn_cc = multi_pod_config()
+    plan = ShardingPlan(name="dp+tp", batch_axes=("pod", "data"),
+                        tp_axes=("model",))
+    single = estimate(build_step_program(
+        arch, shape, ShardingPlan(name="dp+tp", batch_axes=("data",),
+                                  tp_axes=("model",)), pod_cc), pod_cc).totals
+    multi = estimate(build_step_program(arch, shape, plan, dcn_cc),
+                     dcn_cc).totals
+    assert single.dcn_bytes == 0.0          # no pod axis on a single slice
+    assert single.ici_bytes > 0.0           # tp collectives ride ICI
+    assert multi.dcn_bytes > 0.0            # grad reduce crosses DCN
+
+
 # ------------------------------------------------------ beam vs. exhaustive
 @pytest.mark.parametrize("arch_id", ["qwen1.5-0.5b", "gemma3-12b"])
 def test_beam_matches_exhaustive_winner(arch_id):

@@ -184,6 +184,52 @@ def test_shared_cache_never_leaks_across_random_programs(progs):
                             rel_tol=1e-9, abs_tol=1e-12)
 
 
+@settings(max_examples=40, deadline=None)
+@given(prog=_programs)
+def test_collective_floor_bounds_costed_collective_time(prog):
+    """The collective-floor term the resource optimizer builds from
+    ProgramTotals — wire volume over effective link bandwidth, discounted
+    by the overlap fraction — must never exceed the collective time the
+    estimator actually charged.  This is the property that makes the
+    tightened cluster floors sound (docs/COST_MODEL.md §floors)."""
+    for cc in (POD, POD.with_overlap(0.7)):
+        costed = estimate(prog, cc)
+        t = costed.totals
+        floor = (t.ici_bytes / cc.ici_bw_eff + t.dcn_bytes / cc.dcn_bw_eff) \
+            * (1.0 - cc.overlap_fraction)
+        assert floor <= costed.breakdown.collective * (1 + 1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prog=_programs)
+def test_totals_roofline_bounds_costed_compute_time(prog):
+    """Aggregate compute/memory rooflines priced from ProgramTotals at the
+    most generous rates lower-bound the charged compute time — the other
+    half of the cluster-floor soundness argument."""
+    from repro.core.costmodel import VPU_FRACTION
+    cc = POD
+    costed = estimate(prog, cc)
+    t = costed.totals
+    util = max(cc.matmul_util, cc.small_matmul_util)
+    t_flops = sum(f / (cc.chip.peak(dt) * util)
+                  for dt, f in t.mxu_flops.items())
+    t_flops += t.vpu_flops / (cc.chip.peak("float32") * VPU_FRACTION)
+    t_mem = t.hbm_bytes / cc.hbm_bw_eff
+    assert max(t_flops, t_mem) <= costed.breakdown.compute * (1 + 1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(prog=_programs)
+def test_totals_replay_bit_exact_on_random_programs(prog):
+    """Cached replay must reproduce ProgramTotals exactly — the floor
+    would silently drift otherwise."""
+    base = estimate(prog, POD).totals
+    cache = PlanCostCache()
+    cold = estimate(prog, POD, cache=cache).totals
+    warm = estimate(prog, POD, cache=cache).totals
+    assert base.as_tuple() == cold.as_tuple() == warm.as_tuple()
+
+
 @settings(max_examples=30, deadline=None)
 @given(sh=st.sampled_from([1, 2, 4, 8, 16]))
 def test_sharded_collective_payload_scales(sh):
