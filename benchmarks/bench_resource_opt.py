@@ -13,6 +13,11 @@ Rows:
     for memory-bound decode, so the old per-step ``cost`` objective barely
     pruned; the baselines below are the PR-2 measurements of exactly
     those cells).
+  * ``resource_opt.torus3d`` — the topology gate: on the v5p grid with
+    its 3D-torus family included, the beam co-search must return the
+    exhaustive winner for every (shape x objective) cell AND at least one
+    3D cell must win somewhere, at >=3x fewer plan evaluations than the
+    exhaustive scan of that 3D-inclusive grid.
   * ``resource_opt.cache`` — shared sub-plan cache traffic across the whole
     grid, gated on a minimum hit rate (the co-search only stays cheap if
     candidates keep replaying each other's sub-plans).
@@ -90,6 +95,37 @@ def run(quick: bool = False) -> List[str]:
                     f"$job={dec[0].cost_per_job:.2f};"
                     f"evals={stats.plan_evals}/{stats.exhaustive_plan_space};"
                     f"{'MATCH' if match else 'MISMATCH'}")
+    # --- topology gate: 3D-inclusive v5p grid, winner==exhaustive --------
+    v5p_grid = enumerate_clusters(chips=["tpu_v5p"],
+                                  pod_counts=(1, 2) if quick else (1, 2, 4))
+    n_3d = sum(1 for c in v5p_grid if c.cid.endswith("-3d"))
+    t3_stats = ResourceSearchStats()
+    t3_cache = PlanCostCache()
+    t3_match = True
+    wins_3d = 0
+    arch = get_config(archs[0])
+    for shape_id in GRID_SHAPES:
+        shape = SHAPES[shape_id]
+        for objective in ("step_time", "cost", "job_cost"):
+            dec = optimize_resources(arch, shape, v5p_grid,
+                                     objective=objective,
+                                     cache=t3_cache, stats=t3_stats)
+            ex = optimize_resources(arch, shape, v5p_grid,
+                                    objective=objective,
+                                    search="exhaustive", cache=ex_cache)
+            t3_match &= (dec[0].cluster_id == ex[0].cluster_id
+                         and dec[0].decision.plan == ex[0].decision.plan)
+            wins_3d += dec[0].cluster_id.endswith("-3d")
+    t3_gate = (t3_match and n_3d >= 2 and wins_3d > 0
+               and t3_stats.evals_ratio >= MIN_EVALS_RATIO)
+    rows.append(
+        f"resource_opt.torus3d,0,cells_3d={n_3d}/{len(v5p_grid)};"
+        f"wins_3d={wins_3d}/6;"
+        f"evals={t3_stats.plan_evals}/{t3_stats.exhaustive_plan_space}"
+        f"({t3_stats.evals_ratio:.1f}x);claim={MIN_EVALS_RATIO:.0f}x;"
+        f"{'MATCH' if t3_match else 'MISMATCH'};"
+        f"{'PASS' if t3_gate else 'FAIL'}")
+
     baselines = {a: PRE_JOB_COST_DECODE_PRUNED[a, quick] for a in archs}
     decode_gate = all(decode_pruned[a] > baselines[a] for a in archs)
     rows.append(

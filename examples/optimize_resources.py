@@ -1,12 +1,14 @@
 """Resource optimizer: which cluster should this workload run on?
 
 Enumerates cluster candidates (chip type x pod count x mesh layout x
-ICI/DCN topology), co-searches the sharding-plan space on each through one
-shared sub-plan cost cache, and ranks them under your objective — fastest
-step, cheapest step ($/step via ChipSpec.cost_per_chip_hour), cheapest
-*job* ($/job with startup, checkpoint-restore and expected-preemption
-overheads amortized over --steps-per-job steps), or cheapest config
-meeting a step-time SLO.
+ICI/DCN topology — including the v5p 3D-torus layouts, whose wrapped
+rings double per-axis ICI bandwidth and whose third "depth" axis carries
+its own parallelism role), co-searches the sharding-plan space on each
+through one shared sub-plan cost cache, and ranks them under your
+objective — fastest step, cheapest step ($/step via
+ChipSpec.cost_per_chip_hour), cheapest *job* ($/job with startup,
+per-arch checkpoint-restore and expected-preemption overheads amortized
+over --steps-per-job steps), or cheapest config meeting a step-time SLO.
 
 Run:
   PYTHONPATH=src python examples/optimize_resources.py

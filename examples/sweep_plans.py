@@ -11,10 +11,14 @@ Run:
   PYTHONPATH=src python examples/sweep_plans.py \
       --archs qwen1.5-0.5b gemma3-12b --shapes train_4k decode_32k \
       --clusters pod 2pod --search beam
+  PYTHONPATH=src python examples/sweep_plans.py \
+      --clusters v5p-pod v5p-3d   # same v5p pod, 2D flat vs native 3D
+                                  # torus (2 links/axis, "depth" roles)
   PYTHONPATH=src python examples/sweep_plans.py --resources \
-      --objective cost      # sweep the full enumerated cluster grid and
-                            # rank (arch x shape x cluster) cells, then
-                            # print each workload's winning cluster
+      --objective cost      # sweep the full enumerated cluster grid —
+                            # including the v5p 3D-torus cells — and rank
+                            # (arch x shape x cluster) cells, then print
+                            # each workload's winning cluster
 """
 import argparse
 import time

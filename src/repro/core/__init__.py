@@ -23,7 +23,7 @@ from repro.core.cluster import (ClusterConfig, ChipSpec, CHIPS, TPU_V5E,
                                 TPU_V5P, TPU_V6E, CPU_HOST,
                                 single_pod_config, multi_pod_config,
                                 single_chip_config, cpu_host_config,
-                                dtype_bytes)
+                                torus_3d_config, dtype_bytes)
 from repro.core.costmodel import (CacheStats, CostBreakdown, CostEstimator,
                                   CostedProgram, PlanCostCache, ProgramTotals,
                                   estimate)
@@ -40,9 +40,11 @@ from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
                                 reference_plans, resident_components)
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
                                  ResourceDecision, ResourceSearchStats,
+                                 checkpoint_bytes, checkpoint_restore_seconds,
                                  cluster_floor_time, enumerate_clusters,
                                  format_decisions, job_dollars, job_seconds,
-                                 mesh_candidates, optimize_resources)
+                                 mesh_candidates, mesh_factorizations_3d,
+                                 optimize_resources)
 from repro.core.symbols import MemState, SymbolTable, TensorStat
 from repro.core.sweep import (SweepCell, SweepEngine, format_table,
                               rank_cells, sweep_rows)
@@ -50,7 +52,8 @@ from repro.core.sweep import (SweepCell, SweepEngine, format_table,
 __all__ = [
     "ClusterConfig", "ChipSpec", "CHIPS", "TPU_V5E", "TPU_V5P", "TPU_V6E",
     "CPU_HOST", "single_pod_config",
-    "multi_pod_config", "single_chip_config", "cpu_host_config", "dtype_bytes",
+    "multi_pod_config", "single_chip_config", "cpu_host_config",
+    "torus_3d_config", "dtype_bytes",
     "CacheStats", "CostBreakdown", "CostEstimator", "CostedProgram",
     "PlanCostCache", "ProgramTotals", "estimate", "explain",
     "CompiledCost", "CollectiveStat", "from_compiled", "lower_and_cost",
@@ -63,7 +66,8 @@ __all__ = [
     "DEFAULT_STEPS_PER_JOB", "ClusterCandidate", "ResourceDecision",
     "ResourceSearchStats", "cluster_floor_time", "enumerate_clusters",
     "format_decisions", "job_dollars", "job_seconds",
-    "mesh_candidates", "optimize_resources",
+    "checkpoint_bytes", "checkpoint_restore_seconds",
+    "mesh_candidates", "mesh_factorizations_3d", "optimize_resources",
     "MemState", "SymbolTable", "TensorStat",
     "SweepCell", "SweepEngine", "format_table", "rank_cells", "sweep_rows",
 ]

@@ -14,7 +14,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Tuple
+from typing import Dict, Optional, Tuple
 
 # ---------------------------------------------------------------------------
 # Per-chip hardware descriptions
@@ -39,6 +39,15 @@ class ChipSpec:
     # same collective).
     ici_bw_per_link: float
     ici_links_per_axis: int = 1
+    # How many torus dimensions this chip generation's ICI fabric builds.
+    # v5e/v6e slices are 2D tori; v5p slices are 3D tori (each chip has six
+    # ICI ports, two per axis).  Mapping a *3D* logical mesh onto a 3D torus
+    # gives every mesh axis a wrapped physical ring with both link
+    # directions usable — 2 links per axis — while the flat 2D model (one
+    # effective link per axis, the calibrated behavior every existing mesh
+    # uses) is kept for 2D meshes on any chip.  The resource optimizer only
+    # emits 3D mesh candidates when ``ici_torus_dims >= 3``.
+    ici_torus_dims: int = 2
     # Host-side paths.
     pcie_bw: float = 32e9          # host <-> device
     host_dram_bw: float = 100e9    # host memory
@@ -110,6 +119,7 @@ TPU_V5P = ChipSpec(
     ici_bw_per_link=90e9,
     ici_links_per_axis=1,
     ici_domain=1024,           # v5p slices scale far further over ICI (3D torus)
+    ici_torus_dims=3,          # six ICI ports per chip: 2 per torus axis
     cost_per_chip_hour=4.20,
 )
 
@@ -182,6 +192,13 @@ class ClusterConfig:
     chip: ChipSpec = TPU_V5E
     mesh_shape: Tuple[int, ...] = (16, 16)
     mesh_axes: Tuple[str, ...] = ("data", "model")
+    # Per-mesh-axis ICI link counts, aligned with ``mesh_axes``.  Empty
+    # (the default) means one effective link per axis — the flat model
+    # every pre-torus mesh was calibrated with, kept bit-identical.  A 3D
+    # logical mesh laid out on a 3D torus (v5p) sets 2 for each ICI axis:
+    # the wrapped physical ring exposes both link directions, doubling the
+    # per-axis bandwidth.  DCN ("pod") axes ignore the link count.
+    torus_links: Tuple[int, ...] = ()
 
     # --- latency constants (the paper's job/task-latency analogues) ---
     dispatch_latency: float = 35e-6        # per jit-call launch
@@ -212,7 +229,14 @@ class ClusterConfig:
     # never touch the per-step cost walk, only the job-level amortization
     # in ``repro.core.resource.job_seconds`` / ``job_dollars``.
     job_startup_seconds: float = 180.0     # provision + weight load + compile
-    checkpoint_restore_seconds: float = 60.0   # read + reshard one checkpoint
+    # Constant override for the checkpoint-restore term of job pricing.
+    # ``None`` (the default) derives restore time from the architecture's
+    # checkpoint bytes over the disk+PCIe path, sharded across chips
+    # (:func:`repro.core.resource.checkpoint_restore_seconds`); callers
+    # with no architecture in hand fall back to
+    # :data:`DEFAULT_CHECKPOINT_RESTORE_SECONDS`.  Set a float to pin the
+    # old constant-seconds behavior.
+    checkpoint_restore_seconds: Optional[float] = None
     # Expected preemptions per chip-hour (large slices are preempted more
     # often in absolute terms: the rate scales with chip count).
     preemption_rate_per_chip_hour: float = 1e-4
@@ -257,12 +281,48 @@ class ClusterConfig:
         return "dcn" if axis == "pod" else "ici"
 
     def link_bw(self, axis: str) -> float:
-        """Per-device interconnect bandwidth along a mesh axis."""
+        """Per-device *single-link* interconnect bandwidth along a mesh
+        axis (fabric selection only; see :meth:`axis_bandwidth` for the
+        topology-aware rate collectives are actually priced at)."""
         return (self.dcn_bw_eff if self.link_class(axis) == "dcn"
                 else self.ici_bw_eff)
 
-    def with_mesh(self, shape: Tuple[int, ...], axes: Tuple[str, ...]) -> "ClusterConfig":
-        return dataclasses.replace(self, mesh_shape=tuple(shape), mesh_axes=tuple(axes))
+    def axis_links(self, axis: str) -> int:
+        """ICI links usable along a mesh axis: the ``torus_links`` entry
+        aligned with ``mesh_axes`` (1 when unset — the flat model).  DCN
+        axes always report 1 (link counts describe the torus fabric)."""
+        if self.link_class(axis) == "dcn" or not self.torus_links:
+            return 1
+        try:
+            return max(int(self.torus_links[self.mesh_axes.index(axis)]), 1)
+        except (ValueError, IndexError):
+            return 1
+
+    def axis_bandwidth(self, axis: str) -> float:
+        """Per-device interconnect bandwidth along a mesh axis, link count
+        included: ``link_bw(axis) * axis_links(axis)``.  On a 3D-torus mesh
+        each ICI axis rides a wrapped physical ring with both directions
+        usable (2 links), doubling the flat per-axis rate; every 2D mesh
+        keeps the calibrated 1-link rate bit-identical."""
+        return self.link_bw(axis) * self.axis_links(axis)
+
+    @property
+    def max_ici_links(self) -> int:
+        """The most links any ICI mesh axis exposes — the *most generous*
+        per-axis rate, which is what the resource optimizer's cluster
+        floors must price ICI wire at to stay sound."""
+        return max((self.axis_links(a) for a in self.mesh_axes
+                    if self.link_class(a) == "ici"), default=1)
+
+    def with_mesh(self, shape: Tuple[int, ...], axes: Tuple[str, ...],
+                  torus_links: Optional[Tuple[int, ...]] = None
+                  ) -> "ClusterConfig":
+        """Re-mesh, resetting ``torus_links`` unless new ones are given —
+        link counts describe a specific axis layout and must never leak
+        onto a differently-shaped mesh."""
+        return dataclasses.replace(
+            self, mesh_shape=tuple(shape), mesh_axes=tuple(axes),
+            torus_links=tuple(torus_links) if torus_links else ())
 
     def with_overlap(self, fraction: float) -> "ClusterConfig":
         return dataclasses.replace(self, overlap_fraction=float(fraction))
@@ -278,8 +338,10 @@ class ClusterConfig:
                   chip.hbm_bytes, chip.hbm_bw, chip.vmem_bytes,
                   chip.ici_bw_per_link, chip.ici_links_per_axis, chip.pcie_bw,
                   chip.host_dram_bw, chip.disk_bw, chip.dcn_bw,
-                  chip.ici_domain, chip.cost_per_chip_hour,
-                  self.mesh_shape, self.mesh_axes, self.dispatch_latency,
+                  chip.ici_domain, chip.ici_torus_dims,
+                  chip.cost_per_chip_hour,
+                  self.mesh_shape, self.mesh_axes, self.torus_links,
+                  self.dispatch_latency,
                   self.collective_phase_latency, self.host_callback_latency,
                   self.matmul_util, self.small_matmul_util, self.vpu_util,
                   self.hbm_eff, self.ici_eff, self.dcn_eff,
@@ -293,10 +355,30 @@ class ClusterConfig:
         return fp
 
 
+# Fallback for job pricing when neither a constant override nor an
+# architecture (to derive checkpoint bytes from) is available.
+DEFAULT_CHECKPOINT_RESTORE_SECONDS = 60.0
+
+
 # Canonical configs used throughout the repo ---------------------------------
 
 def single_pod_config(**kw) -> ClusterConfig:
     return ClusterConfig(mesh_shape=(16, 16), mesh_axes=("data", "model"), **kw)
+
+
+def torus_3d_config(mesh_shape: Tuple[int, int, int] = (4, 4, 4),
+                    chip: ChipSpec = TPU_V5P, **kw) -> ClusterConfig:
+    """A 3D-torus mesh cell: three ICI axes ("data", "model", "depth"),
+    each a wrapped ring with both link directions usable (2 links/axis).
+    Defaults to one v5p pod slice as a 4x4x4 cube."""
+    if len(mesh_shape) != 3:
+        raise ValueError(f"3D torus needs a 3-axis mesh, got {mesh_shape}")
+    if chip.ici_torus_dims < 3:
+        raise ValueError(f"{chip.name} builds {chip.ici_torus_dims}D tori; "
+                         "a 3D mesh needs ici_torus_dims >= 3")
+    return ClusterConfig(chip=chip, mesh_shape=tuple(mesh_shape),
+                         mesh_axes=("data", "model", "depth"),
+                         torus_links=(2, 2, 2), **kw)
 
 
 def multi_pod_config(**kw) -> ClusterConfig:

@@ -40,7 +40,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import linalg_ops
 from repro.core.cluster import ClusterConfig
-from repro.core.linalg_ops import collective_wire
+from repro.core.linalg_ops import collective_phases, collective_wire
 from repro.core.plan import (
     Block, Call, Collective, Compute, CpVar, CreateVar, DataGen, ForBlock,
     FunctionBlock, GenericBlock, IfBlock, Instruction, IO, JitCall,
@@ -545,12 +545,13 @@ class CostEstimator:
             raise KeyError(f"collective on undefined var '{inst.var}'")
         t = 0.0
         wire = {"ici": 0.0, "dcn": 0.0}
-        for ax in inst.axes:
-            w, hops = collective_wire(inst.kind, payload, cc.axis_size(ax))
-            t += w / cc.link_bw(ax) + hops * cc.collective_phase_latency
+        phases = collective_phases(inst.kind, payload,
+                                   [cc.axis_size(ax) for ax in inst.axes])
+        for ax, (w, hops) in zip(inst.axes, phases):
+            # axis_bandwidth folds in the torus link count (2 per axis on a
+            # 3D-torus mesh, 1 on the calibrated flat model)
+            t += w / cc.axis_bandwidth(ax) + hops * cc.collective_phase_latency
             wire[cc.link_class(ax)] += w
-            if inst.kind == "all_gather":
-                payload *= cc.axis_size(ax)   # hierarchical gather grows payload
         t *= (1.0 - cc.overlap_fraction)
         if inst.output and st is not None:
             symtab.createvar(inst.output, dataclasses.replace(st))

@@ -69,12 +69,17 @@ class CollectiveStat:
     hlo_name: str = ""
 
     def time(self, cc: ClusterConfig, axis: Optional[str] = None) -> float:
-        bw = cc.link_bw(axis or ("pod" if self.group_size > 0 and axis == "pod" else "ici"))
-        # default: ICI unless the caller attributes this collective to "pod"
-        if axis is None:
-            bw = cc.ici_bw_eff
+        # Topology-aware rate via the links= form (2 links/axis on a
+        # 3D-torus mesh) — the same rate the analytical estimator charges,
+        # so JitCall-embedded and native plans stay commensurable on torus
+        # meshes.  Unattributed collectives (compiled HLO does not name
+        # mesh axes) assume ICI at the mesh's best per-axis link count.
+        if axis is not None:
+            bw, links = cc.link_bw(axis), cc.axis_links(axis)
+        else:
+            bw, links = cc.ici_bw_eff, cc.max_ici_links
         return collective_cost(self.kind, self.operand_bytes, self.group_size,
-                               bw, cc.collective_phase_latency)
+                               bw, cc.collective_phase_latency, links=links)
 
 
 def parse_collectives(hlo_text: str) -> List[CollectiveStat]:
@@ -191,9 +196,15 @@ class CompiledCost:
         # achievable (not peak) rates for the time estimate
         compute = max(self.flops_per_device / (cc.chip.peak("bfloat16") * cc.matmul_util),
                       self.bytes_per_device / cc.hbm_bw_eff)
+        # compiled HLO does not name mesh axes, so collectives ride ICI at
+        # the mesh's best per-axis link count — the same torus-aware rate
+        # the analytical estimator charges, keeping JitCall-embedded plans
+        # commensurable with native ones on 3D meshes (on 2D meshes
+        # max_ici_links == 1 and this is exactly the old rate)
         collective = sum(
             collective_cost(c.kind, c.operand_bytes, c.group_size,
-                            cc.ici_bw_eff, cc.collective_phase_latency)
+                            cc.ici_bw_eff, cc.collective_phase_latency,
+                            links=cc.max_ici_links)
             for c in self.collectives)
         return CostBreakdown(io=0.0, compute=compute, collective=collective,
                              latency=cc.dispatch_latency * self.dispatch_count)

@@ -20,7 +20,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, Sequence, Tuple
+from typing import Callable, Dict, Sequence, Tuple, Union
 
 from repro.core.cluster import dtype_bytes
 from repro.core.symbols import MemState, TensorStat
@@ -271,8 +271,11 @@ def _adamw(p: TensorStat, **attrs) -> OpProfile:
 
 
 def collective_wire(kind: str, bytes_per_device: float,
-                    axis_size: int) -> Tuple[float, int]:
-    """(wire bytes per device, hop count) for one collective over an axis.
+                    axis_size: Union[int, Sequence[int]]
+                    ) -> Tuple[float, int]:
+    """(wire bytes per device, hop count) for one collective over a mesh
+    axis — or, given a tuple of sizes, over several axes of a torus mesh
+    phased hierarchically (the 3D-mesh form).
 
     Ring formulas (bytes are the *per-device* payload B):
       all_gather / reduce_scatter: (n-1)/n * B_total_or_shard semantics —
@@ -284,11 +287,24 @@ def collective_wire(kind: str, bytes_per_device: float,
       all_to_all: (n-1)/n * B
       permute: B, 1 hop
 
+    Multi-axis semantics mirror the cost estimator's per-axis phasing: the
+    wire volumes and hops of each axis add, and a hierarchical all_gather
+    grows the payload by each axis it crosses.  A size-1 axis contributes
+    nothing, so the 3D form degenerates *bit-exactly* to the 2D answer
+    when the third axis has size 1 (property-tested in
+    ``tests/test_torus3d.py``).
+
     The wire volume is the bandwidth-bound part of the collective's cost
     (time = wire/link_bw + hops*phase_latency); the cost estimator also
     accumulates it into :class:`repro.core.costmodel.ProgramTotals`, where
     it feeds the resource optimizer's sound collective floors.
     """
+    if not isinstance(axis_size, (int, float)):
+        wire, hops = 0.0, 0
+        for w, h in collective_phases(kind, bytes_per_device, axis_size):
+            wire += w
+            hops += h
+        return wire, hops
     n = max(int(axis_size), 1)
     if n == 1:
         return 0.0, 0
@@ -306,12 +322,34 @@ def collective_wire(kind: str, bytes_per_device: float,
     raise KeyError(f"unknown collective kind '{kind}'")
 
 
-def collective_cost(kind: str, bytes_per_device: float, axis_size: int,
-                    link_bw: float, phase_latency: float) -> float:
+def collective_phases(kind: str, bytes_per_device: float,
+                      axis_sizes: Sequence[int]):
+    """Yield ``(wire bytes, hops)`` for each axis phase of a multi-axis
+    collective, applying the hierarchical payload-growth rule between
+    phases (an all_gather's payload multiplies by every axis it crosses).
+
+    The single source of the phasing semantics: the cost estimator's
+    per-axis pricing loop (``CostEstimator._cost_collective``, which needs
+    each phase separately because axes carry different bandwidths) and the
+    tuple form of :func:`collective_wire` both consume it, so the two can
+    never drift apart."""
+    payload = float(bytes_per_device)
+    for n in axis_sizes:
+        yield collective_wire(kind, payload, int(n))
+        if kind == "all_gather":
+            payload *= max(int(n), 1)
+
+
+def collective_cost(kind: str, bytes_per_device: float,
+                    axis_size: Union[int, Sequence[int]],
+                    link_bw: float, phase_latency: float,
+                    links: int = 1) -> float:
     """Time for one collective over an axis of ``axis_size`` devices:
-    ``wire_bytes / link_bw + hops * phase_latency`` with the ring-algorithm
-    wire volumes of :func:`collective_wire`."""
+    ``wire_bytes / (link_bw * links) + hops * phase_latency`` with the
+    ring-algorithm wire volumes of :func:`collective_wire`.  ``links`` is
+    the per-axis link count of the torus geometry (2 on a 3D-torus axis,
+    1 on the flat model — see ``ClusterConfig.axis_bandwidth``)."""
     wire, hops = collective_wire(kind, bytes_per_device, axis_size)
     if not hops:
         return 0.0
-    return wire / link_bw + hops * phase_latency
+    return wire / (link_bw * max(int(links), 1)) + hops * phase_latency

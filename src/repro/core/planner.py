@@ -568,10 +568,34 @@ def _knob_space(shape: ShapeConfig) -> Tuple[List[str], List[int], List[str]]:
 
 def _model_roles(arch: ArchConfig, shape: ShapeConfig,
                  cc: ClusterConfig) -> List[Dict]:
-    """Role assignments for the non-batch mesh axes (search stage 1)."""
+    """Role assignments for the non-batch mesh axes (search stage 1).
+
+    On a 2D (+pod) mesh the single "model" axis carries one role.  On a 3D
+    torus mesh ("data", "model", "depth") the two non-batch axes are
+    assigned jointly: both tensor-parallel, tp on one with extra data /
+    FSDP / expert / sequence parallelism on the other, or both folded into
+    data-parallel replicas — every enumerated plan still belongs to
+    exactly one role class, which is what keeps the resource optimizer's
+    per-role cluster floors sound on the enlarged space.
+    """
     axes = cc.mesh_axes
     has_model = "model" in axes
-    roles: List[Dict] = [dict(name="dp+tp", tp=("model",))]
+    has_depth = "depth" in axes
+    if has_depth:
+        roles: List[Dict] = [
+            dict(name="dp+tp2", tp=("model", "depth")),
+            dict(name="dp+tp", tp=("model",), batch_extra=("depth",)),
+            dict(name="tp+fsdp", tp=("model",), fsdp=("depth",)),
+            dict(name="fsdp2", fsdp=("model", "depth")),
+            dict(name="dp-pure", batch_extra=("model", "depth")),
+        ]
+        if arch.moe is not None:
+            roles.append(dict(name="dp+ep+tp", ep=("depth",), tp=("model",)))
+            roles.append(dict(name="dp+ep", ep=("model", "depth")))
+        if shape.mode == "prefill":
+            roles.append(dict(name="tp+seq", tp=("model",), seq=("depth",)))
+        return roles
+    roles = [dict(name="dp+tp", tp=("model",))]
     roles.append(dict(name="fsdp", fsdp=("model",)))
     roles.append(dict(name="dp-pure", batch_extra=("model",)))
     if arch.moe is not None and has_model:

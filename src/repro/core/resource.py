@@ -39,7 +39,8 @@ import functools
 from typing import List, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ArchConfig, ShapeConfig
-from repro.core.cluster import CHIPS, ChipSpec, ClusterConfig
+from repro.core.cluster import (CHIPS, DEFAULT_CHECKPOINT_RESTORE_SECONDS,
+                                ChipSpec, ClusterConfig)
 from repro.core.costmodel import (VPU_FRACTION, CacheStats, PlanCostCache,
                                   ProgramTotals, estimate)
 from repro.core.planner import (OVERLAP_FRACTION, PlanDecision, SearchStats,
@@ -82,17 +83,61 @@ def _short(chip: ChipSpec) -> str:
 
 def _make_cc(chip: ChipSpec, mesh_shape: Tuple[int, ...],
              mesh_axes: Tuple[str, ...],
-             base: Optional[ClusterConfig] = None) -> ClusterConfig:
+             base: Optional[ClusterConfig] = None,
+             torus_links: Tuple[int, ...] = ()) -> ClusterConfig:
     if base is not None:
         return dataclasses.replace(base, chip=chip, mesh_shape=mesh_shape,
-                                   mesh_axes=mesh_axes)
-    return ClusterConfig(chip=chip, mesh_shape=mesh_shape, mesh_axes=mesh_axes)
+                                   mesh_axes=mesh_axes,
+                                   torus_links=tuple(torus_links))
+    return ClusterConfig(chip=chip, mesh_shape=mesh_shape,
+                         mesh_axes=mesh_axes,
+                         torus_links=tuple(torus_links))
 
 
-def mesh_factorizations(n: int, variants: int = 2
+def torus_links_for(axes: Tuple[str, ...],
+                    chip: ChipSpec) -> Tuple[int, ...]:
+    """Per-axis ICI link counts for a candidate mesh layout: a 3-ICI-axis
+    layout on a chip whose fabric builds a 3D torus gives every ICI axis a
+    wrapped ring (2 links); everything else — 2D layouts, or any layout on
+    a 2D-torus chip — keeps the calibrated flat model (empty -> 1 link per
+    axis).  The chip gate lives here so no caller can accidentally price
+    wrapped rings on hardware without a third fabric dimension."""
+    ici_axes = sum(1 for a in axes if a != "pod")
+    if ici_axes >= 3 and chip.ici_torus_dims >= 3:
+        return tuple(1 if a == "pod" else 2 for a in axes)
+    return ()
+
+
+def mesh_factorizations_3d(n: int, variants: int = 2
+                           ) -> List[Tuple[Tuple[int, ...], Tuple[str, ...]]]:
+    """(data, model, depth) splits of an n-chip 3D-torus slice, most
+    cube-balanced first.  The model and depth axes are power-of-two sized;
+    the data axis takes the remainder ``n / (model * depth)`` (e.g. 192
+    splits as (12, 4, 4)).  Ordered ``data >= model >= depth >= 2`` so
+    each candidate names a distinct physical layout."""
+    out: List[Tuple[Tuple[int, ...], Tuple[str, ...]]] = []
+    z = 2
+    while z * z * z <= n:
+        if n % z == 0:
+            m = z
+            while m * m * z <= n:
+                if (n // z) % m == 0:
+                    out.append(((n // (m * z), m, z),
+                                ("data", "model", "depth")))
+                m *= 2
+        z *= 2
+    out.sort(key=lambda mz: (mz[0][0] / mz[0][2], mz[0]))
+    return out[:variants]
+
+
+def mesh_factorizations(n: int, variants: int = 2, torus_dims: int = 2
                         ) -> List[Tuple[Tuple[int, ...], Tuple[str, ...]]]:
-    """(data, model) splits of an n-chip slice: balanced first, then a
-    wide-data / narrow-model variant (the axis-layout dimension)."""
+    """Mesh splits of an n-chip slice: the 2D (data, model) layouts —
+    balanced first, then a wide-data / narrow-model variant — plus, when
+    the chip's fabric builds a 3D torus (``torus_dims >= 3``), the
+    near-cubic (data, model, depth) layouts appended after them.  The 2D
+    list is unchanged by the torus dimension, so pre-torus candidate ids
+    and costs are stable."""
     if n <= 1:
         return [((1,), ("data",))]
     out: List[Tuple[Tuple[int, ...], Tuple[str, ...]]] = []
@@ -110,14 +155,27 @@ def mesh_factorizations(n: int, variants: int = 2
             out.append((mesh, axes))
         if len(out) >= variants:
             break
-    return out or [((n,), ("data",))]
+    out = out or [((n,), ("data",))]
+    if torus_dims >= 3:
+        out.extend(mesh_factorizations_3d(n, variants))
+    return out
 
 
 def mesh_candidates(chip: ChipSpec, num_chips: int,
                     base: Optional[ClusterConfig] = None
                     ) -> List[ClusterCandidate]:
     """All single-slice mesh layouts for a fixed chip count (elastic
-    re-meshing: the devices that survived, re-factored)."""
+    re-meshing: the devices that survived, re-factored).
+
+    Never returns an empty list for ``num_chips >= 1``: a chip count with
+    no 2D factorization beyond trivial (primes, odd survivor counts)
+    still yields the degenerate 1D all-data mesh, so
+    :func:`repro.runtime.elastic.replan` always has a candidate to cost
+    after device loss.  Chips whose fabric builds a 3D torus
+    (``ici_torus_dims >= 3``) also contribute the 3D layouts of the
+    survivor count."""
+    if num_chips < 1:
+        raise ValueError(f"mesh_candidates needs >=1 chip, got {num_chips}")
     out = []
     seen = set()
     for model in (1, 2, 4, 8, 16, 32):
@@ -131,6 +189,19 @@ def mesh_candidates(chip: ChipSpec, num_chips: int,
         out.append(ClusterCandidate(
             f"{_short(chip)}-{'x'.join(map(str, mesh))}",
             _make_cc(chip, mesh, axes, base)))
+    if chip.ici_torus_dims >= 3:
+        for mesh, axes in mesh_factorizations_3d(num_chips):
+            if mesh in seen:
+                continue
+            seen.add(mesh)
+            out.append(ClusterCandidate(
+                f"{_short(chip)}-{'x'.join(map(str, mesh))}-3d",
+                _make_cc(chip, mesh, axes, base,
+                         torus_links=torus_links_for(axes, chip))))
+    if not out:          # unreachable (model=1 always fits) — belt/braces
+        out.append(ClusterCandidate(
+            f"{_short(chip)}-{num_chips}",
+            _make_cc(chip, (num_chips,), ("data",), base)))
     return out
 
 
@@ -141,7 +212,10 @@ def enumerate_clusters(chips: Optional[Sequence[Union[str, ChipSpec]]] = None,
                        ) -> List[ClusterCandidate]:
     """The default cluster grid: chip type x pod count x mesh layout, with
     both ICI-linked superslices (when the chip's ICI domain allows) and
-    DCN-linked multi-pod topologies."""
+    DCN-linked multi-pod topologies.  Chips whose fabric builds a 3D torus
+    (v5p: ``ici_torus_dims == 3``) contribute the near-cubic 3D layouts of
+    each ICI slice alongside the 2D ones — a whole new scenario family,
+    with per-axis link counts set for the wrapped rings."""
     chip_specs = [CHIPS[c] if isinstance(c, str) else c
                   for c in (chips if chips is not None else CHIPS)]
     out: List[ClusterCandidate] = []
@@ -151,10 +225,14 @@ def enumerate_clusters(chips: Optional[Sequence[Union[str, ChipSpec]]] = None,
             total = pod * p
             fits_ici = total <= chip.ici_domain
             if fits_ici:
-                for mesh, axes in mesh_factorizations(total, mesh_variants):
+                for mesh, axes in mesh_factorizations(
+                        total, mesh_variants,
+                        torus_dims=chip.ici_torus_dims):
+                    tag = "-3d" if len(mesh) >= 3 else ""
                     out.append(ClusterCandidate(
-                        f"{_short(chip)}-{'x'.join(map(str, mesh))}",
-                        _make_cc(chip, mesh, axes, base)))
+                        f"{_short(chip)}-{'x'.join(map(str, mesh))}{tag}",
+                        _make_cc(chip, mesh, axes, base,
+                                 torus_links=torus_links_for(axes, chip))))
             if p > 1:
                 # DCN multi-slice: "pod" axis crosses the data-center network
                 nv = 1 if fits_ici else mesh_variants
@@ -232,23 +310,30 @@ def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
     ``(wire/link_bw + hops·latency) · (1 − overlap)`` plus nonnegative
     IO/latency terms; this floor keeps only
 
-      ``max(Σ t_flops, Σ t_mem) + Σ wire/link_bw · (1 − OVERLAP_FRACTION)``
+      ``max(Σ t_flops, Σ t_mem) + Σ wire/axis_bw · (1 − OVERLAP_FRACTION)``
 
     at the most generous rates (``matmul_util`` for every MXU op, effective
-    link bandwidths, no phase latency), each a term-wise lower bound of
-    what the estimator charges.  The minimum over role classes then bounds
-    the whole plan space — including memory-bound decode cells, whose
-    unavoidable tensor-parallel collectives now tighten the floor instead
-    of being ignored."""
+    link bandwidths at the mesh's *best* per-axis link count, no phase
+    latency), each a term-wise lower bound of what the estimator charges.
+    On a 3D-torus mesh the estimator prices each ICI axis at up to
+    ``ici_bw_eff · axis_links`` (wrapped rings expose 2 links), so the
+    floor divides the pooled ICI wire volume by ``ici_bw_eff ·
+    max_ici_links`` — never charging more for the wire than any actual
+    axis assignment could.  2D meshes have ``max_ici_links == 1`` and keep
+    the pre-torus floor bit-identical.  The minimum over role classes then
+    bounds the whole plan space — including memory-bound decode cells,
+    whose unavoidable tensor-parallel collectives now tighten the floor
+    instead of being ignored."""
     util = max(cc.matmul_util, cc.small_matmul_util)
     vpu_peak = cc.chip.peak("float32") * VPU_FRACTION
+    ici_bw_best = cc.ici_bw_eff * cc.max_ici_links
     best = float("inf")
     for t in _floor_totals(arch, shape, cc.mesh_shape, cc.mesh_axes):
         t_flops = sum(f / (cc.chip.peak(dt) * util)
                       for dt, f in t.mxu_flops.items())
         t_flops += t.vpu_flops / vpu_peak
         t_mem = t.hbm_bytes / cc.hbm_bw_eff
-        t_coll = (t.ici_bytes / cc.ici_bw_eff
+        t_coll = (t.ici_bytes / ici_bw_best
                   + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - OVERLAP_FRACTION)
         best = min(best, max(t_flops, t_mem) + t_coll)
     return best
@@ -258,9 +343,39 @@ def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
 # Job-level pricing ($/job: amortized startup, restore, preemption)
 # ---------------------------------------------------------------------------
 
+# Bytes written per parameter into a training checkpoint: fp32 master
+# weights + the two fp32 Adam moments.  Analytical constant (R1), like the
+# chip table.
+CHECKPOINT_BYTES_PER_PARAM = 12.0
+
+
+def checkpoint_bytes(arch: ArchConfig) -> float:
+    """Total checkpoint size (bytes) for one architecture."""
+    return arch.param_counts()["total"] * CHECKPOINT_BYTES_PER_PARAM
+
+
+def checkpoint_restore_seconds(cc: ClusterConfig,
+                               arch: Optional[ArchConfig] = None) -> float:
+    """Seconds to read + reshard one checkpoint onto the cluster.
+
+    Derived from the architecture's checkpoint bytes over the disk + PCIe
+    path, sharded across the cluster's chips (each host restores its own
+    shard) — so job pricing scales with model size instead of charging a
+    0.5B model and a 671B model the same constant.  A non-``None``
+    ``cc.checkpoint_restore_seconds`` overrides the derivation (backward
+    compatibility); with no architecture in hand the old constant is the
+    fallback."""
+    if cc.checkpoint_restore_seconds is not None:
+        return float(cc.checkpoint_restore_seconds)
+    if arch is None:
+        return DEFAULT_CHECKPOINT_RESTORE_SECONDS
+    per_dev = checkpoint_bytes(arch) / max(cc.num_chips, 1)
+    return per_dev / cc.chip.disk_bw + per_dev / cc.chip.pcie_bw
+
 
 def job_seconds(cc: ClusterConfig, step_time: float,
-                steps_per_job: int = DEFAULT_STEPS_PER_JOB) -> float:
+                steps_per_job: int = DEFAULT_STEPS_PER_JOB,
+                arch: Optional[ArchConfig] = None) -> float:
     """Expected wall-clock seconds to complete ``steps_per_job`` steps.
 
     ``startup + compute + E[preemptions] · (restart + lost work)`` with
@@ -269,14 +384,16 @@ def job_seconds(cc: ClusterConfig, step_time: float,
       * E[preemptions]   = ``preemption_rate_per_chip_hour · num_chips ·
                            compute_hours`` (first-order: rate applied to
                            the compute time, not the inflated wall time),
-      * each preemption  = startup + checkpoint restore + half a
-        checkpoint interval of recomputed steps.
+      * each preemption  = startup + checkpoint restore
+        (:func:`checkpoint_restore_seconds` — per-arch bytes over
+        disk/PCIe when ``arch`` is given) + half a checkpoint interval of
+        recomputed steps.
 
     Strictly increasing in ``step_time`` for a fixed cluster — which is
     what lets the job-cost objective prune clusters by their step-time
     floor (:func:`cluster_floor_time`) without losing soundness."""
     compute = step_time * max(int(steps_per_job), 1)
-    restart = (cc.job_startup_seconds + cc.checkpoint_restore_seconds
+    restart = (cc.job_startup_seconds + checkpoint_restore_seconds(cc, arch)
                + 0.5 * cc.checkpoint_interval_steps * step_time)
     expected_preemptions = (cc.preemption_rate_per_chip_hour * cc.num_chips
                             * compute / 3600.0)
@@ -284,9 +401,10 @@ def job_seconds(cc: ClusterConfig, step_time: float,
 
 
 def job_dollars(cc: ClusterConfig, step_time: float,
-                steps_per_job: int = DEFAULT_STEPS_PER_JOB) -> float:
+                steps_per_job: int = DEFAULT_STEPS_PER_JOB,
+                arch: Optional[ArchConfig] = None) -> float:
     """$ to complete a job: expected wall seconds x chips x $/chip-hour."""
-    return (job_seconds(cc, step_time, steps_per_job) * cc.num_chips
+    return (job_seconds(cc, step_time, steps_per_job, arch) * cc.num_chips
             * cc.chip.cost_per_chip_hour / 3600.0)
 
 
@@ -307,6 +425,7 @@ class ResourceDecision:
     pruned: str = ""                        # non-empty: skipped, why
     search: Optional[SearchStats] = None
     steps_per_job: int = DEFAULT_STEPS_PER_JOB
+    arch: Optional[ArchConfig] = None       # prices per-arch restore time
 
     @property
     def time(self) -> float:
@@ -328,12 +447,12 @@ class ResourceDecision:
     @property
     def job_seconds(self) -> float:
         """Expected wall seconds for a ``steps_per_job``-step job."""
-        return job_seconds(self.cc, self.time, self.steps_per_job)
+        return job_seconds(self.cc, self.time, self.steps_per_job, self.arch)
 
     @property
     def cost_per_job(self) -> float:
         """$ per job, overheads amortized (see :func:`job_dollars`)."""
-        return job_dollars(self.cc, self.time, self.steps_per_job)
+        return job_dollars(self.cc, self.time, self.steps_per_job, self.arch)
 
     def meets(self, slo: Optional[float]) -> bool:
         return self.feasible and slo is not None and self.time <= slo
@@ -401,27 +520,30 @@ def _rank_key(objective: str, slo: Optional[float]):
 
 def _floor_cannot_win(objective: str, slo: Optional[float],
                       incumbent: ResourceDecision, cc: ClusterConfig,
-                      floor_t: float, steps_per_job: int) -> bool:
+                      floor_t: float, steps_per_job: int,
+                      arch: Optional[ArchConfig] = None) -> bool:
     """Sound pruning test: could ANY plan on this cluster outrank the
     (feasible) incumbent?  Uses strict inequalities so exact ties are still
     costed and resolved by the deterministic tie-break.  For the job-cost
-    objective the step-time floor maps through :func:`job_dollars`, which
-    is strictly increasing in step time, so the mapped value is still a
-    lower bound on any plan's $/job."""
+    objective the step-time floor maps through :func:`job_dollars` (with
+    the same per-arch restore pricing the ranking uses), which is strictly
+    increasing in step time, so the mapped value is still a lower bound on
+    any plan's $/job."""
     floor_cost = floor_t * cc.num_chips * cc.chip.cost_per_chip_hour / 3600.0
     if objective == "step_time":
         return floor_t > incumbent.time
     if objective == "cost":
         return floor_cost > incumbent.cost_per_step
     if objective == "job_cost":
-        return job_dollars(cc, floor_t, steps_per_job) > incumbent.cost_per_job
+        return (job_dollars(cc, floor_t, steps_per_job, arch)
+                > incumbent.cost_per_job)
     if incumbent.meets(slo):
         return floor_t > slo or floor_cost > incumbent.cost_per_step
     return floor_t > slo and floor_cost > incumbent.cost_per_step
 
 
 def _visit_order_key(objective: str, slo: Optional[float],
-                     steps_per_job: int):
+                     steps_per_job: int, arch: Optional[ArchConfig] = None):
     def key(entry) -> Tuple:
         cand, floor_t = entry
         floor_cost = (floor_t * cand.cc.num_chips
@@ -431,8 +553,8 @@ def _visit_order_key(objective: str, slo: Optional[float],
         if objective == "cost":
             return (floor_cost, floor_t, cand.cid)
         if objective == "job_cost":
-            return (job_dollars(cand.cc, floor_t, steps_per_job), floor_t,
-                    cand.cid)
+            return (job_dollars(cand.cc, floor_t, steps_per_job, arch),
+                    floor_t, cand.cid)
         return (0 if (slo is None or floor_t <= slo) else 1,
                 floor_cost, floor_t, cand.cid)
     return key
@@ -481,20 +603,21 @@ def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
         _plan_space_size(arch, shape, cand.cc.mesh_shape, cand.cc.mesh_axes)
         for cand, _ in entries)
     if prune:
-        entries.sort(key=_visit_order_key(objective, slo, steps_per_job))
+        entries.sort(key=_visit_order_key(objective, slo, steps_per_job,
+                                          arch))
     key = _rank_key(objective, slo)
     incumbent: Optional[ResourceDecision] = None
     out: List[ResourceDecision] = []
     for cand, floor_t in entries:
         if (prune and incumbent is not None
                 and _floor_cannot_win(objective, slo, incumbent, cand.cc,
-                                      floor_t, steps_per_job)):
+                                      floor_t, steps_per_job, arch)):
             stats.clusters_pruned += 1
             out.append(ResourceDecision(
                 cand.cid, cand.cc, None, floor_t,
                 pruned=f"floor {floor_t * 1e3:.2f}ms loses to "
                        f"{incumbent.cluster_id}",
-                steps_per_job=steps_per_job))
+                steps_per_job=steps_per_job, arch=arch))
             continue
         pstats = SearchStats()
         best = choose_plan(arch, shape, cand.cc, top_k=1, search=search,
@@ -503,7 +626,7 @@ def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
         stats.plan_evals += pstats.costed
         stats.clusters_costed += 1
         rd = ResourceDecision(cand.cid, cand.cc, best, floor_t, search=pstats,
-                              steps_per_job=steps_per_job)
+                              steps_per_job=steps_per_job, arch=arch)
         out.append(rd)
         if rd.feasible and (incumbent is None or key(rd) < key(incumbent)):
             incumbent = rd

@@ -24,7 +24,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from repro.configs import SHAPES, get_config, shape_applicable
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import (TPU_V5P, TPU_V6E, ClusterConfig,
-                                multi_pod_config, single_pod_config)
+                                multi_pod_config, single_pod_config,
+                                torus_3d_config)
 from repro.core.costmodel import CacheStats, PlanCostCache
 from repro.core.planner import PlanDecision, SearchStats, choose_plan
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
@@ -40,6 +41,9 @@ CLUSTERS: Dict[str, ClusterConfig] = {
                              mesh_axes=("data", "model")),
     "v6e-pod": ClusterConfig(chip=TPU_V6E, mesh_shape=(16, 16),
                              mesh_axes=("data", "model")),
+    # One v5p pod slice laid out as its native 3D torus: three ICI axes
+    # ("data", "model", "depth"), wrapped rings with 2 links per axis.
+    "v5p-3d": torus_3d_config((4, 4, 4)),
 }
 
 

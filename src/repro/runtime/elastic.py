@@ -17,8 +17,8 @@ from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig
 from repro.core.costmodel import PlanCostCache
 from repro.core.planner import PlanDecision, ShardingPlan, choose_plan
-from repro.core.resource import (DEFAULT_STEPS_PER_JOB, mesh_candidates,
-                                 optimize_resources)
+from repro.core.resource import (DEFAULT_STEPS_PER_JOB, torus_links_for,
+                                 mesh_candidates, optimize_resources)
 
 
 @dataclasses.dataclass
@@ -43,15 +43,24 @@ def replan(arch: ArchConfig, shape: ShapeConfig, *,
     Pass ``new_mesh_shape`` to pin the mesh explicitly (the old behavior),
     or just ``available_chips`` — e.g. the device count that survived a
     failure — and the resource optimizer picks the best mesh factorization
-    of the survivors (same chip, every (data x model) layout) by ``C(P,
-    cc)`` under ``objective``, instead of a hand-rolled dp-degree guess.
+    of the survivors (same chip: every (data x model) layout, the 3D-torus
+    layouts on 3D-capable chips, and always at least the degenerate 1D
+    all-data mesh, so prime survivor counts never strand the job) by
+    ``C(P, cc)`` under ``objective``, instead of a hand-rolled dp-degree
+    guess.
     ``objective="job_cost"`` (with ``steps_per_job`` for the remaining job
     length) picks the cheapest way to *finish the job* — relevant after a
     loss, when restart overheads have just been paid.
     """
     if new_mesh_shape is not None:
         axes = new_mesh_axes or old_cc.mesh_axes
-        new_cc = old_cc.with_mesh(new_mesh_shape, axes)
+        # A pinned 3-axis mesh on a 3D-torus-capable chip gets the same
+        # wrapped-ring link counts the candidate enumeration would give
+        # it — both replan entry points must price identical hardware
+        # identically (torus_links_for gates on the chip's fabric).
+        new_cc = old_cc.with_mesh(
+            new_mesh_shape, axes,
+            torus_links=torus_links_for(tuple(axes), old_cc.chip))
         decision = choose_plan(arch, shape, new_cc, top_k=1, cache=cache)[0]
     elif available_chips is not None:
         cands = mesh_candidates(old_cc.chip, available_chips, base=old_cc)

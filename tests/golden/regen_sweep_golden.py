@@ -18,13 +18,16 @@ if _SRC not in sys.path:
 
 GOLDEN_PATH = os.path.join(_HERE, "sweep_golden.json")
 
-# 3 archs x 2 shapes x 4 clusters (two chip generations among them) = 24
-# cells — small enough to re-cost in seconds, broad enough that any change
-# to op formulas, collective models, HBM accounting, or plan enumeration
-# shows up as a diff.
+# 3 archs x 2 shapes x 5 clusters (two chip generations and both torus
+# dimensionalities among them) = 30 cells — small enough to re-cost in
+# seconds, broad enough that any change to op formulas, collective models,
+# HBM accounting, topology link counts, or plan enumeration shows up as a
+# diff.  ``v5p-3d`` is the 3D-torus family (4x4x4, 2 links/axis); the 2D
+# cells predate it and their costs must never move when topology-only
+# changes land (tests/test_golden_sweep.py pins them to a frozen baseline).
 GOLDEN_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b")
 GOLDEN_SHAPES = ("train_4k", "decode_32k")
-GOLDEN_CLUSTERS = ("pod", "2pod", "v5p-pod", "v6e-pod")
+GOLDEN_CLUSTERS = ("pod", "2pod", "v5p-pod", "v6e-pod", "v5p-3d")
 
 
 def compute_cells():

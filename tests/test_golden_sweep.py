@@ -23,11 +23,66 @@ _regen = importlib.util.module_from_spec(_spec)
 _spec.loader.exec_module(_regen)
 
 
+# Frozen pre-torus (PR-3) step times of every 2D golden cell.  The 3D-torus
+# topology work (per-axis link counts, depth-axis roles, 3D candidates) must
+# be purely additive: a 2D mesh prices exactly as it did before the new
+# axis existed.  Any drift here means the flat model was disturbed — which
+# is a bug, not a regeneration event (the new-axis cells live in
+# sweep_golden.json and MAY move with intentional cost-model changes; these
+# may not).
+PRE_TORUS_2D_STEP_TIMES = {
+    "gemma3-12b|decode_32k|2pod": 0.005640601213984056,
+    "gemma3-12b|decode_32k|pod": 0.01040860402796811,
+    "gemma3-12b|decode_32k|v5p-pod": 0.011174433533523029,
+    "gemma3-12b|decode_32k|v6e-pod": 0.005640400373059142,
+    "gemma3-12b|train_4k|2pod": 2.006239356136516,
+    "gemma3-12b|train_4k|pod": 3.9446190679731217,
+    "gemma3-12b|train_4k|v5p-pod": 5.470500259268863,
+    "gemma3-12b|train_4k|v6e-pod": 1.3299013060655531,
+    "mamba2-1.3b|decode_32k|2pod": 2.8364671636859875e-05,
+    "mamba2-1.3b|decode_32k|pod": 5.487094327371975e-05,
+    "mamba2-1.3b|decode_32k|v5p-pod": 6.465244810658441e-05,
+    "mamba2-1.3b|decode_32k|v6e-pod": 2.833234691535151e-05,
+    "mamba2-1.3b|train_4k|2pod": 0.2823090089153571,
+    "mamba2-1.3b|train_4k|pod": 0.2971891713601879,
+    "mamba2-1.3b|train_4k|v5p-pod": 0.4217759356538556,
+    "mamba2-1.3b|train_4k|v6e-pod": 0.09377336990569207,
+    "qwen1.5-0.5b|decode_32k|2pod": 0.0016120377649572653,
+    "qwen1.5-0.5b|decode_32k|pod": 0.0027855075299145302,
+    "qwen1.5-0.5b|decode_32k|v5p-pod": 0.002752198992027129,
+    "qwen1.5-0.5b|decode_32k|v6e-pod": 0.0016120126856368562,
+    "qwen1.5-0.5b|train_4k|2pod": 0.14174567748918163,
+    "qwen1.5-0.5b|train_4k|pod": 0.1210152587780616,
+    "qwen1.5-0.5b|train_4k|v5p-pod": 0.1652115513696153,
+    "qwen1.5-0.5b|train_4k|v6e-pod": 0.039441672748381694,
+}
+
+
+def test_2d_cells_unchanged_by_torus_topology():
+    """The checked-in golden file's 2D cells must equal the frozen
+    pre-torus baseline bit for bit — the 3D axis is additive."""
+    with open(_regen.GOLDEN_PATH) as f:
+        golden = json.load(f)
+    drift = []
+    for key, want in PRE_TORUS_2D_STEP_TIMES.items():
+        got = golden.get(key)
+        if got is None:
+            drift.append(f"{key}: cell missing from golden")
+        elif got["step_time_s"] != want:
+            drift.append(f"{key}: {want!r} -> {got['step_time_s']!r}")
+    assert not drift, (
+        "2D golden cells moved — the torus topology change leaked into "
+        "the flat model:\n  " + "\n  ".join(drift))
+    # and the golden grid actually gained the 3D family
+    assert any(k.endswith("|v5p-3d") for k in golden), \
+        "golden grid has no v5p-3d cells"
+
+
 def test_sweep_grid_matches_golden():
     with open(_regen.GOLDEN_PATH) as f:
         golden = json.load(f)
     got = _regen.compute_cells()
-    assert len(golden) >= 24
+    assert len(golden) >= 30
     assert set(got) == set(golden), (
         "grid keys drifted — regenerate the golden file if intentional")
     drift = []

@@ -10,12 +10,16 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (Collective, Compute, ForBlock, GenericBlock, IfBlock,
                         IO, ParForBlock, PlanCostCache, Program, WhileBlock,
-                        estimate, single_chip_config, single_pod_config)
+                        estimate, single_chip_config, single_pod_config,
+                        torus_3d_config)
 from repro.core.linalg_ops import collective_cost, profile
 from repro.core.symbols import MemState, TensorStat
 
 CC = single_chip_config()
 POD = single_pod_config()
+# The 3D-torus mesh: programs whose collectives/shardings touch the third
+# ("depth") axis must satisfy every invariant the 2D meshes do.
+TORUS = torus_3d_config()
 
 dims = st.integers(min_value=1, max_value=512).map(lambda x: x * 8)
 
@@ -101,6 +105,13 @@ _tensor_stats = st.builds(
 _out_names = st.sampled_from([f"V{i}" for i in range(6)])
 
 
+# Axis tuples include the 3D torus's "depth": on 2D meshes the unknown
+# axis has size 1 (degenerate, charged nothing), on TORUS it carries real
+# shards and wire — the same program must stay exact on both.
+_shard_axes = st.sampled_from([("data",), ("model",), ("depth",),
+                               ("data", "depth"), ("model", "depth")])
+
+
 def _leaf_nodes():
     x = st.sampled_from(_INPUT_NAMES)
     return st.one_of(
@@ -110,9 +121,11 @@ def _leaf_nodes():
         st.builds(Compute, opcode=st.just("tsmm"),
                   inputs=x.map(lambda n: (n,)), output=_out_names,
                   exec_type=st.just("DIST"),
-                  shard_axes=st.just(("data",))),
-        st.builds(Collective, kind=st.just("all_reduce"), var=x,
-                  axes=st.just(("data",))),
+                  shard_axes=_shard_axes),
+        st.builds(Collective,
+                  kind=st.sampled_from(["all_reduce", "all_gather",
+                                        "reduce_scatter"]),
+                  var=x, axes=_shard_axes),
         st.builds(IO, op=st.just("read"), var=x,
                   src=st.sampled_from([MemState.HOST, MemState.DISK]),
                   dst=st.just(MemState.HBM)),
@@ -151,20 +164,21 @@ _programs = st.builds(
 @settings(max_examples=40, deadline=None)
 @given(prog=_programs)
 def test_cached_costing_bit_exact_on_random_programs(prog):
-    base = estimate(prog, POD)
-    cache = PlanCostCache()
-    cold = estimate(prog, POD, cache=cache)      # record path
-    warm = estimate(prog, POD, cache=cache)      # replay path
-    for got in (cold, warm):
-        assert math.isclose(base.total, got.total,
-                            rel_tol=1e-9, abs_tol=1e-12)
-        for field in ("io", "compute", "collective", "latency"):
-            assert math.isclose(getattr(base.breakdown, field),
-                                getattr(got.breakdown, field),
-                                rel_tol=1e-9, abs_tol=1e-12), field
-        assert math.isclose(base.peak_hbm_per_device,
-                            got.peak_hbm_per_device,
-                            rel_tol=1e-9, abs_tol=1e-3)
+    for cc in (POD, TORUS):
+        base = estimate(prog, cc)
+        cache = PlanCostCache()
+        cold = estimate(prog, cc, cache=cache)      # record path
+        warm = estimate(prog, cc, cache=cache)      # replay path
+        for got in (cold, warm):
+            assert math.isclose(base.total, got.total,
+                                rel_tol=1e-9, abs_tol=1e-12)
+            for field in ("io", "compute", "collective", "latency"):
+                assert math.isclose(getattr(base.breakdown, field),
+                                    getattr(got.breakdown, field),
+                                    rel_tol=1e-9, abs_tol=1e-12), field
+            assert math.isclose(base.peak_hbm_per_device,
+                                got.peak_hbm_per_device,
+                                rel_tol=1e-9, abs_tol=1e-3)
 
 
 @settings(max_examples=15, deadline=None)
@@ -188,14 +202,17 @@ def test_shared_cache_never_leaks_across_random_programs(progs):
 @given(prog=_programs)
 def test_collective_floor_bounds_costed_collective_time(prog):
     """The collective-floor term the resource optimizer builds from
-    ProgramTotals — wire volume over effective link bandwidth, discounted
-    by the overlap fraction — must never exceed the collective time the
-    estimator actually charged.  This is the property that makes the
-    tightened cluster floors sound (docs/COST_MODEL.md §floors)."""
-    for cc in (POD, POD.with_overlap(0.7)):
+    ProgramTotals — wire volume over the effective link bandwidth at the
+    mesh's *best* per-axis link count, discounted by the overlap
+    fraction — must never exceed the collective time the estimator
+    actually charged.  This is the property that makes the tightened
+    cluster floors sound (docs/COST_MODEL.md §floors), including on
+    3D-torus meshes where wrapped rings double per-axis bandwidth."""
+    for cc in (POD, POD.with_overlap(0.7), TORUS, TORUS.with_overlap(0.7)):
         costed = estimate(prog, cc)
         t = costed.totals
-        floor = (t.ici_bytes / cc.ici_bw_eff + t.dcn_bytes / cc.dcn_bw_eff) \
+        floor = (t.ici_bytes / (cc.ici_bw_eff * cc.max_ici_links)
+                 + t.dcn_bytes / cc.dcn_bw_eff) \
             * (1.0 - cc.overlap_fraction)
         assert floor <= costed.breakdown.collective * (1 + 1e-12)
 
@@ -222,12 +239,15 @@ def test_totals_roofline_bounds_costed_compute_time(prog):
 @given(prog=_programs)
 def test_totals_replay_bit_exact_on_random_programs(prog):
     """Cached replay must reproduce ProgramTotals exactly — the floor
-    would silently drift otherwise."""
-    base = estimate(prog, POD).totals
+    would silently drift otherwise.  One shared cache serves the 2D and
+    3D meshes back to back: the cluster fingerprint (which embeds the
+    torus link counts) must keep their entries apart."""
     cache = PlanCostCache()
-    cold = estimate(prog, POD, cache=cache).totals
-    warm = estimate(prog, POD, cache=cache).totals
-    assert base.as_tuple() == cold.as_tuple() == warm.as_tuple()
+    for cc in (POD, TORUS):
+        base = estimate(prog, cc).totals
+        cold = estimate(prog, cc, cache=cache).totals
+        warm = estimate(prog, cc, cache=cache).totals
+        assert base.as_tuple() == cold.as_tuple() == warm.as_tuple()
 
 
 @settings(max_examples=30, deadline=None)

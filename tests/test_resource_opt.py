@@ -12,14 +12,17 @@ from repro.configs import SHAPES, get_config
 from repro.core.costmodel import PlanCostCache, estimate
 from repro.core.planner import build_step_program, enumerate_plans
 from repro.core.resource import (ResourceSearchStats, _rank_key,
+                                 checkpoint_bytes,
+                                 checkpoint_restore_seconds,
                                  cluster_floor_time, enumerate_clusters,
                                  format_decisions, job_dollars, job_seconds,
                                  mesh_candidates, optimize_resources)
 from repro.core.sweep import SweepEngine
 
 # The verification grid: 4 archs x 2 shapes x 4 objectives = 32 cells, each
-# co-searched over the same 13-candidate cluster grid (3 chip types, 1-2
-# pods, both mesh layouts, ICI and DCN multi-slice topologies).
+# co-searched over the same 17-candidate cluster grid (3 chip types, 1-2
+# pods, both 2D mesh layouts, ICI and DCN multi-slice topologies, and the
+# v5p 3D-torus family).
 VERIFY_CLUSTERS = enumerate_clusters(pod_counts=(1, 2))
 GRID_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b", "qwen1.5-4b")
 GRID_SHAPES = ("train_4k", "decode_32k")
@@ -27,8 +30,10 @@ GRID_OBJECTIVES = (("step_time", None), ("cost", None), ("job_cost", None),
                    ("slo", 0.25))
 
 # Clusters pruned per decode cell by the PR-2 optimizer (per-step ``cost``
-# objective, compute/memory-only floors) on exactly VERIFY_CLUSTERS —
-# measured before this refactor.  Memory-bound decode scales ~perfectly,
+# objective, compute/memory-only floors) on the 13-candidate pre-torus
+# grid — measured before the PR-3 refactor (VERIFY_CLUSTERS has since
+# gained 4 v5p 3D cells, which only makes the > comparisons easier to
+# clear).  Memory-bound decode scales ~perfectly,
 # so per-step $ is nearly flat across clusters and the old $-objective
 # could barely separate them; job-level pricing must beat every baseline
 # strictly (see test_decode_cells_prune_strictly_more_than_before).
@@ -152,6 +157,46 @@ def test_floor_has_collective_term_on_train_cells():
                 t.hbm_bytes / (denom * cc.hbm_bw_eff))
             new = cluster_floor_time(arch, shape, cc)
             assert new > old * 1.05, (arch_id, cand.cid, new, old)
+
+
+def test_checkpoint_restore_derived_from_bytes_over_disk():
+    """Restore time scales with checkpoint bytes / disk bandwidth per
+    chip — a 12B model restores ~24x slower than a 0.5B one on the same
+    cluster — with the constant-override field still honored."""
+    import dataclasses
+    from repro.core.cluster import (DEFAULT_CHECKPOINT_RESTORE_SECONDS,
+                                    single_pod_config)
+    cc = single_pod_config()
+    small, big = get_config("qwen1.5-0.5b"), get_config("gemma3-12b")
+    t_small = checkpoint_restore_seconds(cc, small)
+    t_big = checkpoint_restore_seconds(cc, big)
+    assert 0 < t_small < t_big
+    ratio = checkpoint_bytes(big) / checkpoint_bytes(small)
+    assert math.isclose(t_big / t_small, ratio, rel_tol=1e-9)
+    # more chips -> each restores a smaller shard
+    half = cc.with_mesh((8, 16), ("data", "model"))
+    assert checkpoint_restore_seconds(half, big) > t_big
+    # no arch in hand: the old constant fallback
+    assert checkpoint_restore_seconds(cc) == DEFAULT_CHECKPOINT_RESTORE_SECONDS
+    # explicit override wins over the derivation (backward compatibility)
+    pinned = dataclasses.replace(cc, checkpoint_restore_seconds=60.0)
+    assert checkpoint_restore_seconds(pinned, big) == 60.0
+    # and job pricing threads the arch through: deriving (tiny restore)
+    # must price below the pinned 60 s constant, all else equal
+    assert (job_dollars(cc, 0.1, 1000, arch=big)
+            < job_dollars(pinned, 0.1, 1000, arch=big))
+
+
+def test_optimizer_decisions_price_restore_per_arch():
+    """ResourceDecision.cost_per_job must use the searched architecture's
+    derived restore time, not the global constant."""
+    arch, shape = get_config("gemma3-12b"), SHAPES["train_4k"]
+    rd = optimize_resources(arch, shape, VERIFY_CLUSTERS,
+                            objective="job_cost")[0]
+    assert rd.arch is arch
+    expect = job_dollars(rd.cc, rd.time, rd.steps_per_job, arch)
+    assert math.isclose(rd.cost_per_job, expect, rel_tol=1e-12)
+    assert rd.cost_per_job != job_dollars(rd.cc, rd.time, rd.steps_per_job)
 
 
 def test_job_cost_amortizes_startup_restore_and_preemption():

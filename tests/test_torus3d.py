@@ -1,0 +1,354 @@
+"""3D-torus topology tests.
+
+The topology tentpole's contract: the third mesh axis is *purely
+additive*.  Every invariant the 2D cost model was calibrated under — ring
+collective formulas, floor soundness, cache bit-exactness, beam ==
+exhaustive — must survive on the enlarged space, and a degenerate third
+axis (size 1, flat link model) must reproduce the 2D numbers bit for bit.
+Deterministic versions of every property run everywhere; the randomized
+(hypothesis) versions ride along where requirements-dev is installed.
+"""
+import dataclasses
+import itertools
+import math
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.cluster import (TPU_V5E, TPU_V5P, ClusterConfig,
+                                single_pod_config, torus_3d_config)
+from repro.core.costmodel import PlanCostCache, estimate
+from repro.core.linalg_ops import collective_cost, collective_wire
+from repro.core.planner import (ShardingPlan, build_step_program, choose_plan,
+                                enumerate_plans)
+from repro.core.resource import (cluster_floor_time, enumerate_clusters,
+                                 mesh_candidates, mesh_factorizations,
+                                 mesh_factorizations_3d, optimize_resources)
+
+KINDS = ("all_reduce", "all_gather", "reduce_scatter", "all_to_all",
+         "permute")
+TORUS = torus_3d_config()                      # v5p 4x4x4, 2 links/axis
+
+
+# ---------------------------------------------------------------------------
+# collective_wire on the new axis
+# ---------------------------------------------------------------------------
+
+
+def test_collective_wire_3d_degenerates_to_2d_bit_exact():
+    """A size-1 third axis adds exactly nothing: same wire, same hops."""
+    for kind in KINDS:
+        for x, y in itertools.product((2, 4, 16), repeat=2):
+            for b in (1.0, 4096.0, 7.3e8):
+                flat = collective_wire(kind, b, (x, y))
+                cube = collective_wire(kind, b, (x, y, 1))
+                assert flat == cube, (kind, x, y, b)
+                mid1 = collective_wire(kind, b, (x, 1, y))
+                assert flat == mid1, (kind, x, y, b)
+
+
+def test_collective_wire_multi_axis_matches_manual_phasing():
+    """The tuple form is the estimator's per-axis phasing, folded: wire
+    and hops add, and hierarchical all_gather grows the payload."""
+    for kind in KINDS:
+        b, axes = 1e6, (4, 2, 8)
+        wire, hops = 0.0, 0
+        payload = b
+        for n in axes:
+            w, h = collective_wire(kind, payload, n)
+            wire += w
+            hops += h
+            if kind == "all_gather":
+                payload *= n
+        got_wire, got_hops = collective_wire(kind, b, axes)
+        assert math.isclose(got_wire, wire, rel_tol=1e-12) and got_hops == hops
+
+
+def test_collective_wire_monotone_in_axis_size():
+    """Growing any axis never shrinks the per-device wire volume."""
+    for kind in KINDS:
+        for n in (2, 4, 8, 64, 255):
+            lo, _ = collective_wire(kind, 1e6, n)
+            hi, _ = collective_wire(kind, 1e6, n + 1)
+            assert hi >= lo, (kind, n)
+        # and in the multi-axis form, along the new axis specifically
+        for z in (1, 2, 4, 8):
+            lo, _ = collective_wire(kind, 1e6, (4, 4, z))
+            hi, _ = collective_wire(kind, 1e6, (4, 4, 2 * z))
+            assert hi >= lo, (kind, z)
+
+
+def test_collective_cost_links_divide_bandwidth_term_only():
+    """2 links halve the wire time but never the hop latency."""
+    bw, lat = 90e9, 1e-6
+    for kind in KINDS:
+        one = collective_cost(kind, 1e8, 4, bw, 0.0, links=1)
+        two = collective_cost(kind, 1e8, 4, bw, 0.0, links=2)
+        assert math.isclose(one, 2.0 * two, rel_tol=1e-12), kind
+        lat_one = collective_cost(kind, 0.0, 4, bw, lat, links=1)
+        lat_two = collective_cost(kind, 0.0, 4, bw, lat, links=2)
+        assert math.isclose(lat_one, lat_two, rel_tol=1e-12), kind
+
+
+# ---------------------------------------------------------------------------
+# ClusterConfig geometry
+# ---------------------------------------------------------------------------
+
+
+def test_axis_bandwidth_doubles_on_torus_axes_only():
+    for ax in ("data", "model", "depth"):
+        assert TORUS.axis_links(ax) == 2
+        assert TORUS.axis_bandwidth(ax) == 2 * TORUS.link_bw(ax)
+    assert TORUS.max_ici_links == 2
+    flat = single_pod_config()
+    for ax in flat.mesh_axes:
+        assert flat.axis_links(ax) == 1
+        assert flat.axis_bandwidth(ax) == flat.link_bw(ax)
+    assert flat.max_ici_links == 1
+    # DCN ("pod") axes ignore link counts even if someone sets them
+    dcn = ClusterConfig(mesh_shape=(2, 8, 8), mesh_axes=("pod", "data",
+                                                         "model"),
+                        torus_links=(2, 2, 2))
+    assert dcn.axis_links("pod") == 1
+    assert dcn.axis_bandwidth("pod") == dcn.dcn_bw_eff
+
+
+def test_with_mesh_never_leaks_torus_links():
+    flat = TORUS.with_mesh((16, 4), ("data", "model"))
+    assert flat.torus_links == ()
+    assert flat.max_ici_links == 1
+    kept = TORUS.with_mesh((8, 4, 2), ("data", "model", "depth"),
+                           torus_links=(2, 2, 2))
+    assert kept.torus_links == (2, 2, 2)
+
+
+def test_torus_3d_config_validates():
+    with pytest.raises(ValueError):
+        torus_3d_config((8, 8))
+    with pytest.raises(ValueError):
+        torus_3d_config((4, 4, 4), chip=TPU_V5E)   # 2D-torus fabric
+
+
+def test_size1_depth_axis_prices_identically_to_2d_mesh():
+    """The same plan on (8, 8) and on (8, 8, 1)+flat-links must cost
+    bit-identically — the 2D calibration is a strict special case."""
+    arch = get_config("qwen1.5-0.5b")
+    cc2 = ClusterConfig(chip=TPU_V5P, mesh_shape=(8, 8),
+                        mesh_axes=("data", "model"))
+    cc3 = ClusterConfig(chip=TPU_V5P, mesh_shape=(8, 8, 1),
+                        mesh_axes=("data", "model", "depth"))
+    plan = ShardingPlan(name="dp+tp", batch_axes=("data",),
+                        tp_axes=("model",))
+    for shape_id in ("train_4k", "decode_32k"):
+        shape = SHAPES[shape_id]
+        a = estimate(build_step_program(arch, shape, plan, cc2), cc2)
+        b = estimate(build_step_program(arch, shape, plan, cc3), cc3)
+        assert a.total == b.total, shape_id
+        assert a.totals.as_tuple() == b.totals.as_tuple(), shape_id
+
+
+def test_torus_links_discount_collectives_but_never_below_half():
+    """2 links/axis at most halve the collective time (hop latency is not
+    bandwidth) and never touch io/compute."""
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["train_4k"]
+    flat = dataclasses.replace(TORUS, torus_links=())
+    plan = choose_plan(arch, shape, flat, top_k=1)[0].plan
+    a = estimate(build_step_program(arch, shape, plan, flat), flat)
+    b = estimate(build_step_program(arch, shape, plan, TORUS), TORUS)
+    assert b.breakdown.collective < a.breakdown.collective
+    assert b.breakdown.collective >= a.breakdown.collective / 2 - 1e-15
+    assert b.breakdown.compute == a.breakdown.compute
+    assert b.breakdown.io == a.breakdown.io
+    # totals hold wire *volume*, which links do not change
+    assert a.totals.as_tuple() == b.totals.as_tuple()
+
+
+# ---------------------------------------------------------------------------
+# The enlarged plan/cluster space
+# ---------------------------------------------------------------------------
+
+V5P_CLUSTERS = enumerate_clusters(chips=["tpu_v5p"], pod_counts=(1, 2))
+V5P_3D = [c for c in V5P_CLUSTERS if c.cid.endswith("-3d")]
+
+
+def test_enumerate_clusters_emits_3d_family_for_v5p_only():
+    assert len(V5P_3D) >= 2
+    for cand in V5P_3D:
+        assert len(cand.cc.mesh_shape) == 3
+        assert cand.cc.mesh_axes == ("data", "model", "depth")
+        assert cand.cc.torus_links == (2, 2, 2)
+    flat_chips = enumerate_clusters(chips=["tpu_v5e", "tpu_v6e"],
+                                    pod_counts=(1, 2))
+    assert not any(c.cid.endswith("-3d") for c in flat_chips)
+    # and the 2D family is unchanged by the new axis: same cids as before
+    v5p_2d = [c.cid for c in V5P_CLUSTERS if not c.cid.endswith("-3d")]
+    assert v5p_2d == ["v5p-8x8", "v5p-16x4", "v5p-16x8", "v5p-32x4",
+                     "v5p-2x8x8-dcn"]
+
+
+def test_mesh_factorizations_3d_is_valid_and_balanced_first():
+    for n in (8, 64, 128, 256, 192):
+        facs = mesh_factorizations_3d(n, variants=8)
+        assert facs, n
+        ratios = []
+        for mesh, axes in facs:
+            d, m, z = mesh
+            assert d * m * z == n
+            assert d >= m >= z >= 2
+            assert axes == ("data", "model", "depth")
+            ratios.append(d / z)
+        assert ratios == sorted(ratios)       # most cube-like first
+    assert mesh_factorizations_3d(7) == []    # primes have no 3D split
+    # 2D factorizations are byte-identical with or without the torus flag
+    for n in (64, 256):
+        flat = mesh_factorizations(n, torus_dims=2)
+        both = mesh_factorizations(n, torus_dims=3)
+        assert both[:len(flat)] == flat
+        assert all(len(mesh) == 3 for mesh, _ in both[len(flat):])
+
+
+def test_depth_axis_roles_enumerate_and_fit():
+    """Every 3D role must build and cost; the plan space strictly grows
+    versus the 2D mesh of the same chip count."""
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["train_4k"]
+    cc2 = ClusterConfig(chip=TPU_V5P, mesh_shape=(16, 4),
+                        mesh_axes=("data", "model"))
+    plans3 = enumerate_plans(arch, shape, TORUS)
+    assert len(plans3) > len(enumerate_plans(arch, shape, cc2))
+    names = {p.name for p in plans3}
+    assert {"dp+tp2", "dp+tp", "tp+fsdp", "fsdp2", "dp-pure"} <= names
+    cache = PlanCostCache()
+    for p in plans3[:12]:
+        costed = estimate(build_step_program(arch, shape, p, TORUS), TORUS,
+                          cache=cache)
+        assert costed.total > 0
+
+
+def test_moe_and_prefill_roles_reach_depth_axis():
+    arch = get_config("phi3.5-moe-42b-a6.6b")
+    names = {p.name for p in enumerate_plans(arch, SHAPES["train_4k"], TORUS)}
+    assert "dp+ep+tp" in names and "dp+ep" in names
+    dense = get_config("qwen1.5-4b")
+    pnames = {p.name
+              for p in enumerate_plans(dense, SHAPES["prefill_32k"], TORUS)}
+    assert "tp+seq" in pnames
+
+
+def test_floor_sound_over_full_enumeration_on_3d_meshes():
+    """The acceptance-criterion check: cost every enumerated plan on every
+    3D v5p cell and assert nothing dips below the cluster floor — the
+    tightest plan/floor ratio over the whole enumeration stays >= 1.0."""
+    cache = PlanCostCache()
+    arch = get_config("qwen1.5-0.5b")
+    tightest = float("inf")
+    for shape_id in ("train_4k", "decode_32k"):
+        shape = SHAPES[shape_id]
+        for cand in V5P_3D:
+            floor = cluster_floor_time(arch, shape, cand.cc)
+            assert floor > 0
+            for plan in enumerate_plans(arch, shape, cand.cc):
+                costed = estimate(build_step_program(arch, shape, plan,
+                                                     cand.cc),
+                                  cand.cc, cache=cache)
+                ratio = costed.total / floor
+                tightest = min(tightest, ratio)
+                assert ratio >= 1.0, (shape_id, cand.cid, plan.describe(),
+                                      ratio)
+    assert tightest >= 1.0
+    assert tightest < 10.0       # the floor is a *bound*, not a fiction
+
+
+def test_beam_matches_exhaustive_on_3d_inclusive_grid():
+    """Winner equality on the v5p grid with its 3D family included, under
+    both time and $ objectives — per the acceptance criteria."""
+    cache, ex_cache = PlanCostCache(), PlanCostCache()
+    for arch_id in ("qwen1.5-0.5b", "mamba2-1.3b"):
+        arch = get_config(arch_id)
+        for shape_id in ("train_4k", "decode_32k"):
+            shape = SHAPES[shape_id]
+            for objective in ("step_time", "cost", "job_cost"):
+                beam = optimize_resources(arch, shape, V5P_CLUSTERS,
+                                          objective=objective, cache=cache)
+                full = optimize_resources(arch, shape, V5P_CLUSTERS,
+                                          objective=objective,
+                                          search="exhaustive",
+                                          cache=ex_cache)
+                cell = f"{arch_id}|{shape_id}|{objective}"
+                assert beam[0].cluster_id == full[0].cluster_id, cell
+                assert beam[0].decision.plan == full[0].decision.plan, cell
+
+
+def test_plan_cache_replay_bit_exact_on_3d_meshes():
+    """Cold record and warm replay through a shared cache must reproduce
+    the uncached walk exactly — cost, breakdown, peak HBM and totals —
+    for plans spanning every 3D role."""
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["train_4k"]
+    cache = PlanCostCache()
+    plans = enumerate_plans(arch, shape, TORUS)
+    picked = {p.name: p for p in plans}.values()   # one per role
+    for plan in picked:
+        prog = build_step_program(arch, shape, plan, TORUS)
+        base = estimate(prog, TORUS)
+        cold = estimate(prog, TORUS, cache=cache)
+        warm = estimate(prog, TORUS, cache=cache)
+        for got in (cold, warm):
+            assert got.total == base.total, plan.name
+            assert got.totals.as_tuple() == base.totals.as_tuple(), plan.name
+            assert got.peak_hbm_per_device == base.peak_hbm_per_device
+    assert cache.hits > 0
+
+
+def test_elastic_replan_survives_prime_survivor_counts():
+    """Device loss can leave a chip count with no non-trivial 2D split;
+    the degenerate 1D mesh must keep replan working."""
+    from repro.runtime.elastic import replan
+    cands = mesh_candidates(TPU_V5E, 7)
+    assert [tuple(c.cc.mesh_shape) for c in cands] == [(7,)]
+    with pytest.raises(ValueError):
+        mesh_candidates(TPU_V5E, 0)
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["decode_32k"]
+    old_cc = single_pod_config()
+    ep = replan(arch, shape, old_cc=old_cc, available_chips=7)
+    assert ep.cc.num_chips == 7
+    assert ep.decision is not None
+    # 3D-capable chips re-factor survivors into torus layouts too
+    v5p_cands = mesh_candidates(TPU_V5P, 192)
+    assert any(c.cid.endswith("-3d") for c in v5p_cands)
+
+
+# ---------------------------------------------------------------------------
+# Randomized versions (hypothesis, where installed)
+# ---------------------------------------------------------------------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=60, deadline=None)
+    @given(kind=st.sampled_from(KINDS),
+           b=st.floats(min_value=1.0, max_value=1e12),
+           x=st.integers(1, 1024), y=st.integers(1, 1024))
+    def test_property_3d_degenerates_to_2d(kind, b, x, y):
+        """Bit-exact equality, size-1 third axis in any position."""
+        flat = collective_wire(kind, b, (x, y))
+        assert collective_wire(kind, b, (x, y, 1)) == flat
+        assert collective_wire(kind, b, (x, 1, y)) == flat
+        assert collective_wire(kind, b, (1, x, y)) == flat
+
+    @settings(max_examples=60, deadline=None)
+    @given(kind=st.sampled_from(KINDS),
+           b=st.floats(min_value=1.0, max_value=1e12),
+           x=st.integers(1, 256), y=st.integers(1, 256),
+           z=st.integers(1, 255))
+    def test_property_wire_monotone_in_third_axis(kind, b, x, y, z):
+        lo, lo_hops = collective_wire(kind, b, (x, y, z))
+        hi, hi_hops = collective_wire(kind, b, (x, y, z + 1))
+        assert hi >= lo
+        assert hi_hops >= lo_hops
+else:
+    def test_property_3d_degenerates_to_2d():
+        pytest.skip("randomized variant needs hypothesis "
+                    "(pip install -r requirements-dev.txt)")
