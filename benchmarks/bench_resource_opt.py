@@ -18,6 +18,12 @@ Rows:
     exhaustive winner for every (shape x objective) cell AND at least one
     3D cell must win somewhere, at >=3x fewer plan evaluations than the
     exhaustive scan of that 3D-inclusive grid.
+  * ``resource_opt.pipeline`` — the pipeline gate: on the pipeline-
+    inclusive v5p multi-slice grid, beam==exhaustive for the frontier-
+    dense (qwen1.5-110b) train cell under every objective, at least one
+    DCN multi-slice candidate's chosen plan must be a *feasible
+    pipelined* plan (per-stage residency is what lets 110B dense train
+    fit at all), and the co-search must hold >=3x fewer evaluations.
   * ``resource_opt.cache`` — shared sub-plan cache traffic across the whole
     grid, gated on a minimum hit rate (the co-search only stays cheap if
     candidates keep replaying each other's sub-plans).
@@ -125,6 +131,37 @@ def run(quick: bool = False) -> List[str]:
         f"({t3_stats.evals_ratio:.1f}x);claim={MIN_EVALS_RATIO:.0f}x;"
         f"{'MATCH' if t3_match else 'MISMATCH'};"
         f"{'PASS' if t3_gate else 'FAIL'}")
+
+    # --- pipeline gate: pipeline-inclusive grid, frontier-dense train ----
+    pp_grid = enumerate_clusters(chips=["tpu_v5p"], pod_counts=(1, 2, 4))
+    pp_arch = get_config("qwen1.5-110b")
+    pp_shape = SHAPES["train_4k"]
+    pp_stats = ResourceSearchStats()
+    pp_cache = PlanCostCache()
+    pp_match = True
+    pp_wins = 0
+    for objective in ("step_time", "cost", "job_cost"):
+        dec = optimize_resources(pp_arch, pp_shape, pp_grid,
+                                 objective=objective,
+                                 cache=pp_cache, stats=pp_stats)
+        ex = optimize_resources(pp_arch, pp_shape, pp_grid,
+                                objective=objective,
+                                search="exhaustive", cache=ex_cache)
+        pp_match &= (dec[0].cluster_id == ex[0].cluster_id
+                     and dec[0].decision.plan == ex[0].decision.plan)
+        if any(rd.decision is not None and rd.feasible
+               and "-dcn" in rd.cluster_id
+               and rd.decision.plan.pp_axes for rd in dec):
+            pp_wins += 1
+    pp_gate = (pp_match and pp_wins >= 3
+               and pp_stats.evals_ratio >= MIN_EVALS_RATIO)
+    rows.append(
+        f"resource_opt.pipeline,0,clusters={len(pp_grid)};"
+        f"pp_dcn_wins={pp_wins}/3;"
+        f"evals={pp_stats.plan_evals}/{pp_stats.exhaustive_plan_space}"
+        f"({pp_stats.evals_ratio:.1f}x);claim={MIN_EVALS_RATIO:.0f}x;"
+        f"{'MATCH' if pp_match else 'MISMATCH'};"
+        f"{'PASS' if pp_gate else 'FAIL'}")
 
     baselines = {a: PRE_JOB_COST_DECODE_PRUNED[a, quick] for a in archs}
     decode_gate = all(decode_pruned[a] > baselines[a] for a in archs)

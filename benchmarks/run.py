@@ -19,7 +19,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           optimizer must return the exhaustive
                           (cluster x plan) winner (``MATCH`` per cell) with
                           >=3x fewer plan evaluations and a minimum shared
-                          cache hit rate (``resource_opt.cache,...,PASS``)
+                          cache hit rate (``resource_opt.cache,...,PASS``),
+                          plus the topology (``resource_opt.torus3d``) and
+                          pipeline-parallelism (``resource_opt.pipeline``:
+                          a feasible pipelined winner on a DCN multi-slice
+                          train cell, beam==exhaustive) gates
   * bench_roofline      — (beyond paper) roofline terms per dry-run cell
 
 ``--quick`` shrinks every module to tiny configs (CI smoke tier); any

@@ -2,8 +2,12 @@
 
 Enumerates cluster candidates (chip type x pod count x mesh layout x
 ICI/DCN topology — including the v5p 3D-torus layouts, whose wrapped
-rings double per-axis ICI bandwidth and whose third "depth" axis carries
-its own parallelism role), co-searches the sharding-plan space on each
+rings double per-axis ICI bandwidth on full-cube axes and whose third
+"depth" axis carries its own parallelism role, plus DCN multi-slice
+grids whose pod axis can carry *pipeline stages*: try
+``--arch qwen1.5-110b --shape train_4k`` to watch a frontier-dense model
+fit nowhere except a pipelined multi-slice), co-searches the
+sharding-plan space on each
 through one shared sub-plan cost cache, and ranks them under your
 objective — fastest step, cheapest step ($/step via
 ChipSpec.cost_per_chip_hour), cheapest *job* ($/job with startup,

@@ -14,6 +14,11 @@ Run:
   PYTHONPATH=src python examples/sweep_plans.py \
       --clusters v5p-pod v5p-3d   # same v5p pod, 2D flat vs native 3D
                                   # torus (2 links/axis, "depth" roles)
+  PYTHONPATH=src python examples/sweep_plans.py \
+      --archs qwen1.5-110b --shapes train_4k \
+      --clusters v5p-dcn v5p-dcn-3d   # pipeline-over-DCN: the 110B dense
+                                      # train cell only fits with pp
+                                      # stages over the pod axis
   PYTHONPATH=src python examples/sweep_plans.py --resources \
       --objective cost      # sweep the full enumerated cluster grid —
                             # including the v5p 3D-torus cells — and rank

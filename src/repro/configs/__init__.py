@@ -15,6 +15,7 @@ _MODULES = {
     "deepseek-v3-671b": "repro.configs.deepseek_v3",
     "stablelm-12b": "repro.configs.stablelm_12b",
     "qwen1.5-4b": "repro.configs.qwen15_4b",
+    "qwen1.5-110b": "repro.configs.qwen15_110b",
     "gemma3-12b": "repro.configs.gemma3_12b",
     "qwen1.5-0.5b": "repro.configs.qwen15_0p5b",
     "mamba2-1.3b": "repro.configs.mamba2_1p3b",

@@ -33,7 +33,8 @@ from repro.core.hlo_cost import (CompiledCost, CollectiveStat, from_compiled,
 from repro.core.plan import (Block, Call, Collective, Compute, CpVar,
                              CreateVar, DataGen, ForBlock, FunctionBlock,
                              GenericBlock, IfBlock, Instruction, IO, JitCall,
-                             ParForBlock, Program, RmVar, WhileBlock)
+                             P2P, ParForBlock, PipelinedLoopBlock, Program,
+                             RmVar, WhileBlock)
 from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
                                 build_step_program, choose_plan,
                                 enumerate_plans, estimate_hbm,
@@ -41,6 +42,7 @@ from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
                                  ResourceDecision, ResourceSearchStats,
                                  checkpoint_bytes, checkpoint_restore_seconds,
+                                 checkpoint_write_seconds,
                                  cluster_floor_time, enumerate_clusters,
                                  format_decisions, job_dollars, job_seconds,
                                  mesh_candidates, mesh_factorizations_3d,
@@ -59,7 +61,8 @@ __all__ = [
     "CompiledCost", "CollectiveStat", "from_compiled", "lower_and_cost",
     "parse_collectives", "Block", "Call", "Collective", "Compute", "CpVar",
     "CreateVar", "DataGen", "ForBlock", "FunctionBlock", "GenericBlock",
-    "IfBlock", "Instruction", "IO", "JitCall", "ParForBlock", "Program",
+    "IfBlock", "Instruction", "IO", "JitCall", "P2P", "ParForBlock",
+    "PipelinedLoopBlock", "Program",
     "RmVar", "WhileBlock", "PlanDecision", "SearchStats", "ShardingPlan",
     "build_step_program", "choose_plan", "enumerate_plans", "estimate_hbm",
     "reference_plans", "resident_components",
@@ -67,6 +70,7 @@ __all__ = [
     "ResourceSearchStats", "cluster_floor_time", "enumerate_clusters",
     "format_decisions", "job_dollars", "job_seconds",
     "checkpoint_bytes", "checkpoint_restore_seconds",
+    "checkpoint_write_seconds",
     "mesh_candidates", "mesh_factorizations_3d", "optimize_resources",
     "MemState", "SymbolTable", "TensorStat",
     "SweepCell", "SweepEngine", "format_table", "rank_cells", "sweep_rows",

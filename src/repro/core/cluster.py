@@ -48,6 +48,12 @@ class ChipSpec:
     # uses) is kept for 2D meshes on any chip.  The resource optimizer only
     # emits 3D mesh candidates when ``ici_torus_dims >= 3``.
     ici_torus_dims: int = 2
+    # Side length of the building-block cube the fabric is assembled from
+    # (v4/v5p slices compose 4x4x4 cubes behind optical switches).  An axis
+    # of a 3D slice only closes into a wrapped ring — earning the 2-link
+    # torus rate — when its extent is a whole number of cube faces, i.e. a
+    # multiple of this; any other extent is an open line (1 link).
+    ici_cube_dim: int = 4
     # Host-side paths.
     pcie_bw: float = 32e9          # host <-> device
     host_dram_bw: float = 100e9    # host memory
@@ -306,6 +312,17 @@ class ClusterConfig:
         keeps the calibrated 1-link rate bit-identical."""
         return self.link_bw(axis) * self.axis_links(axis)
 
+    def p2p_bw(self, axis: str) -> float:
+        """Point-to-point path: per-device bandwidth of ONE link along a
+        mesh axis — what a pipeline stage boundary's send/recv rides.  A
+        neighbor transfer uses a single directed link, so the wrapped-ring
+        doubling of :meth:`axis_bandwidth` (a ring-collective property)
+        never applies; on a DCN ("pod") axis this is the inter-slice
+        network path, which is exactly what makes pipeline-over-DCN the
+        interesting plan family (one activation hop per microbatch instead
+        of a ring collective's phased volume)."""
+        return self.link_bw(axis)
+
     @property
     def max_ici_links(self) -> int:
         """The most links any ICI mesh axis exposes — the *most generous*
@@ -338,7 +355,7 @@ class ClusterConfig:
                   chip.hbm_bytes, chip.hbm_bw, chip.vmem_bytes,
                   chip.ici_bw_per_link, chip.ici_links_per_axis, chip.pcie_bw,
                   chip.host_dram_bw, chip.disk_bw, chip.dcn_bw,
-                  chip.ici_domain, chip.ici_torus_dims,
+                  chip.ici_domain, chip.ici_torus_dims, chip.ici_cube_dim,
                   chip.cost_per_chip_hour,
                   self.mesh_shape, self.mesh_axes, self.torus_links,
                   self.dispatch_latency,

@@ -8,8 +8,10 @@ Single recursive pass over the runtime plan in execution order:
     max(memory-bandwidth time, FLOP-model time) (§3.3);
   * aggregates over control flow with Eq (1): blocks sum children, loops
     scale by N-hat (first-iteration IO correction applied), parfor divides
-    by parallelism, branches take a weighted sum, function-call stacks
-    prevent recursion cycles;
+    by parallelism, branches take a weighted sum, software-pipelined
+    microbatch loops (:class:`repro.core.plan.PipelinedLoopBlock`) pay
+    fill/drain plus ``(M-1) * max_stage`` steady state, function-call
+    stacks prevent recursion cycles;
   * linearizes everything into one scalar, estimated execution time (R2).
 
 Costs are *per-program-run* wall-clock seconds given a cluster config.
@@ -40,11 +42,13 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.core import linalg_ops
 from repro.core.cluster import ClusterConfig
-from repro.core.linalg_ops import collective_phases, collective_wire
+from repro.core.linalg_ops import (collective_phases, collective_wire,
+                                   p2p_cost, p2p_wire)
 from repro.core.plan import (
     Block, Call, Collective, Compute, CpVar, CreateVar, DataGen, ForBlock,
-    FunctionBlock, GenericBlock, IfBlock, Instruction, IO, JitCall,
-    ParForBlock, Program, RmVar, WhileBlock, node_signature,
+    FunctionBlock, GenericBlock, IfBlock, Instruction, IO, JitCall, P2P,
+    ParForBlock, PipelinedLoopBlock, Program, RmVar, WhileBlock,
+    node_signature,
 )
 from repro.core.symbols import MemState, SymbolTable, TensorStat
 
@@ -245,7 +249,7 @@ class PlanCostCache:
 # instructions with non-trivial math (op profiling / collective formulas).
 # Meta instructions (createvar & co) are cheaper to execute than to probe.
 _CACHEABLE = (GenericBlock, ForBlock, WhileBlock, ParForBlock,
-              Compute, Collective, JitCall)
+              PipelinedLoopBlock, Compute, Collective, P2P, JitCall)
 
 
 class CostEstimator:
@@ -331,6 +335,8 @@ class CostEstimator:
             return self._cost_loop(node, symtab, stack)
         if isinstance(node, ParForBlock):
             return self._cost_parfor(node, symtab, stack)
+        if isinstance(node, PipelinedLoopBlock):
+            return self._cost_pipelined(node, symtab, stack)
         if isinstance(node, IfBlock):
             return self._cost_if(node, symtab, stack)
         if isinstance(node, FunctionBlock):
@@ -392,6 +398,56 @@ class CostEstimator:
         return CostedNode(f"PARFOR {node.label} (N={n}, k={k}, w={w})", agg,
                           children, totals=totals)
 
+    def _cost_pipelined(self, node: PipelinedLoopBlock, symtab,
+                        stack) -> CostedNode:
+        """GPipe-style schedule: T = fill/drain + steady state.
+
+        The cold pass (microbatch 1 rippling through every stage, paying
+        first-use IO) sums the stages; every further microbatch hides
+        behind the slowest *warm* stage:
+
+            T = sum_s T_s[first] + (M - 1) * max_s T_s[warm]
+
+        Work totals take the sequential weights — every microbatch still
+        executes every stage — so ``totals = sum_s first_s +
+        (M-1) * sum_s warm_s``: pipelining overlaps time, it never deletes
+        work (this is what keeps the resource optimizer's floors honest).
+        At S=1 both formulas reduce bit-exactly to the sequential loop's
+        ``T_first + (N-1) * T_warm``.
+        """
+        m = max(int(node.microbatches), 1)
+        s = len(node.stages)
+        if not s:      # no stages: an empty loop body, nothing to charge
+            return CostedNode(f"PIPELINE {node.label} (S=0, M={m})",
+                              CostBreakdown())
+        firsts = [self._sum_children(f"stage[{i}][first]", body, symtab,
+                                     stack)
+                  for i, body in enumerate(node.stages)]
+        fill = CostBreakdown()
+        totals = ZERO_TOTALS
+        for fn in firsts:
+            fill = fill + fn.cost
+            totals = totals + fn.totals
+        children: List[CostedNode] = list(firsts)
+        note = ""
+        if m > 1:
+            warms = [self._sum_children(f"stage[{i}][warm]", body, symtab,
+                                        stack)
+                     for i, body in enumerate(node.stages)]
+            children.extend(warms)
+            crit = max(range(s), key=lambda i: warms[i].cost.total)
+            warm_totals = ZERO_TOTALS
+            for wn in warms:
+                warm_totals = warm_totals + wn.totals
+            agg = fill + warms[crit].cost.scaled(m - 1)
+            totals = totals + warm_totals.scaled(m - 1)
+            note = (f"critical stage={crit} "
+                    f"bubble~(S-1)/M={(s - 1) / m:.3f}")
+        else:
+            agg = fill
+        label = f"PIPELINE {node.label} (S={s}, M={m})"
+        return CostedNode(label, agg, children, note=note, totals=totals)
+
     def _cost_if(self, node: IfBlock, symtab, stack) -> CostedNode:
         pred = self._sum_children("predicate", node.predicate, symtab, stack)
         nb = max(len(node.branches), 1)
@@ -448,6 +504,8 @@ class CostEstimator:
             return self._cost_io(inst, symtab)
         if isinstance(inst, Collective):
             return self._cost_collective(inst, symtab)
+        if isinstance(inst, P2P):
+            return self._cost_p2p(inst, symtab)
         if isinstance(inst, JitCall):
             return self._cost_jitcall(inst, symtab)
         if isinstance(inst, Call):
@@ -558,6 +616,31 @@ class CostEstimator:
         return self._leaf(inst, CostBreakdown(collective=t), symtab,
                           totals=ProgramTotals(ici_bytes=wire["ici"],
                                                dcn_bytes=wire["dcn"]))
+
+    def _cost_p2p(self, inst: P2P, symtab: SymbolTable) -> CostedNode:
+        """One stage-boundary send/recv: priced at the *single-link* p2p
+        rate of the axis fabric (``cc.p2p_bw``), never at the torus-doubled
+        ``axis_bandwidth`` a ring collective earns.  Size-1 axes are
+        no-ops; wire volume lands in the same ICI/DCN totals the floors
+        read, and the overlap discount applies exactly as for collectives
+        (a pipeline hides its sends under the adjacent stage's compute)."""
+        cc = self.cc
+        st = symtab.get(inst.var)
+        if inst.bytes_override is not None:
+            payload = float(inst.bytes_override)
+        elif st is not None:
+            payload = st.bytes_per_device()
+        else:
+            raise KeyError(f"p2p on undefined var '{inst.var}'")
+        n = cc.axis_size(inst.axis)
+        wire, _ = p2p_wire(payload, n)
+        t = p2p_cost(payload, n, cc.p2p_bw(inst.axis),
+                     cc.collective_phase_latency) * (1.0 - cc.overlap_fraction)
+        cls = cc.link_class(inst.axis)
+        return self._leaf(inst, CostBreakdown(collective=t), symtab,
+                          totals=ProgramTotals(
+                              ici_bytes=wire if cls == "ici" else 0.0,
+                              dcn_bytes=wire if cls == "dcn" else 0.0))
 
     def _cost_jitcall(self, inst: JitCall, symtab: SymbolTable) -> CostedNode:
         io_t = sum(self._stage_in(n, symtab) for n in inst.reads)

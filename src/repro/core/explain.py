@@ -28,6 +28,11 @@ def _fmt(x: float) -> str:
 def _annotate(node: CostedNode) -> str:
     c = node.cost
     if node.children:
+        # pipelined loops carry a schedule note (critical stage, bubble
+        # fraction) worth surfacing inline — the whole point of costing
+        # them as control flow is that the overlap is visible here
+        if node.note:
+            return f"# C={_fmt(c.total)} [{node.note}]"
         return f"# C={_fmt(c.total)}"
     parts = f"# C=[{_fmt(c.io)}, {_fmt(c.compute)}"
     if c.collective:

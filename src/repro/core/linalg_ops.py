@@ -340,6 +340,38 @@ def collective_phases(kind: str, bytes_per_device: float,
             payload *= max(int(n), 1)
 
 
+def p2p_wire(bytes_per_device: float, axis_size: int) -> Tuple[float, int]:
+    """(wire bytes per device, hop count) for a neighbor-to-neighbor
+    send/recv along a mesh axis — the pipeline stage-boundary primitive.
+
+    The payload crosses exactly one link once (no ring phases, no payload
+    growth), so the wire volume is the payload itself and the hop count is
+    1.  A size-1 axis has no neighbor: the transfer is a no-op (0 bytes,
+    0 hops), which is what makes an S=1 "pipeline" degenerate bit-exactly
+    to the sequential loop.
+    """
+    if int(axis_size) <= 1:
+        return 0.0, 0
+    return float(bytes_per_device), 1
+
+
+def p2p_cost(bytes_per_device: float, axis_size: int,
+             link_bw: float, phase_latency: float) -> float:
+    """Time for one stage-boundary send/recv: ``payload / link_bw +
+    phase_latency`` across one link.
+
+    Unlike :func:`collective_cost` there is no ``links`` parameter: a p2p
+    transfer rides a single directed link of the fabric, so the wrapped-
+    ring doubling a 3D torus grants collectives (both ring directions
+    usable) never applies — price it at the *single-link* rate
+    (``ClusterConfig.p2p_bw``), not ``axis_bandwidth``.
+    """
+    wire, hops = p2p_wire(bytes_per_device, axis_size)
+    if not hops:
+        return 0.0
+    return wire / link_bw + hops * phase_latency
+
+
 def collective_cost(kind: str, bytes_per_device: float,
                     axis_size: Union[int, Sequence[int]],
                     link_bw: float, phase_latency: float,

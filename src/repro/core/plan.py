@@ -18,6 +18,8 @@ Instruction kinds map SystemML's onto the TPU world:
                 (persistent reads, checkpoint writes, host staging)
   * collective— all_reduce / all_gather / reduce_scatter / all_to_all /
                 permute over named mesh axes (the MR-shuffle analogue)
+  * p2p       — point-to-point send/recv between neighbor positions on a
+                mesh axis (pipeline stage boundaries; one link, no ring)
   * jitcall   — one compiled XLA executable; its cost comes from the
                 *generated plan* (``hlo_cost``) rather than op formulas.
                 This is the paper's headline object: costing what the
@@ -134,6 +136,29 @@ class Collective(Instruction):
 
 
 @dataclasses.dataclass
+class P2P(Instruction):
+    """Point-to-point send/recv between *neighbor* positions on a mesh axis.
+
+    The wire primitive of pipeline parallelism: a stage hands its boundary
+    activations (or, on the backward path, their gradients) to the adjacent
+    stage.  Unlike a :class:`Collective`, a p2p transfer rides exactly one
+    link of the axis fabric — it never benefits from the wrapped-ring
+    doubling of ``ClusterConfig.axis_bandwidth`` — and it moves its payload
+    once (no ring phases).  Priced by :func:`repro.core.linalg_ops.p2p_cost`
+    at ``ClusterConfig.p2p_bw(axis)``.
+    """
+
+    var: str
+    axis: str                      # mesh axis the transfer crosses
+    # Optional explicit payload override (bytes per device); else derived
+    # from the symbol table entry for ``var``.
+    bytes_override: Optional[float] = None
+
+    def describe(self) -> str:
+        return f"p2p[{self.axis}] {self.var}"
+
+
+@dataclasses.dataclass
 class JitCall(Instruction):
     """One compiled executable, costed from its generated HLO.
 
@@ -199,6 +224,36 @@ class IfBlock:
 
 
 @dataclasses.dataclass
+class PipelinedLoopBlock:
+    """A software-pipelined microbatch loop (GPipe-style schedule).
+
+    ``stages`` holds S per-stage bodies; every one of the M microbatches
+    flows through all S stages, but *different* microbatches occupy
+    different stages concurrently, so the loop's time is not N x body:
+
+        T = fill/drain + steady state
+          = sum_s T_s           (one microbatch rippling through the pipe)
+          + (M - 1) * max_s T_s (every further microbatch behind the
+                                 slowest stage)
+
+    which degenerates **bit-exactly** to the sequential :class:`ForBlock`
+    semantics at S=1 (``T_first + (M-1) * T_warm``).  Work totals are NOT
+    overlapped: every microbatch runs every stage, so totals aggregate as
+    ``sum_s first_s + (M-1) * sum_s warm_s`` — exactly the sequential
+    weights (pipelining hides time, it never removes work).
+
+    Stage-boundary activation traffic belongs *inside* the stage bodies as
+    :class:`P2P` instructions, so it pipelines (and caches) with the stage
+    that pays it.
+    """
+
+    label: str
+    microbatches: int              # M; the loop's trip count
+    stages: List[List[Union[Instruction, "Block"]]] = dataclasses.field(
+        default_factory=list)      # S per-stage bodies, pipeline order
+
+
+@dataclasses.dataclass
 class FunctionBlock:
     """Named function body; calls are CallInst; recursion guarded by stack."""
 
@@ -214,7 +269,8 @@ class Call(Instruction):
         return f"call {self.func}"
 
 
-Block = Union[GenericBlock, ForBlock, WhileBlock, ParForBlock, IfBlock, FunctionBlock]
+Block = Union[GenericBlock, ForBlock, WhileBlock, ParForBlock, IfBlock,
+              PipelinedLoopBlock, FunctionBlock]
 
 
 @dataclasses.dataclass
@@ -250,6 +306,9 @@ class Program:
                     walk(n.predicate)
                     for br in n.branches:
                         walk(br)
+                elif isinstance(n, PipelinedLoopBlock):
+                    for stage in n.stages:
+                        walk(stage)
 
         walk(self.blocks)
         for f in self.functions.values():
@@ -302,6 +361,8 @@ def _compute_signature(node) -> Tuple:
     if isinstance(node, Collective):
         return ("co", node.kind, node.var, node.axes, node.output,
                 node.bytes_override)
+    if isinstance(node, P2P):
+        return ("p2p", node.var, node.axis, node.bytes_override)
     if isinstance(node, JitCall):
         return ("jit", node.name, node.reads, node.writes, node.donated,
                 _compiled_cost_sig(node.compiled_cost))
@@ -323,6 +384,9 @@ def _compute_signature(node) -> Tuple:
                 tuple(node.weights) if node.weights else None,
                 _sig_list(node.predicate),
                 tuple(_sig_list(br) for br in node.branches))
+    if isinstance(node, PipelinedLoopBlock):
+        return ("pipe", node.label, node.microbatches,
+                tuple(_sig_list(stage) for stage in node.stages))
     if isinstance(node, FunctionBlock):
         return ("fn", node.name, _sig_list(node.body))
     raise TypeError(f"unsignable plan node {type(node)}")

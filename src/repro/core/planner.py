@@ -5,10 +5,13 @@ operator* choices (tsmm / mapmm / cpmm), and *resource* decisions, all
 evaluated through C(P, cc).  The TPU analogue optimizes a **sharding plan**
 for each (architecture x input shape x mesh):
 
-  * role of the mesh axes: tensor-parallel, expert-parallel, FSDP, or pure
-    extra data-parallelism,
+  * role of the mesh axes: tensor-parallel, expert-parallel, FSDP,
+    pipeline-parallel (the layer stack split into stages along an axis —
+    over ICI on a "depth" axis, or across DCN slices on the "pod" axis),
+    or pure extra data-parallelism,
   * remat (activation checkpointing) policy: none / selective / full,
-  * microbatch count (gradient accumulation),
+  * microbatch count (gradient accumulation — reinterpreted as the
+    pipeline's M for pipelined roles),
   * gradient-reduction dtype (compression),
   * collective/compute overlap.
 
@@ -31,7 +34,8 @@ from repro.core.cluster import ClusterConfig, dtype_bytes
 from repro.core.costmodel import (CacheStats, CostedProgram, PlanCostCache,
                                   estimate)
 from repro.core.plan import (Collective, Compute, CreateVar, DataGen, ForBlock,
-                             GenericBlock, IO, Program)
+                             GenericBlock, IO, P2P, PipelinedLoopBlock,
+                             Program)
 from repro.core.symbols import MemState, TensorStat
 
 # Fraction of collective time hidden under compute when a plan enables
@@ -39,6 +43,14 @@ from repro.core.symbols import MemState, TensorStat
 # ``cc.with_overlap``; the resource optimizer's collective floors discount
 # by the same constant, so a drift here cannot silently unsound the floors.
 OVERLAP_FRACTION = 0.7
+
+# The enumerated microbatch knob (train mode).  For pipelined roles the
+# knob is reinterpreted as the schedule's M; its ceiling bounds how far a
+# pipeline can amortize its (S-1) fill/drain bubbles, which is what the
+# resource optimizer's pipeline-aware floor divides by
+# (``cluster_floor_time``: time >= roofline/S * (1 + (S-1)/M)).
+MICRO_OPTS = (1, 2, 4, 8)
+MAX_MICROBATCHES = MICRO_OPTS[-1]
 
 
 # ---------------------------------------------------------------------------
@@ -54,6 +66,7 @@ class ShardingPlan:
     fsdp_axes: Tuple[str, ...] = ()        # ZeRO-3 param sharding
     ep_axes: Tuple[str, ...] = ()          # MoE expert sharding
     seq_axes: Tuple[str, ...] = ()         # sequence-parallel (long prefill)
+    pp_axes: Tuple[str, ...] = ()          # pipeline stages over this axis
     remat: str = "none"                    # none | selective | full
     microbatches: int = 1
     grad_reduce_dtype: str = "float32"
@@ -87,6 +100,8 @@ class ShardingPlan:
             bits.append(f"ep={'x'.join(self.ep_axes)}")
         if self.seq_axes:
             bits.append(f"seq={'x'.join(self.seq_axes)}")
+        if self.pp_axes:
+            bits.append(f"pp={'x'.join(self.pp_axes)}")
         bits.append(f"remat={self.remat}")
         if self.microbatches > 1:
             bits.append(f"ubatch={self.microbatches}")
@@ -124,6 +139,9 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     ep = plan.degree(cc, plan.ep_axes)
     sp = plan.eff_degree(cc, plan.seq_axes,
                          1 if mode == "decode" else shape.seq_len)
+    # Pipeline stages: the layer stack is partitioned into S bodies along
+    # the pp axis (train only — the schedule needs a microbatch stream).
+    pp_s = plan.degree(cc, plan.pp_axes) if mode == "train" else 1
     d, hd = arch.d_model, arch.head_dim_
     nh, nkv = max(arch.n_heads, 1), max(arch.n_kv_heads, 1)
     dt = arch.dtype
@@ -143,7 +161,10 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
 
     prog = Program(name=f"{arch.name}/{shape.name}/{plan.describe()}")
     pc = arch.param_counts()
-    prog.inputs["params"] = _ts((int(pc["total"]),), dt, shards=weight_shards)
+    # Pipeline stages hold only their own layers' weights resident — the
+    # per-device param bytes divide by S on top of the tp x fsdp sharding.
+    prog.inputs["params"] = _ts((int(pc["total"]),), dt,
+                                shards=weight_shards * pp_s)
     prog.inputs["batch_tokens"] = _ts((mb_batch, q_len), "int32",
                                       shards=act_sh, state=MemState.HOST)
 
@@ -348,19 +369,23 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     fwd = ForBlock(f"fwd layers x{arch.n_layers}", arch.n_layers,
                    body=layer_body("L_", False, main_kind))
     body_blocks.append(fwd)
+    shared_fwd = None
     if arch.hybrid is not None:
         n_app = arch.n_layers // arch.hybrid.attn_every
-        body_blocks.append(ForBlock(f"shared attn blocks x{n_app}", n_app,
-                                    body=layer_body("A_", False, "attn-shared")))
+        shared_fwd = ForBlock(f"shared attn blocks x{n_app}", n_app,
+                              body=layer_body("A_", False, "attn-shared"))
+        body_blocks.append(shared_fwd)
+    enc_block = None
     if arch.enc_dec is not None:
         # encoder runs once per step over frontend_seq frames
         enc_tokens = mb_batch * arch.enc_dec.encoder_seq
-        body_blocks.append(ForBlock(
+        enc_block = ForBlock(
             f"encoder layers x{arch.enc_dec.n_encoder_layers}",
             arch.enc_dec.n_encoder_layers,
             body=[Compute("matmul", ("enc_x", "enc_w"), f"enc_{i}",
                           exec_type="DIST", shard_axes=mm_axes)
-                  for i in range(2)]))
+                  for i in range(2)])
+        body_blocks.append(enc_block)
         prog.inputs["enc_x"] = _ts((enc_tokens, d), dt, act_sh)
         prog.inputs["enc_w"] = _ts((d, 4 * d + (3 if arch.gated_mlp else 2) * arch.d_ff),
                                    dt, weight_shards)
@@ -387,7 +412,8 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                                         body=layer_body("AB_", True, "attn-shared")))
 
         tail = GenericBlock("grad reduce + update")
-        grad_bytes = pc["total"] * dtype_bytes(plan.grad_reduce_dtype) / weight_shards
+        grad_bytes = (pc["total"] * dtype_bytes(plan.grad_reduce_dtype)
+                      / (weight_shards * pp_s))
         if arch.moe is not None and ep > 1:
             grad_bytes /= ep
         reduce_axes = tuple(a for a in plan.batch_axes if a not in plan.fsdp_axes)
@@ -401,8 +427,13 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         tail.children.append(Compute("adamw_update", ("params",), "params2",
                                      exec_type="DIST",
                                      shard_axes=plan.fsdp_axes + plan.tp_axes
-                                     + plan.batch_axes))
-        if micro > 1:
+                                     + plan.pp_axes + plan.batch_axes))
+        if pp_s > 1:
+            prog.blocks.append(_pipelined_stages(
+                arch, plan, pp_s, micro, stage, loss, enc_block, shared_fwd,
+                layer_body, main_kind, recompute,
+                act_payload=tokens * d * bpe / act_sh))
+        elif micro > 1:
             prog.blocks.append(ForBlock(f"microbatches x{micro}", micro,
                                         body=body_blocks))
         else:
@@ -421,6 +452,59 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                                             * bpe / (act_sh * tp)))
         prog.blocks.append(head)
     return prog
+
+
+def _pipelined_stages(arch: ArchConfig, plan: ShardingPlan, pp_s: int,
+                      micro: int, stage: GenericBlock, loss: GenericBlock,
+                      enc_block, shared_fwd, layer_body, main_kind: str,
+                      recompute: float, act_payload: float
+                      ) -> PipelinedLoopBlock:
+    """Partition the train step's layer stack into S pipeline-stage bodies.
+
+    Stage 0 owns batch staging + embedding (and the encoder, when one
+    exists); the last stage owns the loss head (and any shared-attention
+    blocks).  Every stage runs ``n_layers / S`` of the per-layer fwd + bwd
+    work (remainder layers land on the earliest stages) and hands its
+    boundary activations to the next stage — and, on the backward path,
+    the activation gradients to the previous stage — as :class:`P2P`
+    transfers over one link of the pp axis.  Identical interior stages
+    share one structural signature, so the sub-plan cache costs them once.
+    """
+    pp_axis = plan.pp_axes[0]
+    base_l, rem = divmod(arch.n_layers, pp_s)
+    stages: List[List] = []
+    for si in range(pp_s):
+        layers_s = base_l + (1 if si < rem else 0)
+        body: List = []
+        if si == 0:
+            body.append(stage)
+            if enc_block is not None:
+                body.append(enc_block)
+        body.append(ForBlock(f"fwd layers x{layers_s}", layers_s,
+                             body=layer_body("L_", False, main_kind)))
+        if si < pp_s - 1:
+            body.append(P2P("pp_fwd_act", pp_axis,
+                            bytes_override=act_payload))
+        else:
+            if shared_fwd is not None:
+                body.append(shared_fwd)
+            body.append(loss)
+        bwd_body = layer_body("B_", True, main_kind)
+        if recompute > 0:
+            extra = layer_body("R_", False, main_kind)
+            bwd_body = extra[: int(len(extra) * recompute)] + bwd_body
+        if si == pp_s - 1 and shared_fwd is not None:
+            n_app = arch.n_layers // arch.hybrid.attn_every
+            body.append(ForBlock(f"bwd shared attn x{n_app}", n_app,
+                                 body=layer_body("AB_", True, "attn-shared")))
+        body.append(ForBlock(f"bwd layers x{layers_s}", layers_s,
+                             body=bwd_body))
+        if si > 0:
+            body.append(P2P("pp_bwd_grad", pp_axis,
+                            bytes_override=act_payload))
+        stages.append(body)
+    return PipelinedLoopBlock(f"ubatch x{micro} over {pp_s} stages", micro,
+                              stages)
 
 
 # ---------------------------------------------------------------------------
@@ -449,18 +533,22 @@ def resident_components(arch: ArchConfig, shape: ShapeConfig,
     ep = plan.degree(cc, plan.ep_axes)
     sp = plan.eff_degree(cc, plan.seq_axes,
                          1 if shape.mode == "decode" else shape.seq_len)
+    # Pipeline stages are resident-state shards: a stage holds only its
+    # own n_layers/S slice of weights, gradients and optimizer state —
+    # the ~S-fold HBM drop that opens cells where no 2D role fits.
+    pp = plan.degree(cc, plan.pp_axes) if shape.mode == "train" else 1
     bpe = dtype_bytes(arch.dtype)
     wsh = max(tp * fsdp * (ep if arch.moe else 1), 1)
-    comp: Dict[str, float] = {"params": pc["total"] * bpe / wsh}
+    comp: Dict[str, float] = {"params": pc["total"] * bpe / (wsh * pp)}
     if shape.mode == "train":
         # adam m,v (fp32) + fp32 transients during the update, sharded like
         # params (+dp if fsdp); calibrated against compiled memory_analysis
         opt_shards = wsh * (dp if (fsdp > 1 or plan.zero1) else 1)
-        comp["opt_state"] = 4 * pc["total"] * 4 / max(opt_shards, wsh)
+        comp["opt_state"] = 4 * pc["total"] * 4 / (max(opt_shards, wsh) * pp)
         # gradients: resident fp32 accumulator regardless of microbatching
         # (grad_reduce_dtype only changes the wire payload, not the buffer;
         # calibrated against compiled memory_analysis)
-        comp["grads"] = pc["total"] * 4 / wsh
+        comp["grads"] = pc["total"] * 4 / (wsh * pp)
         # activations saved for backward, per token per layer:
         #   replicated residual-stream parts (~d) + head/ff-sharded parts
         d = arch.d_model
@@ -477,7 +565,17 @@ def resident_components(arch: ArchConfig, shape: ShapeConfig,
         per_tok = (fac[0] * d * bpe
                    + fac[1] * (hd_total + ff_eff) * bpe / max(tp, 1))
         tokens_dev = shape.tokens / max(dp * sp * plan.microbatches, 1)
-        comp["act_stash"] = tokens_dev * arch.n_layers * per_tok
+        if pp > 1:
+            # 1F1B-style schedule memory: a stage stashes activations for
+            # its own n_layers/S layers, but keeps min(M, S) microbatches
+            # in flight — for M >= S that is exactly the sequential
+            # microbatched stash (the stage's S-fold layer cut times the
+            # S in-flight microbatches cancel); weights/optimizer state
+            # above still drop S-fold.
+            comp["act_stash"] = (tokens_dev * (arch.n_layers / pp) * per_tok
+                                 * min(plan.microbatches, pp))
+        else:
+            comp["act_stash"] = tokens_dev * arch.n_layers * per_tok
         # chunked-CE head: [ce_chunk, vocab] fp32 (+bwd copy), tp-sharded
         comp["ce_head"] = 2 * 2048 * arch.vocab_size * 4 / max(tp, 1)
     else:
@@ -559,9 +657,10 @@ class SearchStats:
 
 
 def _knob_space(shape: ShapeConfig) -> Tuple[List[str], List[int], List[str]]:
-    """The non-role decision knobs: remat x microbatches x grad dtype."""
+    """The non-role decision knobs: remat x microbatches x grad dtype.
+    For pipelined roles the microbatch knob doubles as the schedule's M."""
     if shape.mode == "train":
-        return (["none", "selective", "full"], [1, 2, 4, 8],
+        return (["none", "selective", "full"], list(MICRO_OPTS),
                 ["float32", "bfloat16"])
     return (["none"], [1], ["float32"])
 
@@ -581,6 +680,13 @@ def _model_roles(arch: ArchConfig, shape: ShapeConfig,
     axes = cc.mesh_axes
     has_model = "model" in axes
     has_depth = "depth" in axes
+
+    def pp_ok(axis: str) -> bool:
+        # A pipeline role needs a microbatch stream (train), at least two
+        # stage positions on the axis, and enough layers to partition.
+        s = cc.axis_size(axis)
+        return shape.mode == "train" and s >= 2 and arch.n_layers >= s
+
     if has_depth:
         roles: List[Dict] = [
             dict(name="dp+tp2", tp=("model", "depth")),
@@ -594,6 +700,14 @@ def _model_roles(arch: ArchConfig, shape: ShapeConfig,
             roles.append(dict(name="dp+ep", ep=("model", "depth")))
         if shape.mode == "prefill":
             roles.append(dict(name="tp+seq", tp=("model",), seq=("depth",)))
+        if pp_ok("depth"):
+            roles.append(dict(name="pp+tp", pp=("depth",), tp=("model",)))
+            roles.append(dict(name="dp+pp", pp=("depth",),
+                              batch_extra=("model",)))
+        if "pod" in axes and pp_ok("pod"):
+            # pipeline-over-DCN across slices, 3D torus inside each stage
+            roles.append(dict(name="pp-dcn+tp2", pp=("pod",),
+                              tp=("model", "depth")))
         return roles
     roles = [dict(name="dp+tp", tp=("model",))]
     roles.append(dict(name="fsdp", fsdp=("model",)))
@@ -603,6 +717,15 @@ def _model_roles(arch: ArchConfig, shape: ShapeConfig,
         roles.append(dict(name="dp+ep+tp", ep=("model",), tp=("model",)))
     if shape.mode == "prefill":
         roles.append(dict(name="dp+seq", seq=("model",)))
+    if "pod" in axes and pp_ok("pod"):
+        # the headline family: pipeline-over-DCN across slices.  Stage
+        # boundaries pay one p2p activation hop per microbatch instead of
+        # the ring collective a pod-wide gradient reduce would phase over
+        # DCN, and per-stage resident state drops S-fold.
+        roles.append(dict(name="pp-dcn+tp", pp=("pod",), tp=("model",)))
+        if has_model:
+            roles.append(dict(name="pp-dcn+fsdp", pp=("pod",),
+                              fsdp=("model",)))
     if not has_model:
         roles = [r for r in roles if r["name"] == "dp+tp"]
     return roles
@@ -615,13 +738,18 @@ def _batch_base(cc: ClusterConfig) -> Tuple[str, ...]:
 def _role_plan(role: Dict, cc: ClusterConfig, remat: str, micro: int,
                gd: str) -> ShardingPlan:
     has_model = "model" in cc.mesh_axes
+    pp = tuple(role.get("pp", ()))
     return ShardingPlan(
         name=role["name"],
-        batch_axes=_batch_base(cc) + role.get("batch_extra", ()),
+        # a pipeline axis carries stages, never batch — strip it from the
+        # default (pod, data) batch base
+        batch_axes=tuple(a for a in _batch_base(cc) + role.get("batch_extra", ())
+                         if a not in pp),
         tp_axes=role.get("tp", ()) if has_model else (),
         fsdp_axes=role.get("fsdp", ()),
         ep_axes=role.get("ep", ()),
         seq_axes=role.get("seq", ()),
+        pp_axes=pp,
         remat=remat, microbatches=micro, grad_reduce_dtype=gd)
 
 
@@ -629,8 +757,23 @@ def _micro_valid(role: Dict, shape: ShapeConfig, cc: ClusterConfig,
                  micro: int) -> bool:
     if micro == 1:
         return True
-    base = _batch_base(cc) + role.get("batch_extra", ())
+    pp = role.get("pp", ())
+    base = tuple(a for a in _batch_base(cc) + role.get("batch_extra", ())
+                 if a not in pp)
     return shape.global_batch // (_deg(cc, base) * micro) >= 1
+
+
+def _role_base_micro(role: Dict, shape: ShapeConfig, cc: ClusterConfig,
+                     micro_opts: Sequence[int]) -> int:
+    """The microbatch count a role's stage-1 beam representative is costed
+    with.  Non-pipelined roles use 1 (the minimum-work knob); a pipelined
+    role's natural operating point is the *largest* valid M — at M=1 its
+    stages run back-to-back with zero overlap, which would unfairly sink
+    an eventually-winning pipeline in the role beam."""
+    if not role.get("pp"):
+        return 1
+    return max((m for m in micro_opts
+                if _micro_valid(role, shape, cc, m)), default=1)
 
 
 def enumerate_plans(arch: ArchConfig, shape: ShapeConfig,
@@ -683,6 +826,13 @@ def reference_plans(arch: ArchConfig, shape: ShapeConfig,
     collective wire volume — :class:`repro.core.costmodel.ProgramTotals`)
     lower-bound every plan in its role, and a minimum over roles
     lower-bounds the whole plan space.
+
+    Pipelined roles keep micro=1 here too: the pipelined loop's *work*
+    totals are microbatch-invariant (M transfers of payload/M, M loss
+    heads over batch/M, ...), so M=1 stays the minimum-work member — but
+    its *time* overlaps across stages, so the floor must not price the
+    totals as one sequential roofline.  ``cluster_floor_time`` handles
+    that with the pipeline-aware ``roofline / S * (1 + (S-1)/M)`` bound.
     """
     remats, _, gdtypes = _knob_space(shape)
     gd_min = min(gdtypes, key=dtype_bytes)
@@ -742,16 +892,47 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     return decisions
 
 
+def _family_beam(ranked: List, width: int, is_pp) -> List:
+    """The beam slice when pipelined roles share the space with
+    sequential ones: the global top slice widened by the pipelined
+    presence, UNION each family's own top ``width``.  The per-family
+    guarantees mean neither family can crowd the other out of its slots
+    no matter how the mixed ranking falls (a pipeline ranks on different
+    knobs — its M, not its remat — so a low stage rank says little about
+    either family's expanded best).  The widened global slice is extra
+    exploration on exactly the meshes where pipelining enlarged the
+    space: it admits entries past the calibrated width even when their
+    *family* rank exceeds it — measured to matter when one role's
+    microbatch variants flood the stage-2 ranking and the true winner
+    (e.g. dp-pure, which only wins after its stage-3 grad-dtype
+    expansion) sits just past both cuts.  With no pp entries this IS
+    ``ranked[:width]``: every pre-pipeline search is bit-identical."""
+    pp = [e for e in ranked if is_pp(e)]
+    if not pp:
+        return ranked[:width]
+    seq = [e for e in ranked if not is_pp(e)]
+    out = list(ranked[:width + min(len(pp), width)])
+    chosen = set(map(id, out))
+    for e in pp[:width] + seq[:width]:
+        if id(e) not in chosen:
+            chosen.add(id(e))
+            out.append(e)
+    return out
+
+
 def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
                  top_k: int, beam_width: int, cache: PlanCostCache,
                  stats: SearchStats) -> List[PlanDecision]:
     """Staged beam search over the sharding decision vector.
 
-    Stage 1 — axis roles, costed with neutral knobs (remat=none, micro=1,
-    fp32 grads).  A role whose *most frugal* completion (remat=full, max
-    microbatches) still exceeds the HBM budget is an infeasible prefix and
-    is dropped without expanding it — unless nothing fits, in which case
-    all roles stay so the caller sees the honest OOM ranking.
+    Stage 1 — axis roles, costed with neutral knobs (remat=none, fp32
+    grads, micro=1 — except pipelined roles, whose representative runs at
+    the largest valid M: a pipeline at M=1 is all bubble and would be
+    unfairly dropped from the beam).  A role whose *most frugal*
+    completion (remat=full, max microbatches) still exceeds the HBM budget
+    is an infeasible prefix and is dropped without expanding it — unless
+    nothing fits, in which case all roles stay so the caller sees the
+    honest OOM ranking.
 
     Stage 2 — remat x microbatch per surviving role.  For a fixed (role,
     micro) the cost model makes recompute strictly slower and strictly
@@ -769,9 +950,13 @@ def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     roles = _model_roles(arch, shape, cc)
     stage1: List[Tuple[Dict, PlanDecision]] = []
     kept: List[Tuple[Dict, PlanDecision]] = []
+    base_micros: Dict[int, int] = {}     # id(role) -> stage-1 micro used
     for role in roles:
+        base_micro = _role_base_micro(role, shape, cc, micro_opts)
+        base_micros[id(role)] = base_micro
         d = _cost_candidate(arch, shape,
-                            _role_plan(role, cc, remats[0], 1, gdtypes[0]),
+                            _role_plan(role, cc, remats[0], base_micro,
+                                       gdtypes[0]),
                             cc, cache, stats)
         stage1.append((role, d))
         frugal_micro = max((m for m in micro_opts
@@ -784,7 +969,12 @@ def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     if not kept:           # nothing can fit: keep every prefix, rank honestly
         kept = stage1
     kept.sort(key=lambda rd: _rank_key(rd[1]))
-    beam1 = kept[:beam_width]
+    # Pipelined roles are a new family riding alongside the sequential
+    # ones — the beam takes the top beam_width of EACH family (in rank
+    # order), so neither can crowd the other out of its slots.  With no
+    # pp roles in the space this is exactly kept[:beam_width]: every
+    # pre-pipeline search is bit-identical.
+    beam1 = _family_beam(kept, beam_width, lambda rd: bool(rd[0].get("pp")))
 
     # ---- stage 2: remat x microbatches ----------------------------------
     stage2: List[PlanDecision] = []
@@ -802,7 +992,7 @@ def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
                 if estimate_hbm(arch, shape, p, cc) > budget:
                     stats.pruned_infeasible += 1
                     continue
-                if remat == remats[0] and micro == 1:
+                if remat == remats[0] and micro == base_micros[id(role)]:
                     picked = base_d          # already costed in stage 1
                 else:
                     picked = _cost_candidate(arch, shape, p, cc, cache, stats)
@@ -816,13 +1006,13 @@ def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
         # representative per (role, micro) reproduces the exhaustive order.
         for role, micro in oom_pairs:
             p = _role_plan(role, cc, remats[0], micro, gdtypes[0])
-            if micro == 1:
+            if micro == base_micros[id(role)]:
                 d = next(d for r, d in beam1 if r is role)
             else:
                 d = _cost_candidate(arch, shape, p, cc, cache, stats)
             stage2.append(d)
     stage2.sort(key=_rank_key)
-    beam2 = stage2[:beam_width]
+    beam2 = _family_beam(stage2, beam_width, lambda d: bool(d.plan.pp_axes))
 
     # ---- stage 3: grad-reduce dtype (+ overlap, dominated) --------------
     final: List[PlanDecision] = []

@@ -43,7 +43,8 @@ from repro.core.cluster import (CHIPS, DEFAULT_CHECKPOINT_RESTORE_SECONDS,
                                 ChipSpec, ClusterConfig)
 from repro.core.costmodel import (VPU_FRACTION, CacheStats, PlanCostCache,
                                   ProgramTotals, estimate)
-from repro.core.planner import (OVERLAP_FRACTION, PlanDecision, SearchStats,
+from repro.core.planner import (MAX_MICROBATCHES, OVERLAP_FRACTION,
+                                PlanDecision, SearchStats,
                                 build_step_program, choose_plan,
                                 enumerate_plans, reference_plans)
 
@@ -94,18 +95,30 @@ def _make_cc(chip: ChipSpec, mesh_shape: Tuple[int, ...],
                          torus_links=tuple(torus_links))
 
 
-def torus_links_for(axes: Tuple[str, ...],
-                    chip: ChipSpec) -> Tuple[int, ...]:
-    """Per-axis ICI link counts for a candidate mesh layout: a 3-ICI-axis
-    layout on a chip whose fabric builds a 3D torus gives every ICI axis a
-    wrapped ring (2 links); everything else — 2D layouts, or any layout on
-    a 2D-torus chip — keeps the calibrated flat model (empty -> 1 link per
-    axis).  The chip gate lives here so no caller can accidentally price
-    wrapped rings on hardware without a third fabric dimension."""
+def torus_links_for(axes: Tuple[str, ...], chip: ChipSpec,
+                    mesh_shape: Tuple[int, ...]) -> Tuple[int, ...]:
+    """Per-axis ICI link counts for a candidate mesh layout.
+
+    A 3-ICI-axis layout on a chip whose fabric builds a 3D torus earns the
+    wrapped-ring rate (2 links) — but only on axes whose extent spans a
+    whole number of the chip's building-block cubes
+    (``ChipSpec.ici_cube_dim``; v5p slices compose 4x4x4 cubes).  A
+    sub-cube extent (e.g. the 2-wide axis of an 8x4x2 slice) has no
+    wraparound to close the ring: it is an open line, 1 link.  Everything
+    else — 2D layouts, or any layout on a 2D-torus chip — keeps the
+    calibrated flat model (empty -> 1 link per axis); so does a slice with
+    no full-cube axis at all, making full-cube cells (4x4x4, 12x4x4, ...)
+    bit-identical to the pre-fidelity behavior.  The chip gate lives here
+    so no caller can accidentally price wrapped rings on hardware without
+    a third fabric dimension."""
     ici_axes = sum(1 for a in axes if a != "pod")
-    if ici_axes >= 3 and chip.ici_torus_dims >= 3:
-        return tuple(1 if a == "pod" else 2 for a in axes)
-    return ()
+    if ici_axes < 3 or chip.ici_torus_dims < 3:
+        return ()
+    cube = max(int(chip.ici_cube_dim), 1)
+    links = tuple(
+        1 if (a == "pod" or n < 2 or n % cube) else 2
+        for a, n in zip(axes, mesh_shape))
+    return links if any(l == 2 for l in links) else ()
 
 
 def mesh_factorizations_3d(n: int, variants: int = 2
@@ -197,7 +210,7 @@ def mesh_candidates(chip: ChipSpec, num_chips: int,
             out.append(ClusterCandidate(
                 f"{_short(chip)}-{'x'.join(map(str, mesh))}-3d",
                 _make_cc(chip, mesh, axes, base,
-                         torus_links=torus_links_for(axes, chip))))
+                         torus_links=torus_links_for(axes, chip, mesh))))
     if not out:          # unreachable (model=1 always fits) — belt/braces
         out.append(ClusterCandidate(
             f"{_short(chip)}-{num_chips}",
@@ -214,8 +227,9 @@ def enumerate_clusters(chips: Optional[Sequence[Union[str, ChipSpec]]] = None,
     both ICI-linked superslices (when the chip's ICI domain allows) and
     DCN-linked multi-pod topologies.  Chips whose fabric builds a 3D torus
     (v5p: ``ici_torus_dims == 3``) contribute the near-cubic 3D layouts of
-    each ICI slice alongside the 2D ones — a whole new scenario family,
-    with per-axis link counts set for the wrapped rings."""
+    each ICI slice alongside the 2D ones — plus, for multi-slice counts, a
+    (pod x 3D inner torus) 4-axis family — with per-axis link counts set
+    by :func:`torus_links_for` (wrapped rings only on full-cube axes)."""
     chip_specs = [CHIPS[c] if isinstance(c, str) else c
                   for c in (chips if chips is not None else CHIPS)]
     out: List[ClusterCandidate] = []
@@ -232,7 +246,8 @@ def enumerate_clusters(chips: Optional[Sequence[Union[str, ChipSpec]]] = None,
                     out.append(ClusterCandidate(
                         f"{_short(chip)}-{'x'.join(map(str, mesh))}{tag}",
                         _make_cc(chip, mesh, axes, base,
-                                 torus_links=torus_links_for(axes, chip))))
+                                 torus_links=torus_links_for(axes, chip,
+                                                             mesh))))
             if p > 1:
                 # DCN multi-slice: "pod" axis crosses the data-center network
                 nv = 1 if fits_ici else mesh_variants
@@ -240,6 +255,19 @@ def enumerate_clusters(chips: Optional[Sequence[Union[str, ChipSpec]]] = None,
                     out.append(ClusterCandidate(
                         f"{_short(chip)}-{p}x{'x'.join(map(str, mesh))}-dcn",
                         _make_cc(chip, (p,) + mesh, ("pod",) + axes, base)))
+                if chip.ici_torus_dims >= 3:
+                    # (pod x 3D inner torus): a 4-axis mesh.  The role
+                    # assignment has handled 4 axes since the depth axis
+                    # landed; this emits the candidates — and it is where
+                    # pipeline-over-DCN meets wrapped-ring slices.
+                    for mesh, axes in mesh_factorizations_3d(pod, nv):
+                        full_mesh, full_axes = (p,) + mesh, ("pod",) + axes
+                        out.append(ClusterCandidate(
+                            f"{_short(chip)}-{p}x"
+                            f"{'x'.join(map(str, mesh))}-dcn-3d",
+                            _make_cc(chip, full_mesh, full_axes, base,
+                                     torus_links=torus_links_for(
+                                         full_axes, chip, full_mesh))))
     return out
 
 
@@ -283,9 +311,12 @@ def _plan_space_size(arch: ArchConfig, shape: ShapeConfig,
 @functools.lru_cache(maxsize=None)
 def _floor_totals(arch: ArchConfig, shape: ShapeConfig,
                   mesh_shape: Tuple[int, ...],
-                  mesh_axes: Tuple[str, ...]) -> Tuple[ProgramTotals, ...]:
+                  mesh_axes: Tuple[str, ...]
+                  ) -> Tuple[Tuple[ProgramTotals, int], ...]:
     """Estimator-charged work totals of each role's minimum-work reference
-    plan (:func:`repro.core.planner.reference_plans`) on a mesh geometry.
+    plan (:func:`repro.core.planner.reference_plans`) on a mesh geometry,
+    paired with the role's pipeline-stage count S (1 for every
+    non-pipelined role).
 
     Totals (per-device flops/bytes after sharding, collective wire volume
     per link class) never consult the chip, so one entry serves every chip
@@ -293,8 +324,9 @@ def _floor_totals(arch: ArchConfig, shape: ShapeConfig,
     candidate grid and across optimize calls."""
     cc = ClusterConfig(mesh_shape=mesh_shape, mesh_axes=mesh_axes)
     return tuple(
-        estimate(build_step_program(arch, shape, plan, cc), cc,
-                 cache=_FLOOR_CACHE).totals
+        (estimate(build_step_program(arch, shape, plan, cc), cc,
+                  cache=_FLOOR_CACHE).totals,
+         plan.degree(cc, plan.pp_axes))
         for plan in reference_plans(arch, shape, cc))
 
 
@@ -323,19 +355,42 @@ def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
     the pre-torus floor bit-identical.  The minimum over role classes then
     bounds the whole plan space — including memory-bound decode cells,
     whose unavoidable tensor-parallel collectives now tighten the floor
-    instead of being ignored."""
+    instead of being ignored.
+
+    **Pipelined roles** overlap stage times, so their reference totals —
+    which sum work over every stage, as the estimator's sequential-weight
+    aggregation must — would overstate a pipelined plan's time if priced
+    as one roofline.  For a role with S stages the schedule satisfies
+
+        T  =  Σ_s T_s,first + (M-1) · max_s T_s,warm
+           >= R/M + (M-1)/M · R/S  =  (R/S) · (1 + (S-1)/M)
+
+    where R is the roofline of the role's (microbatch-invariant) totals:
+    a microbatch's stage times sum to at least its roofline R/M, and the
+    slowest of S stages is at least 1/S of their sum.  The bound is
+    decreasing in M, so evaluating it at the knob ceiling
+    ``MAX_MICROBATCHES`` lower-bounds every enumerable M.  The role's
+    nonnegative p2p/collective time is dropped (a floor may only err
+    low), so the pipeline floor can only *drop* below the sequential
+    roofline where pipelining genuinely helps — verified by full plan
+    enumeration in tests/test_pipeline.py."""
     util = max(cc.matmul_util, cc.small_matmul_util)
     vpu_peak = cc.chip.peak("float32") * VPU_FRACTION
     ici_bw_best = cc.ici_bw_eff * cc.max_ici_links
     best = float("inf")
-    for t in _floor_totals(arch, shape, cc.mesh_shape, cc.mesh_axes):
+    for t, pp_s in _floor_totals(arch, shape, cc.mesh_shape, cc.mesh_axes):
         t_flops = sum(f / (cc.chip.peak(dt) * util)
                       for dt, f in t.mxu_flops.items())
         t_flops += t.vpu_flops / vpu_peak
         t_mem = t.hbm_bytes / cc.hbm_bw_eff
-        t_coll = (t.ici_bytes / ici_bw_best
-                  + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - OVERLAP_FRACTION)
-        best = min(best, max(t_flops, t_mem) + t_coll)
+        if pp_s > 1:
+            cand = (max(t_flops, t_mem) / pp_s
+                    * (1.0 + (pp_s - 1) / MAX_MICROBATCHES))
+        else:
+            t_coll = (t.ici_bytes / ici_bw_best
+                      + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - OVERLAP_FRACTION)
+            cand = max(t_flops, t_mem) + t_coll
+        best = min(best, cand)
     return best
 
 
@@ -354,6 +409,14 @@ def checkpoint_bytes(arch: ArchConfig) -> float:
     return arch.param_counts()["total"] * CHECKPOINT_BYTES_PER_PARAM
 
 
+def _checkpoint_path_seconds(cc: ClusterConfig, arch: ArchConfig) -> float:
+    """Seconds to move one checkpoint across the disk <-> PCIe path, each
+    host handling its own shard — the shared derivation behind both the
+    restore and the write term of job pricing (the path is symmetric)."""
+    per_dev = checkpoint_bytes(arch) / max(cc.num_chips, 1)
+    return per_dev / cc.chip.disk_bw + per_dev / cc.chip.pcie_bw
+
+
 def checkpoint_restore_seconds(cc: ClusterConfig,
                                arch: Optional[ArchConfig] = None) -> float:
     """Seconds to read + reshard one checkpoint onto the cluster.
@@ -369,8 +432,19 @@ def checkpoint_restore_seconds(cc: ClusterConfig,
         return float(cc.checkpoint_restore_seconds)
     if arch is None:
         return DEFAULT_CHECKPOINT_RESTORE_SECONDS
-    per_dev = checkpoint_bytes(arch) / max(cc.num_chips, 1)
-    return per_dev / cc.chip.disk_bw + per_dev / cc.chip.pcie_bw
+    return _checkpoint_path_seconds(cc, arch)
+
+
+def checkpoint_write_seconds(cc: ClusterConfig,
+                             arch: Optional[ArchConfig] = None) -> float:
+    """Seconds the job stalls to write one checkpoint (device -> host ->
+    disk, each host writing its own shard).  Symmetric to
+    :func:`checkpoint_restore_seconds`'s derivation; with no architecture
+    in hand there are no bytes to price, so the stall is 0 (the pre-PR-5
+    behavior for anonymous callers)."""
+    if arch is None:
+        return 0.0
+    return _checkpoint_path_seconds(cc, arch)
 
 
 def job_seconds(cc: ClusterConfig, step_time: float,
@@ -378,26 +452,40 @@ def job_seconds(cc: ClusterConfig, step_time: float,
                 arch: Optional[ArchConfig] = None) -> float:
     """Expected wall-clock seconds to complete ``steps_per_job`` steps.
 
-    ``startup + compute + E[preemptions] · (restart + lost work)`` with
+    The base time is ``startup + compute + checkpoint-write stalls``
+    (one :func:`checkpoint_write_seconds` stall every
+    ``checkpoint_interval_steps``).  Preemptions arrive at a rate
+    proportional to *wall* time — a job inflated by restarts is exposed
+    to further preemptions during those restarts — so the expectation is
+    the fixpoint ``wall = base + λ·wall·restart`` with
+    ``λ = preemption_rate_per_chip_hour · num_chips / 3600`` (per wall
+    second) and ``restart = startup + checkpoint restore
+    (:func:`checkpoint_restore_seconds`, per-arch bytes over disk/PCIe
+    when ``arch`` is given) + half a checkpoint interval of recomputed
+    steps``.  The closed form of the geometric restart series is
 
-      * compute          = ``steps_per_job · step_time``,
-      * E[preemptions]   = ``preemption_rate_per_chip_hour · num_chips ·
-                           compute_hours`` (first-order: rate applied to
-                           the compute time, not the inflated wall time),
-      * each preemption  = startup + checkpoint restore
-        (:func:`checkpoint_restore_seconds` — per-arch bytes over
-        disk/PCIe when ``arch`` is given) + half a checkpoint interval of
-        recomputed steps.
+        wall = base / (1 - λ · restart),
 
-    Strictly increasing in ``step_time`` for a fixed cluster — which is
-    what lets the job-cost objective prune clusters by their step-time
+    diverging to ``inf`` when ``λ · restart >= 1`` (each restart breeds
+    at least one more preemption — the job never finishes; such configs
+    rank after every finite one).
+
+    Strictly increasing in ``step_time`` for a fixed cluster — base and
+    restart both grow with it, so the inflation factor does too — which
+    is what lets the job-cost objective prune clusters by their step-time
     floor (:func:`cluster_floor_time`) without losing soundness."""
-    compute = step_time * max(int(steps_per_job), 1)
+    steps = max(int(steps_per_job), 1)
+    compute = step_time * steps
+    n_checkpoints = steps // max(int(cc.checkpoint_interval_steps), 1)
+    base = (cc.job_startup_seconds + compute
+            + n_checkpoints * checkpoint_write_seconds(cc, arch))
     restart = (cc.job_startup_seconds + checkpoint_restore_seconds(cc, arch)
                + 0.5 * cc.checkpoint_interval_steps * step_time)
-    expected_preemptions = (cc.preemption_rate_per_chip_hour * cc.num_chips
-                            * compute / 3600.0)
-    return cc.job_startup_seconds + compute + expected_preemptions * restart
+    lam = cc.preemption_rate_per_chip_hour * cc.num_chips / 3600.0
+    denom = 1.0 - lam * restart
+    if denom <= 0.0:
+        return float("inf")
+    return base / denom
 
 
 def job_dollars(cc: ClusterConfig, step_time: float,

@@ -30,7 +30,7 @@ from repro.core.costmodel import CacheStats, PlanCostCache
 from repro.core.planner import PlanDecision, SearchStats, choose_plan
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
                                  ResourceDecision, ResourceSearchStats,
-                                 optimize_resources)
+                                 optimize_resources, torus_links_for)
 
 # Named cluster shorthands accepted anywhere a cluster is given (pure
 # dataclass constants — building them never touches jax device state).
@@ -44,6 +44,21 @@ CLUSTERS: Dict[str, ClusterConfig] = {
     # One v5p pod slice laid out as its native 3D torus: three ICI axes
     # ("data", "model", "depth"), wrapped rings with 2 links per axis.
     "v5p-3d": torus_3d_config((4, 4, 4)),
+    # Four v5p slices joined over DCN — the pipeline-over-DCN scenario:
+    # the "pod" axis can carry pipeline stages whose boundaries pay one
+    # p2p activation hop per microbatch instead of pod-phased collectives,
+    # and per-stage resident state drops S-fold (which is what lets
+    # frontier-dense training fit here at all).
+    "v5p-dcn": ClusterConfig(chip=TPU_V5P, mesh_shape=(4, 8, 8),
+                             mesh_axes=("pod", "data", "model")),
+    # The 4-axis family: pod over a full 3D inner torus (wrapped rings on
+    # every full-cube inner axis, derived by the same rule the candidate
+    # enumeration uses).
+    "v5p-dcn-3d": ClusterConfig(
+        chip=TPU_V5P, mesh_shape=(4, 4, 4, 4),
+        mesh_axes=("pod", "data", "model", "depth"),
+        torus_links=torus_links_for(("pod", "data", "model", "depth"),
+                                    TPU_V5P, (4, 4, 4, 4))),
 }
 
 

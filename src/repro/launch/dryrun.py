@@ -256,8 +256,10 @@ def _add_components(record: Dict[str, Any], path: str,
     cc = multi_pod_config() if multi else single_pod_config()
     mesh = make_production_mesh(multi_pod=multi)
     pf = dict(record["plan_fields"])
-    for k in ("batch_axes", "tp_axes", "fsdp_axes", "ep_axes", "seq_axes"):
-        pf[k] = tuple(pf[k])
+    for k in ("batch_axes", "tp_axes", "fsdp_axes", "ep_axes", "seq_axes",
+              "pp_axes"):
+        if k in pf:
+            pf[k] = tuple(pf[k])
     plan = ShardingPlan(**pf)
     t0 = time.perf_counter()
     try:
@@ -304,7 +306,8 @@ def main() -> None:
     override = None
     if args.plan:
         override = json.loads(args.plan)
-        for k in ("batch_axes", "tp_axes", "fsdp_axes", "ep_axes", "seq_axes"):
+        for k in ("batch_axes", "tp_axes", "fsdp_axes", "ep_axes", "seq_axes",
+                  "pp_axes"):
             if k in override:
                 override[k] = tuple(override[k])
 

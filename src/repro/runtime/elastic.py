@@ -60,7 +60,8 @@ def replan(arch: ArchConfig, shape: ShapeConfig, *,
         # identically (torus_links_for gates on the chip's fabric).
         new_cc = old_cc.with_mesh(
             new_mesh_shape, axes,
-            torus_links=torus_links_for(tuple(axes), old_cc.chip))
+            torus_links=torus_links_for(tuple(axes), old_cc.chip,
+                                        tuple(new_mesh_shape)))
         decision = choose_plan(arch, shape, new_cc, top_k=1, cache=cache)[0]
     elif available_chips is not None:
         cands = mesh_candidates(old_cc.chip, available_chips, base=old_cc)

@@ -18,16 +18,23 @@ if _SRC not in sys.path:
 
 GOLDEN_PATH = os.path.join(_HERE, "sweep_golden.json")
 
-# 3 archs x 2 shapes x 5 clusters (two chip generations and both torus
-# dimensionalities among them) = 30 cells — small enough to re-cost in
-# seconds, broad enough that any change to op formulas, collective models,
-# HBM accounting, topology link counts, or plan enumeration shows up as a
-# diff.  ``v5p-3d`` is the 3D-torus family (4x4x4, 2 links/axis); the 2D
-# cells predate it and their costs must never move when topology-only
-# changes land (tests/test_golden_sweep.py pins them to a frozen baseline).
-GOLDEN_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b")
+# 4 archs x 2 shapes x 6 clusters (two chip generations, both torus
+# dimensionalities, and a DCN multi-slice among them) = 48 cells — small
+# enough to re-cost in seconds, broad enough that any change to op
+# formulas, collective models, HBM accounting, topology link counts, or
+# plan enumeration shows up as a diff.  ``v5p-3d`` is the 3D-torus family
+# (4x4x4, 2 links/axis); ``v5p-dcn`` (4 slices over DCN) and
+# ``qwen1.5-110b`` are the pipeline-parallelism family — the frontier-
+# dense train cell only fits (and wins) with pp stages over the pod axis.
+# The 2D cells predate the torus work and their costs must never move
+# when topology- or pipeline-only changes land; likewise every
+# pre-pipeline cell is pinned to a frozen baseline
+# (tests/test_golden_sweep.py).
+GOLDEN_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b",
+                "qwen1.5-110b")
 GOLDEN_SHAPES = ("train_4k", "decode_32k")
-GOLDEN_CLUSTERS = ("pod", "2pod", "v5p-pod", "v6e-pod", "v5p-3d")
+GOLDEN_CLUSTERS = ("pod", "2pod", "v5p-pod", "v6e-pod", "v5p-3d",
+                   "v5p-dcn")
 
 
 def compute_cells():

@@ -58,6 +58,48 @@ PRE_TORUS_2D_STEP_TIMES = {
 }
 
 
+# Frozen pre-pipeline (PR-4) step times of every golden cell that existed
+# before pipeline parallelism became a costed construct — the 24 2D cells
+# above plus the six v5p-3d cells.  Teaching the stack pipelined loops
+# (pp roles, P2P pricing, the PipelinedLoopBlock schedule) must be purely
+# additive on these: every pre-pipeline winner keeps its exact cost.  The
+# new pipeline cells (arch qwen1.5-110b, cluster v5p-dcn) live only in
+# sweep_golden.json and MAY move with intentional cost-model changes;
+# these may not.
+PRE_PIPELINE_STEP_TIMES = dict(PRE_TORUS_2D_STEP_TIMES)
+PRE_PIPELINE_STEP_TIMES.update({
+    "gemma3-12b|decode_32k|v5p-3d": 0.011174433533523029,
+    "gemma3-12b|train_4k|v5p-3d": 4.433797577840346,
+    "mamba2-1.3b|decode_32k|v5p-3d": 6.465244810658441e-05,
+    "mamba2-1.3b|train_4k|v5p-3d": 0.4083821445427445,
+    "qwen1.5-0.5b|decode_32k|v5p-3d": 0.002752198992027129,
+    "qwen1.5-0.5b|train_4k|v5p-3d": 0.159472255073319,
+})
+
+
+def test_pre_pipeline_cells_unchanged_by_pipeline_parallelism():
+    """The checked-in golden file's pre-pipeline cells must equal the
+    frozen PR-4 baseline bit for bit — pipelined loops are additive — and
+    the grid must actually contain a *winning* pipelined cell (the
+    frontier-dense train cell that only fits with stages over DCN)."""
+    with open(_regen.GOLDEN_PATH) as f:
+        golden = json.load(f)
+    drift = []
+    for key, want in PRE_PIPELINE_STEP_TIMES.items():
+        got = golden.get(key)
+        if got is None:
+            drift.append(f"{key}: cell missing from golden")
+        elif got["step_time_s"] != want:
+            drift.append(f"{key}: {want!r} -> {got['step_time_s']!r}")
+    assert not drift, (
+        "pre-pipeline golden cells moved — the pipeline-parallelism "
+        "change leaked into existing plans:\n  " + "\n  ".join(drift))
+    pipelined = [k for k, v in golden.items() if "pp=" in v["plan"]]
+    assert pipelined, "golden grid has no pipelined winner"
+    assert any(golden[k]["feasible"] and "dcn" in k for k in pipelined), \
+        "no feasible pipelined winner on a DCN multi-slice cell"
+
+
 def test_2d_cells_unchanged_by_torus_topology():
     """The checked-in golden file's 2D cells must equal the frozen
     pre-torus baseline bit for bit — the 3D axis is additive."""
@@ -82,7 +124,7 @@ def test_sweep_grid_matches_golden():
     with open(_regen.GOLDEN_PATH) as f:
         golden = json.load(f)
     got = _regen.compute_cells()
-    assert len(golden) >= 30
+    assert len(golden) >= 48
     assert set(got) == set(golden), (
         "grid keys drifted — regenerate the golden file if intentional")
     drift = []

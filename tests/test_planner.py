@@ -92,7 +92,12 @@ def test_microbatching_reduces_activation_memory():
 def test_multi_pod_adds_pod_to_batch_axes():
     cc = multi_pod_config()
     plans = enumerate_plans(get_config("qwen1.5-4b"), SHAPES["train_4k"], cc)
-    assert all("pod" in p.batch_axes for p in plans)
+    # the pod axis always carries work: extra data-parallelism by default,
+    # or pipeline stages when the plan pipelines over DCN — never both
+    assert all(("pod" in p.batch_axes) != ("pod" in p.pp_axes)
+               for p in plans)
+    assert any("pod" in p.pp_axes for p in plans)      # pp-over-DCN exists
+    assert all("pod" in p.batch_axes for p in plans if not p.pp_axes)
 
 
 def test_decode_plan_prefers_tp_for_big_models():

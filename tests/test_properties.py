@@ -9,8 +9,9 @@ hypothesis = pytest.importorskip(
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (Collective, Compute, ForBlock, GenericBlock, IfBlock,
-                        IO, ParForBlock, PlanCostCache, Program, WhileBlock,
-                        estimate, single_chip_config, single_pod_config,
+                        IO, P2P, ParForBlock, PipelinedLoopBlock,
+                        PlanCostCache, Program, WhileBlock, estimate,
+                        single_chip_config, single_pod_config,
                         torus_3d_config)
 from repro.core.linalg_ops import collective_cost, profile
 from repro.core.symbols import MemState, TensorStat
@@ -126,6 +127,10 @@ def _leaf_nodes():
                   kind=st.sampled_from(["all_reduce", "all_gather",
                                         "reduce_scatter"]),
                   var=x, axes=_shard_axes),
+        # pipeline stage-boundary transfers: one link of the axis fabric,
+        # no-ops on size-1 axes (2D meshes see a degenerate "depth")
+        st.builds(P2P, var=x,
+                  axis=st.sampled_from(["data", "model", "depth"])),
         st.builds(IO, op=st.just("read"), var=x,
                   src=st.sampled_from([MemState.HOST, MemState.DISK]),
                   dst=st.just(MemState.HBM)),
@@ -151,6 +156,20 @@ def _block_nodes(children):
     )
 
 
+def _pp_block(children):
+    """Software-pipelined loops — kept OUT of :func:`_block_nodes`: the
+    wire-floor and roofline-bound properties below hold for *sequential*
+    control flow (a pipeline hides time across stages without discounting
+    the work totals; its floor uses the /S schedule bound instead, see
+    ``cluster_floor_time``).  The cache-exactness properties mix them in
+    via ``_pp_programs``."""
+    return st.builds(PipelinedLoopBlock, label=st.just("pp"),
+                     microbatches=st.integers(1, 8),
+                     stages=st.lists(st.lists(children, min_size=1,
+                                              max_size=3),
+                                     min_size=1, max_size=3))
+
+
 _programs = st.builds(
     Program, name=st.just("rnd"),
     blocks=st.lists(_block_nodes(st.one_of(_leaf_nodes(),
@@ -160,9 +179,22 @@ _programs = st.builds(
         {name: _tensor_stats for name in _INPUT_NAMES}),
 )
 
+# Same shape, but pipelined loops allowed anywhere a block may appear
+# (including nested inside sequential blocks) — the memoization layer must
+# stay bit-exact on them like on everything else.
+_pp_programs = st.builds(
+    Program, name=st.just("rnd-pp"),
+    blocks=st.lists(st.one_of(
+        _block_nodes(st.one_of(_leaf_nodes(), _pp_block(_leaf_nodes()))),
+        _pp_block(st.one_of(_leaf_nodes(), _block_nodes(_leaf_nodes())))),
+        min_size=1, max_size=4),
+    inputs=st.fixed_dictionaries(
+        {name: _tensor_stats for name in _INPUT_NAMES}),
+)
+
 
 @settings(max_examples=40, deadline=None)
-@given(prog=_programs)
+@given(prog=_pp_programs)
 def test_cached_costing_bit_exact_on_random_programs(prog):
     for cc in (POD, TORUS):
         base = estimate(prog, cc)
@@ -182,7 +214,7 @@ def test_cached_costing_bit_exact_on_random_programs(prog):
 
 
 @settings(max_examples=15, deadline=None)
-@given(progs=st.lists(_programs, min_size=2, max_size=4))
+@given(progs=st.lists(_pp_programs, min_size=2, max_size=4))
 def test_shared_cache_never_leaks_across_random_programs(progs):
     """One cache serving many random programs must stay exact for each."""
     cache = PlanCostCache()
@@ -236,7 +268,7 @@ def test_totals_roofline_bounds_costed_compute_time(prog):
 
 
 @settings(max_examples=40, deadline=None)
-@given(prog=_programs)
+@given(prog=_pp_programs)
 def test_totals_replay_bit_exact_on_random_programs(prog):
     """Cached replay must reproduce ProgramTotals exactly — the floor
     would silently drift otherwise.  One shared cache serves the 2D and
@@ -248,6 +280,81 @@ def test_totals_replay_bit_exact_on_random_programs(prog):
         cold = estimate(prog, cc, cache=cache).totals
         warm = estimate(prog, cc, cache=cache).totals
         assert base.as_tuple() == cold.as_tuple() == warm.as_tuple()
+
+
+# ------------------------------------------------------------------------
+# Pipelined loops: schedule bounds and sequential degeneracy on random
+# stage bodies (the ISSUE-5 acceptance properties).
+# ------------------------------------------------------------------------
+
+_stage_bodies = st.lists(st.lists(_leaf_nodes(), min_size=1, max_size=3),
+                         min_size=1, max_size=4)
+
+
+@settings(max_examples=40, deadline=None)
+@given(stages=_stage_bodies, m=st.integers(1, 8))
+def test_pipelined_cost_bounded_by_steady_state_and_sequential(stages, m):
+    """For ANY stage bodies: seq/S <= pipelined <= sequential.  The upper
+    bound is the unpipelined M x body loop (pipelining only overlaps);
+    the lower bound is perfect S-way overlap of every iteration (the
+    steady state can never beat the slowest stage, and S stages can hide
+    at most S-1 of each other's time).  Work totals must be *exactly*
+    sequential — overlap hides time, never work."""
+    s = len(stages)
+    inputs = {n: TensorStat((256, 256), state=MemState.HOST)
+              for n in _INPUT_NAMES}
+    pipe = Program("p", blocks=[PipelinedLoopBlock("pp", m, stages=stages)],
+                   inputs=dict(inputs))
+    seq = Program("s", blocks=[ForBlock("pp", m,
+                                        body=[n for b in stages for n in b])],
+                  inputs=dict(inputs))
+    for cc in (POD, TORUS):
+        cp, cs = estimate(pipe, cc), estimate(seq, cc)
+        assert cp.total <= cs.total * (1 + 1e-12)
+        assert cp.total >= cs.total / s * (1 - 1e-12)
+        assert cp.totals.as_tuple() == cs.totals.as_tuple()
+
+
+@settings(max_examples=40, deadline=None)
+@given(body=st.lists(_leaf_nodes(), min_size=1, max_size=4),
+       m=st.integers(1, 8))
+def test_pipelined_s1_degenerates_to_for_loop_bit_exact(body, m):
+    """An S=1 'pipeline' IS the sequential microbatch loop: identical
+    total, breakdown, peak HBM and totals, bit for bit."""
+    inputs = {n: TensorStat((256, 256), state=MemState.HOST)
+              for n in _INPUT_NAMES}
+    pipe = Program("p", blocks=[PipelinedLoopBlock("mb", m, stages=[body])],
+                   inputs=dict(inputs))
+    seq = Program("s", blocks=[ForBlock("mb", m, body=list(body))],
+                  inputs=dict(inputs))
+    for cc in (POD, TORUS):
+        cp, cs = estimate(pipe, cc), estimate(seq, cc)
+        assert cp.total == cs.total
+        for field in ("io", "compute", "collective", "latency"):
+            assert getattr(cp.breakdown, field) == getattr(cs.breakdown,
+                                                           field), field
+        assert cp.peak_hbm_per_device == cs.peak_hbm_per_device
+        assert cp.totals.as_tuple() == cs.totals.as_tuple()
+
+
+@settings(max_examples=30, deadline=None)
+@given(stages=_stage_bodies, m=st.integers(1, 8))
+def test_pipelined_cache_replay_bit_exact(stages, m):
+    """Cold record and warm replay of pipelined programs through a shared
+    cache reproduce the uncached walk exactly (cost, totals, peak HBM)."""
+    inputs = {n: TensorStat((256, 256), state=MemState.HOST)
+              for n in _INPUT_NAMES}
+    prog = Program("p", blocks=[PipelinedLoopBlock("pp", m, stages=stages)],
+                   inputs=inputs)
+    cache = PlanCostCache()
+    for cc in (POD, TORUS):
+        base = estimate(prog, cc)
+        cold = estimate(prog, cc, cache=cache)
+        warm = estimate(prog, cc, cache=cache)
+        for got in (cold, warm):
+            assert got.total == base.total
+            assert got.totals.as_tuple() == base.totals.as_tuple()
+            assert got.peak_hbm_per_device == base.peak_hbm_per_device
 
 
 @settings(max_examples=30, deadline=None)

@@ -174,9 +174,34 @@ V5P_3D = [c for c in V5P_CLUSTERS if c.cid.endswith("-3d")]
 def test_enumerate_clusters_emits_3d_family_for_v5p_only():
     assert len(V5P_3D) >= 2
     for cand in V5P_3D:
-        assert len(cand.cc.mesh_shape) == 3
-        assert cand.cc.mesh_axes == ("data", "model", "depth")
-        assert cand.cc.torus_links == (2, 2, 2)
+        if "-dcn-" in cand.cid:
+            # the (pod x 3D inner torus) 4-axis family
+            assert len(cand.cc.mesh_shape) == 4
+            assert cand.cc.mesh_axes == ("pod", "data", "model", "depth")
+        else:
+            assert len(cand.cc.mesh_shape) == 3
+            assert cand.cc.mesh_axes == ("data", "model", "depth")
+        # wraparound fidelity: an axis only closes its ring (2 links) when
+        # it spans whole 4-chip building cubes; sub-cube axes are open
+        # lines, and the DCN pod axis never wraps
+        want = tuple(
+            1 if (a == "pod" or n < 2 or n % TPU_V5P.ici_cube_dim) else 2
+            for a, n in zip(cand.cc.mesh_axes, cand.cc.mesh_shape))
+        assert cand.cc.torus_links == want, cand.cid
+    assert any(c.cc.torus_links and 1 in c.cc.torus_links[1:]
+               for c in V5P_3D), "no open-line (sub-cube) axis in the grid"
+    # and concrete pinned cases, independent of the implementation's rule
+    from repro.core.resource import torus_links_for
+    dmz = ("data", "model", "depth")
+    assert torus_links_for(dmz, TPU_V5P, (4, 4, 4)) == (2, 2, 2)
+    assert torus_links_for(dmz, TPU_V5P, (12, 4, 4)) == (2, 2, 2)
+    assert torus_links_for(dmz, TPU_V5P, (8, 4, 2)) == (2, 2, 1)
+    assert torus_links_for(dmz, TPU_V5P, (16, 2, 2)) == (2, 1, 1)
+    assert torus_links_for(dmz, TPU_V5P, (6, 3, 2)) == ()   # nothing wraps
+    assert torus_links_for(("pod",) + dmz, TPU_V5P,
+                           (2, 4, 4, 4)) == (1, 2, 2, 2)
+    assert torus_links_for(dmz, TPU_V5E, (4, 4, 4)) == ()   # 2D-torus chip
+    assert torus_links_for(("data", "model"), TPU_V5P, (8, 8)) == ()
     flat_chips = enumerate_clusters(chips=["tpu_v5e", "tpu_v6e"],
                                     pod_counts=(1, 2))
     assert not any(c.cid.endswith("-3d") for c in flat_chips)
