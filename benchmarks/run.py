@@ -24,6 +24,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           pipeline-parallelism (``resource_opt.pipeline``:
                           a feasible pipelined winner on a DCN multi-slice
                           train cell, beam==exhaustive) gates
+  * bench_serving       — the serving co-search gate
+                          (``resource_opt.serving``): beam==exhaustive over
+                          (cluster x slots x plan) serving schedules, >=3x
+                          fewer evaluations, and at least one cell won by a
+                          disaggregated prefill/decode pool pair
   * bench_roofline      — (beyond paper) roofline terms per dry-run cell
 
 ``--quick`` shrinks every module to tiny configs (CI smoke tier); any
@@ -54,13 +59,14 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_costing_speed,
                             bench_plan_costing, bench_resource_opt,
-                            bench_roofline, bench_scenarios)
+                            bench_roofline, bench_scenarios, bench_serving)
     mods = [
         ("scenarios", bench_scenarios),
         ("plan_costing", bench_plan_costing),
         ("accuracy", bench_accuracy),
         ("costing_speed", bench_costing_speed),
         ("resource_opt", bench_resource_opt),
+        ("serving", bench_serving),
         ("roofline", bench_roofline),
     ]
     if args.only:

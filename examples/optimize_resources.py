@@ -14,6 +14,13 @@ ChipSpec.cost_per_chip_hour), cheapest *job* ($/job with startup,
 per-arch checkpoint-restore and expected-preemption overheads amortized
 over --steps-per-job steps), or cheapest config meeting a step-time SLO.
 
+``--shape`` also accepts a *serving workload* (chat_2k, rag_32k): the
+optimizer then co-searches (pool layout x slot count x per-pool plan)
+serving schedules under their traffic model — including disaggregated
+prefill/decode pool pairs with the KV handoff priced on the DCN hop —
+under ``--objective ttft_p99`` (cheapest fleet meeting the p99 TTFT SLO)
+or ``tokens_per_dollar``.
+
 Run:
   PYTHONPATH=src python examples/optimize_resources.py
   PYTHONPATH=src python examples/optimize_resources.py \
@@ -23,6 +30,8 @@ Run:
       --steps-per-job 50000
   PYTHONPATH=src python examples/optimize_resources.py \
       --arch qwen1.5-0.5b --shape decode_32k --objective slo --slo-ms 50
+  PYTHONPATH=src python examples/optimize_resources.py \
+      --arch gemma3-12b --shape chat_2k --objective ttft_p99
 """
 import argparse
 import time
@@ -31,16 +40,24 @@ from repro.configs import ARCH_IDS, SHAPES, get_config
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, OBJECTIVES,
                                  ResourceSearchStats, enumerate_clusters,
                                  format_decisions, optimize_resources)
+from repro.core.serving import (enumerate_serving_clusters,
+                                format_serving_decisions)
+from repro.core.workload import SERVE_WORKLOADS, SERVING_OBJECTIVES
 
 
 def main():
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--arch", default="qwen1.5-0.5b", choices=ARCH_IDS)
-    ap.add_argument("--shape", default="train_4k", choices=list(SHAPES))
-    ap.add_argument("--objective", default="step_time",
-                    choices=list(OBJECTIVES) + ["device_seconds"])
+    ap.add_argument("--shape", default="train_4k",
+                    choices=list(SHAPES) + list(SERVE_WORKLOADS))
+    ap.add_argument("--objective", default=None,
+                    choices=(list(OBJECTIVES) + ["device_seconds"]
+                             + list(SERVING_OBJECTIVES)),
+                    help="default: step_time, or tokens_per_dollar for a "
+                         "serving workload")
     ap.add_argument("--slo-ms", type=float, default=None,
-                    help="step-time target in ms (objective=slo)")
+                    help="step-time target in ms (objective=slo) or p99 "
+                         "TTFT target (objective=ttft_p99)")
     ap.add_argument("--steps-per-job", type=int,
                     default=DEFAULT_STEPS_PER_JOB,
                     help="job length priced by objective=job_cost")
@@ -51,20 +68,32 @@ def main():
                     choices=["beam", "exhaustive"])
     args = ap.parse_args()
 
-    clusters = enumerate_clusters(chips=args.chips,
-                                  pod_counts=tuple(args.pod_counts))
+    serving = args.shape in SERVE_WORKLOADS
+    if serving:
+        clusters = enumerate_serving_clusters(
+            chips=args.chips, pod_counts=tuple(args.pod_counts))
+        shape = SERVE_WORKLOADS[args.shape]
+        objective = args.objective or "tokens_per_dollar"
+    else:
+        clusters = enumerate_clusters(chips=args.chips,
+                                      pod_counts=tuple(args.pod_counts))
+        shape = SHAPES[args.shape]
+        objective = args.objective or "step_time"
     slo = args.slo_ms / 1e3 if args.slo_ms is not None else None
     stats = ResourceSearchStats()
     t0 = time.perf_counter()
     decisions = optimize_resources(
-        get_config(args.arch), SHAPES[args.shape], clusters,
-        objective=args.objective, slo=slo, search=args.search,
+        get_config(args.arch), shape, clusters,
+        objective=objective, slo=slo, search=args.search,
         steps_per_job=args.steps_per_job, stats=stats)
     dt = time.perf_counter() - t0
 
-    print(f"{args.arch} x {args.shape}, objective={args.objective}"
+    print(f"{args.arch} x {args.shape}, objective={objective}"
           + (f" (slo={args.slo_ms}ms)" if slo else ""))
-    print(format_decisions(decisions, slo=slo))
+    if serving:
+        print(format_serving_decisions(decisions))
+    else:
+        print(format_decisions(decisions, slo=slo))
     print(f"\nwinner: {decisions[0].describe()}")
     print(f"search: {stats.describe()} in {dt * 1e3:.0f}ms "
           f"({args.search}); exhaustive scan would cost "

@@ -1,5 +1,10 @@
 """Batched serving example (deliverable b): prefill + decode with KV
-caches via the ServeEngine, on a reduced model.
+caches via the ServeEngine's continuous-batching core, on a reduced model.
+
+Two runs of the same traffic: static batching (every request admitted in
+one round — the degenerate continuous schedule), then a 2-slot continuous
+pool that must refill lanes as requests finish — the executable twin of
+the costed slot-refill schedules in ``repro.core.serving``.
 
 Run:  PYTHONPATH=src python examples/serve_lm.py
 """
@@ -10,7 +15,7 @@ import numpy as np
 
 from repro.configs import get_config
 from repro.models.model import build_model
-from repro.runtime.serve_engine import Request, ServeEngine
+from repro.runtime.serve_engine import EngineConfig, Request, ServeEngine
 
 
 def main():
@@ -18,7 +23,6 @@ def main():
                                dtype="float32")
     model = build_model(arch)
     params = model.init(jax.random.PRNGKey(0))
-    engine = ServeEngine(model, params, max_len=96, temperature=0.0)
 
     rng = np.random.default_rng(0)
     requests = [
@@ -26,16 +30,38 @@ def main():
                 max_new_tokens=12)
         for n in (8, 12, 16, 16)
     ]
+
+    # -- static batching: one admission round, lockstep decode ----------
+    engine = ServeEngine(model, params,
+                         EngineConfig(max_len=96, batching="static"))
     outs = engine.generate(requests)
     for i, c in enumerate(outs):
-        print(f"req{i}: |prompt|={len(c.prompt):2d} -> {c.tokens}")
-    print(f"\nbatch of {len(requests)}: prefill {outs[0].prefill_time_s*1e3:.0f}ms, "
-          f"12 decode steps {outs[0].decode_time_s*1e3:.0f}ms")
+        print(f"req{i}: |prompt|={len(c.prompt):2d} "
+              f"decode {c.decode_time_s * 1e3:4.0f}ms -> {c.tokens}")
+    print(f"\nstatic batch of {len(requests)}: "
+          f"prefill {outs[0].prefill_time_s * 1e3:.0f}ms, "
+          f"stats {engine.stats}")
 
     # same requests again — greedy decoding is deterministic
     outs2 = engine.generate(requests)
     assert [c.tokens for c in outs] == [c.tokens for c in outs2]
     print("determinism check passed")
+
+    # -- continuous batching: 2 slots over 4 requests --------------------
+    pool = ServeEngine(model, params,
+                       EngineConfig(max_len=96, batching="continuous",
+                                    slots=2))
+    for r in requests:
+        pool.submit(r)
+    done = pool.run()
+    assert len(done) == len(requests)
+    print(f"\ncontinuous, slots=2: {pool.stats['admission_rounds']} "
+          f"admission rounds, {pool.stats['decode_steps']} decode steps, "
+          f"{pool.stats['wasted_slot_steps']} wasted slot-steps")
+    for c in done:
+        print(f"req{c.rid}: prefill {c.prefill_time_s * 1e3:4.0f}ms "
+              f"decode {c.decode_time_s * 1e3:4.0f}ms "
+              f"({len(c.tokens)} tokens)")
 
 
 if __name__ == "__main__":

@@ -16,6 +16,13 @@ map and ``docs/COST_MODEL.md`` for the formulas):
   * resource optimizer — :func:`repro.core.resource.optimize_resources`
                          (cluster x plan co-search under step-time / $-per-
                          step / $-per-job / SLO objectives)
+  * typed workloads    — :mod:`repro.core.workload`
+                         (:class:`~repro.core.workload.TrainWorkload` /
+                         :class:`~repro.core.workload.ServeWorkload` /
+                         :class:`~repro.core.workload.Objective`)
+  * serving schedules  — :func:`repro.core.serving.optimize_serving`
+                         ((pool x slots x plan) co-search under p99-TTFT /
+                         tokens-per-$ objectives; disaggregated pools)
   * scenario sweeps    — :class:`repro.core.sweep.SweepEngine`
   * running example    — :mod:`repro.core.linreg` (paper §2, LinReg DS)
 """
@@ -47,9 +54,17 @@ from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
                                  format_decisions, job_dollars, job_seconds,
                                  mesh_candidates, mesh_factorizations_3d,
                                  optimize_resources)
+from repro.core.serving import (ServingCandidate, ServingDecision,
+                                ServingScheduleCost, cost_serving_schedule,
+                                cross_pool_pairs, disaggregate,
+                                enumerate_serving_clusters, optimize_serving,
+                                serve_cell)
 from repro.core.symbols import MemState, SymbolTable, TensorStat
 from repro.core.sweep import (SweepCell, SweepEngine, format_table,
                               rank_cells, sweep_rows)
+from repro.core.workload import (SERVE_WORKLOADS, LengthDistribution,
+                                 Objective, ServeWorkload, TrainWorkload,
+                                 as_objective)
 
 __all__ = [
     "ClusterConfig", "ChipSpec", "CHIPS", "TPU_V5E", "TPU_V5P", "TPU_V6E",
@@ -74,4 +89,9 @@ __all__ = [
     "mesh_candidates", "mesh_factorizations_3d", "optimize_resources",
     "MemState", "SymbolTable", "TensorStat",
     "SweepCell", "SweepEngine", "format_table", "rank_cells", "sweep_rows",
+    "ServingCandidate", "ServingDecision", "ServingScheduleCost",
+    "cost_serving_schedule", "cross_pool_pairs", "disaggregate",
+    "enumerate_serving_clusters", "optimize_serving", "serve_cell",
+    "SERVE_WORKLOADS", "LengthDistribution", "Objective", "ServeWorkload",
+    "TrainWorkload", "as_objective",
 ]

@@ -582,29 +582,50 @@ def resident_components(arch: ArchConfig, shape: ShapeConfig,
         tokens_dev = shape.tokens / max(dp * sp, 1)
         if shape.mode == "decode":
             # KV cache dominates
-            if arch.mla:
-                cache = shape.global_batch / dp * shape.seq_len * arch.mla.cache_dim
-            elif arch.family == "ssm":
-                s = arch.ssm
-                cache = shape.global_batch / dp * s.n_heads(arch.d_model) * s.head_dim * s.state_size
-            elif arch.family == "hybrid":
-                s = arch.ssm
-                ssm_state = shape.global_batch / dp * s.n_heads(arch.d_model) * s.head_dim * s.state_size
-                n_attn = arch.n_layers // arch.hybrid.attn_every
-                kv = (shape.global_batch / dp * shape.seq_len
-                      * 2 * arch.n_kv_heads * arch.head_dim_ / max(tp, 1)) * n_attn / arch.n_layers
-                cache = ssm_state + kv
-            else:
-                kv_len_eff = shape.seq_len
+            def kv_at(kv_len: float) -> float:
+                """Per-layer cache residents at context ``kv_len`` (the SSM
+                state is sequence-independent; hybrids scale only the
+                attention share)."""
+                if arch.mla:
+                    return shape.global_batch / dp * kv_len * arch.mla.cache_dim
+                if arch.family == "ssm":
+                    s = arch.ssm
+                    return (shape.global_batch / dp * s.n_heads(arch.d_model)
+                            * s.head_dim * s.state_size)
+                if arch.family == "hybrid":
+                    s = arch.ssm
+                    ssm_state = (shape.global_batch / dp
+                                 * s.n_heads(arch.d_model) * s.head_dim
+                                 * s.state_size)
+                    n_attn = arch.n_layers // arch.hybrid.attn_every
+                    kv = (shape.global_batch / dp * kv_len
+                          * 2 * arch.n_kv_heads * arch.head_dim_
+                          / max(tp, 1)) * n_attn / arch.n_layers
+                    return ssm_state + kv
+                kv_len_eff = kv_len
                 if arch.window_pattern:
                     # local layers cache only the window
                     n_pat = len(arch.window_pattern)
-                    w_sum = sum(min(w, shape.seq_len) if w else shape.seq_len
+                    w_sum = sum(min(w, kv_len) if w else kv_len
                                 for w in arch.window_pattern) / n_pat
                     kv_len_eff = w_sum
-                cache = (shape.global_batch / dp * kv_len_eff
-                         * 2 * arch.n_kv_heads * arch.head_dim_ / max(tp, 1))
+                return (shape.global_batch / dp * kv_len_eff
+                        * 2 * arch.n_kv_heads * arch.head_dim_ / max(tp, 1))
+
+            cache = kv_at(shape.seq_len)
             comp["kv_cache"] = cache * arch.n_layers * bpe
+            # Paged-KV allocator pressure (serving decode shapes only): each
+            # slot reserves whole pages out to its p99 context, so the pool
+            # must keep the page-rounded tail resident, not the mean.  Plain
+            # decode shapes carry neither field and the term vanishes (and a
+            # zero-byte component emits no resident variable — bit-exact).
+            page = getattr(shape, "kv_page_tokens", 0)
+            max_ctx = getattr(shape, "max_context", 0)
+            if page and max_ctx:
+                paged_len = math.ceil(max(max_ctx, shape.seq_len)
+                                      / page) * page
+                comp["kv_paging"] = (max(kv_at(paged_len) - cache, 0.0)
+                                     * arch.n_layers * bpe)
             live_tokens = shape.global_batch / max(dp, 1)   # one token/seq
             comp["live_acts"] = live_tokens * arch.d_model * bpe * 4
             comp["logits"] = live_tokens * arch.vocab_size * 4 / max(tp, 1)

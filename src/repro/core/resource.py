@@ -47,19 +47,16 @@ from repro.core.planner import (MAX_MICROBATCHES, OVERLAP_FRACTION,
                                 PlanDecision, SearchStats,
                                 build_step_program, choose_plan,
                                 enumerate_plans, reference_plans)
+from repro.core.workload import (DEFAULT_STEPS_PER_JOB, OBJECTIVE_ALIASES,
+                                 SERVING_OBJECTIVES, TRAIN_OBJECTIVES,
+                                 Objective, ServeWorkload, TrainWorkload,
+                                 as_objective)
 
-OBJECTIVES = ("step_time", "cost", "job_cost", "slo")
-_OBJECTIVE_ALIASES = {
-    "step_time": "step_time", "time": "step_time",
-    "cost": "cost", "device_seconds": "cost", "cost_per_step": "cost",
-    "job_cost": "job_cost", "cost_per_job": "job_cost", "job": "job_cost",
-    "slo": "slo", "slo_cheapest": "slo",
-}
-
-# Default job length for the job-level objective: long enough that compute
-# dominates startup on healthy configs, short enough that preemption-heavy
-# giant slices pay visibly for their restarts.
-DEFAULT_STEPS_PER_JOB = 10_000
+OBJECTIVES = TRAIN_OBJECTIVES
+# Spellings that canonicalize to a *training* objective kind; serving-only
+# kinds are recognized (for the helpful error below) but not accepted here.
+_OBJECTIVE_ALIASES = {k: v for k, v in OBJECTIVE_ALIASES.items()
+                      if v in TRAIN_OBJECTIVES}
 
 # Purchasable slice granularity per chip generation (chips per pod slice).
 POD_CHIPS = {"tpu_v5e": 256, "tpu_v5p": 64, "tpu_v6e": 256}
@@ -583,6 +580,10 @@ class ResourceSearchStats:
 def _canon_objective(objective: str, slo: Optional[float]) -> str:
     key = _OBJECTIVE_ALIASES.get(objective)
     if key is None:
+        if OBJECTIVE_ALIASES.get(objective) in SERVING_OBJECTIVES:
+            raise ValueError(
+                f"objective {objective!r} ranks serving schedules; pass a "
+                f"ServeWorkload as the shape (see repro.core.serving)")
         raise ValueError(f"unknown objective {objective!r}; "
                          f"one of {sorted(set(_OBJECTIVE_ALIASES))}")
     if key == "slo" and slo is None:
@@ -653,9 +654,11 @@ def _visit_order_key(objective: str, slo: Optional[float],
 # ---------------------------------------------------------------------------
 
 
-def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
+def optimize_resources(arch: ArchConfig,
+                       shape: Union[ShapeConfig, TrainWorkload,
+                                    ServeWorkload],
                        clusters: Optional[Sequence] = None,
-                       objective: str = "step_time",
+                       objective: Union[str, Objective] = "step_time",
                        slo: Optional[float] = None, *,
                        search: str = "beam", beam_width: int = 4,
                        prune: Optional[bool] = None,
@@ -674,8 +677,28 @@ def optimize_resources(arch: ArchConfig, shape: ShapeConfig,
     shared :class:`PlanCostCache` to reuse sub-plan costs across calls and
     a :class:`ResourceSearchStats` to observe how much of the space was
     actually evaluated.
+
+    The workload may be typed: a :class:`TrainWorkload` carries its own
+    ``steps_per_job``; a :class:`ServeWorkload` dispatches to
+    :func:`repro.core.serving.optimize_serving` (the schedule co-search,
+    returning :class:`~repro.core.serving.ServingDecision` rows).  A typed
+    :class:`Objective` is accepted anywhere the string spelling is.
     """
-    objective = _canon_objective(objective, slo)
+    if isinstance(shape, ServeWorkload):
+        from repro.core import serving
+        return serving.optimize_serving(
+            arch, shape, clusters, objective=objective, slo=slo,
+            search=search, beam_width=beam_width, prune=prune,
+            cache=cache, stats=stats)
+    if isinstance(shape, TrainWorkload):
+        if steps_per_job == DEFAULT_STEPS_PER_JOB:
+            steps_per_job = shape.steps_per_job
+        shape = shape.shape
+    obj = as_objective(objective, slo, steps_per_job)
+    slo = obj.slo
+    if obj.steps_per_job is not None:
+        steps_per_job = obj.steps_per_job
+    objective = _canon_objective(obj.kind, slo)
     if prune is None:
         prune = search == "beam"
     cands = [_as_candidate(c) for c in

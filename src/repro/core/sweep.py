@@ -31,6 +31,8 @@ from repro.core.planner import PlanDecision, SearchStats, choose_plan
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
                                  ResourceDecision, ResourceSearchStats,
                                  optimize_resources, torus_links_for)
+from repro.core.workload import (SERVE_WORKLOADS, Objective, ServeWorkload,
+                                 TrainWorkload)
 
 # Named cluster shorthands accepted anywhere a cluster is given (pure
 # dataclass constants — building them never touches jax device state).
@@ -103,18 +105,34 @@ class SweepEngine:
         self.cache = cache if cache is not None else PlanCostCache()
 
     def cost_cell(self, arch: Union[str, ArchConfig],
-                  shape: Union[str, ShapeConfig],
+                  shape: Union[str, ShapeConfig, ServeWorkload],
                   cluster: Union[str, ClusterConfig],
                   top_k: int = 1) -> SweepCell:
         arch_id, arch = _resolve_arch(arch)
         shape_id, shape = _resolve_shape(shape)
         cluster_id, cc = _resolve_cluster(cluster)
+        h0, m0 = self.cache.hits, self.cache.misses
+        if isinstance(shape, ServeWorkload):
+            # A serving cell: the best costed schedule of this traffic on
+            # this cluster, reported as the winning decode-pool decision
+            # (feasible additionally requires a *stable* schedule).  No
+            # shape_applicable gate — workloads declare their own context.
+            from repro.core import serving
+            t0 = time.perf_counter()
+            decision, stats = serving.serve_cell(
+                arch, shape, cc, cluster_id=cluster_id, search=self.search,
+                beam_width=self.beam_width, cache=self.cache)
+            elapsed = time.perf_counter() - t0
+            stats.cache = CacheStats(self.cache.hits - h0,
+                                     self.cache.misses - m0,
+                                     self.cache.entries)
+            return SweepCell(arch_id, shape_id, cluster_id, decision, stats,
+                             elapsed)
         ok, why = shape_applicable(arch, shape)
         if not ok:
             return SweepCell(arch_id, shape_id, cluster_id, None, None,
                              skipped=why)
         stats = SearchStats()
-        h0, m0 = self.cache.hits, self.cache.misses
         t0 = time.perf_counter()
         decisions = choose_plan(arch, shape, cc, top_k=top_k,
                                 search=self.search,
@@ -138,9 +156,10 @@ class SweepEngine:
         return rank_cells(cells)
 
     def optimize_cell(self, arch: Union[str, ArchConfig],
-                      shape: Union[str, ShapeConfig],
+                      shape: Union[str, ShapeConfig, TrainWorkload,
+                                   ServeWorkload],
                       clusters: Optional[Sequence] = None,
-                      objective: str = "step_time",
+                      objective: Union[str, Objective] = "step_time",
                       slo: Optional[float] = None,
                       steps_per_job: int = DEFAULT_STEPS_PER_JOB,
                       ) -> Tuple[List[ResourceDecision], ResourceSearchStats]:
@@ -148,9 +167,13 @@ class SweepEngine:
         cluster, co-search the cluster grid for this (arch x shape) through
         the engine's shared sub-plan cache and return the ranked
         :class:`ResourceDecision` table plus search stats.
-        ``steps_per_job`` sizes the job priced by ``objective="job_cost"``."""
+        ``steps_per_job`` sizes the job priced by ``objective="job_cost"``.
+        Typed workloads and objectives pass straight through — a
+        :class:`ServeWorkload` makes this the serving schedule co-search
+        (:class:`~repro.core.serving.ServingDecision` rows)."""
         _, arch = _resolve_arch(arch)
-        _, shape = _resolve_shape(shape)
+        if not isinstance(shape, TrainWorkload):
+            _, shape = _resolve_shape(shape)
         stats = ResourceSearchStats()
         decisions = optimize_resources(
             arch, shape, clusters, objective=objective, slo=slo,
@@ -206,9 +229,14 @@ def _resolve_arch(arch) -> Tuple[str, ArchConfig]:
     return arch.name, arch
 
 
-def _resolve_shape(shape) -> Tuple[str, ShapeConfig]:
+def _resolve_shape(shape) -> Tuple[str, Union[ShapeConfig, ServeWorkload]]:
     if isinstance(shape, str):
-        return shape, SHAPES[shape]
+        if shape in SHAPES:
+            return shape, SHAPES[shape]
+        if shape in SERVE_WORKLOADS:
+            return shape, SERVE_WORKLOADS[shape]
+        raise KeyError(f"unknown shape {shape!r}; one of "
+                       f"{sorted(SHAPES) + sorted(SERVE_WORKLOADS)}")
     return shape.name, shape
 
 

@@ -9,7 +9,7 @@ so restoring onto any mesh is a device_put with new shardings.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Optional, Tuple
+from typing import Any, Optional, Tuple, Union
 
 import jax
 
@@ -19,6 +19,7 @@ from repro.core.costmodel import PlanCostCache
 from repro.core.planner import PlanDecision, ShardingPlan, choose_plan
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, torus_links_for,
                                  mesh_candidates, optimize_resources)
+from repro.core.workload import (Objective, ServeWorkload, TrainWorkload)
 
 
 @dataclasses.dataclass
@@ -30,12 +31,13 @@ class ElasticPlan:
     lr_scale: float                 # linear-scaling rule on DP resize
 
 
-def replan(arch: ArchConfig, shape: ShapeConfig, *,
+def replan(arch: ArchConfig,
+           shape: Union[ShapeConfig, TrainWorkload, ServeWorkload], *,
            old_cc: ClusterConfig,
            new_mesh_shape: Optional[Tuple[int, ...]] = None,
            new_mesh_axes: Optional[Tuple[str, ...]] = None,
            available_chips: Optional[int] = None,
-           objective: str = "step_time",
+           objective: Union[str, Objective] = "step_time",
            steps_per_job: int = DEFAULT_STEPS_PER_JOB,
            cache: Optional[PlanCostCache] = None) -> ElasticPlan:
     """Re-cost the program for a resized cluster.
@@ -51,6 +53,11 @@ def replan(arch: ArchConfig, shape: ShapeConfig, *,
     ``objective="job_cost"`` (with ``steps_per_job`` for the remaining job
     length) picks the cheapest way to *finish the job* — relevant after a
     loss, when restart overheads have just been paid.
+
+    The workload may be typed (:class:`TrainWorkload` /
+    :class:`ServeWorkload`) and the objective a typed :class:`Objective`:
+    a serving fleet that loses a slice replans its (pool x slots x plan)
+    schedule under its traffic model, e.g. ``objective="ttft_p99"``.
     """
     if new_mesh_shape is not None:
         axes = new_mesh_axes or old_cc.mesh_axes
@@ -62,7 +69,15 @@ def replan(arch: ArchConfig, shape: ShapeConfig, *,
             new_mesh_shape, axes,
             torus_links=torus_links_for(tuple(axes), old_cc.chip,
                                         tuple(new_mesh_shape)))
-        decision = choose_plan(arch, shape, new_cc, top_k=1, cache=cache)[0]
+        if isinstance(shape, (TrainWorkload, ServeWorkload)):
+            best = optimize_resources(arch, shape, [("pinned", new_cc)],
+                                      objective=objective,
+                                      steps_per_job=steps_per_job,
+                                      cache=cache)[0]
+            decision = best.decision
+        else:
+            decision = choose_plan(arch, shape, new_cc, top_k=1,
+                                   cache=cache)[0]
     elif available_chips is not None:
         cands = mesh_candidates(old_cc.chip, available_chips, base=old_cc)
         if not cands:

@@ -35,6 +35,13 @@ GOLDEN_ARCHS = ("qwen1.5-0.5b", "gemma3-12b", "mamba2-1.3b",
 GOLDEN_SHAPES = ("train_4k", "decode_32k")
 GOLDEN_CLUSTERS = ("pod", "2pod", "v5p-pod", "v6e-pod", "v5p-3d",
                    "v5p-dcn")
+# Serving cells (PR-6): the same sweep surface handed a ServeWorkload name
+# costs a (slots x plan) serving schedule per cluster — the winning decode
+# plan/step-time/HBM land in the same cell shape.  Two archs x chat_2k x
+# the cluster table = 12 cells; train/decode cells above must never move
+# when serving-only changes land.
+GOLDEN_SERVE_ARCHS = ("qwen1.5-0.5b", "gemma3-12b")
+GOLDEN_SERVE_WORKLOADS = ("chat_2k",)
 
 
 def compute_cells():
@@ -43,6 +50,8 @@ def compute_cells():
 
     engine = SweepEngine(search="beam")
     cells = engine.sweep(GOLDEN_ARCHS, GOLDEN_SHAPES, GOLDEN_CLUSTERS)
+    cells += engine.sweep(GOLDEN_SERVE_ARCHS, GOLDEN_SERVE_WORKLOADS,
+                          GOLDEN_CLUSTERS)
     out = {}
     for c in cells:
         d = c.decision

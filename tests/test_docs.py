@@ -76,7 +76,8 @@ def test_docs_name_only_living_symbols():
     public core API when they name repro.core members — docs rot check."""
     import repro.core as core
     pat = re.compile(r"`(?:repro\.core\.)?(?:costmodel|resource|planner|"
-                     r"sweep|cluster)\.([A-Za-z_][A-Za-z0-9_]*)`")
+                     r"sweep|cluster|serving|workload)\."
+                     r"([A-Za-z_][A-Za-z0-9_]*)`")
     missing = []
     for rel in ("docs/ARCHITECTURE.md", "docs/COST_MODEL.md"):
         with open(os.path.join(ROOT, rel)) as f:
@@ -85,7 +86,8 @@ def test_docs_name_only_living_symbols():
             if not (hasattr(core, name)
                     or any(hasattr(getattr(core, m), name)
                            for m in ("costmodel", "resource", "planner",
-                                     "sweep", "cluster")
+                                     "sweep", "cluster", "serving",
+                                     "workload")
                            if hasattr(core, m))):
                 missing.append(f"{rel}: {name}")
     assert not missing, "docs reference symbols that do not exist:\n  " \

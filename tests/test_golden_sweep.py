@@ -120,11 +120,25 @@ def test_2d_cells_unchanged_by_torus_topology():
         "golden grid has no v5p-3d cells"
 
 
+def test_serving_cells_present_and_additive():
+    """The golden grid gained the PR-6 serving cells (workload chat_2k on
+    every golden cluster) without moving a single train/decode cell: the
+    pre-pipeline frozen baselines above still pin those, and this test
+    pins the serving family's existence and shape."""
+    with open(_regen.GOLDEN_PATH) as f:
+        golden = json.load(f)
+    serve_keys = [k for k in golden if "|chat_2k|" in k]
+    want = {f"{a}|chat_2k|{c}" for a in _regen.GOLDEN_SERVE_ARCHS
+            for c in _regen.GOLDEN_CLUSTERS}
+    assert set(serve_keys) == want
+    assert any(golden[k]["feasible"] for k in serve_keys)
+
+
 def test_sweep_grid_matches_golden():
     with open(_regen.GOLDEN_PATH) as f:
         golden = json.load(f)
     got = _regen.compute_cells()
-    assert len(golden) >= 48
+    assert len(golden) >= 60
     assert set(got) == set(golden), (
         "grid keys drifted — regenerate the golden file if intentional")
     drift = []

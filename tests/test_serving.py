@@ -10,7 +10,7 @@ import pytest
 
 from repro.configs import get_config
 from repro.models.model import build_model
-from repro.runtime.serve_engine import Request, ServeEngine
+from repro.runtime.serve_engine import EngineConfig, Request, ServeEngine
 
 RNG = jax.random.PRNGKey(0)
 
@@ -81,3 +81,66 @@ def test_engine_eos_stops_early():
     out = engine.generate([Request(prompt=[3, 4, 5], max_new_tokens=8,
                                    eos_id=int(eos))])[0]
     assert out.tokens == base.tokens[:3]
+
+
+def test_engine_config_and_continuous_batching():
+    """The EngineConfig surface; static batching is the degenerate
+    continuous schedule (enough slots + everything submitted upfront ==
+    bit-identical outputs); a smaller pool refills via admission rounds
+    and still completes every request deterministically."""
+    with pytest.raises(ValueError):
+        EngineConfig(batching="sometimes")
+    with pytest.raises(ValueError):
+        EngineConfig(slots=0)
+    cfg = _tiny("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    reqs = [Request(prompt=[5, 6, 7, 8], max_new_tokens=4),
+            Request(prompt=[9, 10, 11], max_new_tokens=4),
+            Request(prompt=[3, 4, 5], max_new_tokens=4)]
+    # legacy kwargs == explicit config
+    static = ServeEngine(model, params, max_len=64).generate(reqs)
+    cfgd = ServeEngine(model, params, EngineConfig(max_len=64)).generate(reqs)
+    assert [c.tokens for c in cfgd] == [c.tokens for c in static]
+    # degenerate continuous schedule: slots cover the batch
+    wide = ServeEngine(model, params,
+                       EngineConfig(max_len=64, batching="continuous",
+                                    slots=3))
+    assert [c.tokens for c in wide.generate(reqs)] == \
+        [c.tokens for c in static]
+    assert wide.stats["admission_rounds"] == 1
+    # 2 slots over 3 requests: a refill round must happen, all complete
+    narrow = ServeEngine(model, params,
+                         EngineConfig(max_len=64, batching="continuous",
+                                      slots=2))
+    out1 = narrow.generate(reqs)
+    assert all(len(c.tokens) == 4 for c in out1)
+    assert narrow.stats["admission_rounds"] >= 2
+    assert [c.tokens for c in narrow.generate(reqs)] == \
+        [c.tokens for c in out1]          # deterministic across sessions
+    # submit()/run() matches generate() and reports rids in order
+    for r in reqs:
+        narrow.submit(r)
+    drained = narrow.run()
+    assert [c.rid for c in drained] == sorted(c.rid for c in drained)
+
+
+def test_engine_masks_finished_slots_and_reports_per_request_decode():
+    """A slot that stops early is masked out of the token accounting
+    (wasted_slot_steps counts its padding decodes) and its decode seconds
+    stop accruing — the lockstep-waste fix."""
+    cfg = _tiny("qwen1.5-0.5b")
+    model = build_model(cfg)
+    params = model.init(RNG)
+    engine = ServeEngine(model, params, max_len=64)
+    base = engine.generate([Request(prompt=[5, 6, 7, 8], max_new_tokens=8),
+                            Request(prompt=[9, 10, 11], max_new_tokens=8)])
+    eos = base[0].tokens[1]
+    engine2 = ServeEngine(model, params, max_len=64)
+    out = engine2.generate(
+        [Request(prompt=[5, 6, 7, 8], max_new_tokens=8, eos_id=int(eos)),
+         Request(prompt=[9, 10, 11], max_new_tokens=8)])
+    assert out[0].tokens == base[0].tokens[:2]     # stopped at eos
+    assert out[1].tokens == base[1].tokens         # unaffected neighbour
+    assert engine2.stats["wasted_slot_steps"] > 0
+    assert out[0].decode_time_s < out[1].decode_time_s

@@ -1,0 +1,429 @@
+"""Costed serving schedules: degeneracy pins, floor soundness, cache
+round-trips, and the typed Workload/Objective API surface.
+
+The two load-bearing degeneracies:
+  * a zero-arrival, batch-1, page-free serving schedule's decode step
+    must cost BIT-EXACT what the plain decode shape costs today (serving
+    is an extension, not a reprice), and
+  * a disaggregated pool pair at zero arrival and zero handoff bytes has
+    latency metrics bit-exact equal to the colocated pool's — the only
+    things disaggregation adds are the handoff and the overlap algebra.
+"""
+import dataclasses
+import math
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ShapeConfig
+from repro.core.cluster import ClusterConfig, single_pod_config
+from repro.core.costmodel import PlanCostCache, estimate
+from repro.core.planner import (OVERLAP_FRACTION, ShardingPlan,
+                                build_step_program, estimate_hbm,
+                                resident_components)
+from repro.core.resource import optimize_resources
+from repro.core.serving import (SLOT_OPTS, ServingCandidate, ServingFloor,
+                                cost_serving_schedule, decode_shape,
+                                disaggregate, enumerate_serving_clusters,
+                                kv_handoff_bytes, optimize_serving,
+                                prefill_shape, serve_cell, serving_floor)
+from repro.core.sweep import CLUSTERS, SweepEngine
+from repro.core.workload import (SERVE_WORKLOADS, LengthDistribution,
+                                 Objective, ServeWorkload, TrainWorkload,
+                                 as_objective)
+
+ARCH = get_config("qwen1.5-0.5b")
+POD = single_pod_config()
+CHAT = SERVE_WORKLOADS["chat_2k"]
+
+
+def _wl(**kw) -> ServeWorkload:
+    base = dict(name="wl", arrival_rate=4.0,
+                prompt_len=LengthDistribution(1024, 2048),
+                output_len=LengthDistribution(128, 256),
+                ttft_slo=1.0, kv_page_tokens=128)
+    base.update(kw)
+    return ServeWorkload(**base)
+
+
+def _colocated(cc: ClusterConfig, cid: str = "pod") -> ServingCandidate:
+    return ServingCandidate(cid, cc, cc)
+
+
+# ---------------------------------------------------------------- degeneracy
+
+
+def test_zero_arrival_batch1_decode_step_bit_exact():
+    """A B=1, zero-arrival, page-free schedule's decode step is the plain
+    decode step: same program walk, same estimator, same float."""
+    wl = _wl(arrival_rate=0.0, kv_page_tokens=0)
+    plan = ShardingPlan()
+    sched = cost_serving_schedule(ARCH, wl, _colocated(POD), 1, plan, plan)
+    ctx = int(round(wl.prompt_len.mean + wl.output_len.mean))
+    plain = ShapeConfig("plain", ctx, 1, "decode")
+    cc_p = POD.with_overlap(OVERLAP_FRACTION if plan.overlap else 0.0)
+    direct = estimate(build_step_program(ARCH, plain, plan, cc_p), cc_p)
+    assert sched.decode_step_time == direct.total
+    assert sched.arrival_rate == 0.0
+    assert sched.utilization == 0.0 and sched.stable
+    assert sched.handoff_time == 0.0
+
+
+def test_page_free_serving_shape_prices_like_plain_decode():
+    """kv_page_tokens=0 leaves resident_components untouched; a paged
+    workload adds a nonnegative kv_paging term and nothing else."""
+    plan = ShardingPlan()
+    free = decode_shape(_wl(kv_page_tokens=0), 8)
+    plain = ShapeConfig("p", free.seq_len, 8, "decode")
+    a = resident_components(ARCH, free, plan, POD)
+    b = resident_components(ARCH, plain, plan, POD)
+    assert a == b
+    paged = decode_shape(_wl(kv_page_tokens=128), 8)
+    c = resident_components(ARCH, paged, plan, POD)
+    assert c.pop("kv_paging") > 0
+    assert c == b
+    assert estimate_hbm(ARCH, paged, plan, POD) > \
+        estimate_hbm(ARCH, free, plan, POD)
+
+
+def test_paging_term_page_rounds_the_tail():
+    """The paging term reserves whole pages out to the p99 context."""
+    plan = ShardingPlan()
+    wl = _wl(kv_page_tokens=4096,
+             prompt_len=LengthDistribution(1024, 5000),
+             output_len=LengthDistribution(128, 200))
+    sh = decode_shape(wl, 4)
+    comp = resident_components(ARCH, sh, plan, POD)
+    pages = math.ceil(max(sh.max_context, sh.seq_len) / 4096) * 4096
+    plain_at = resident_components(
+        ARCH, ShapeConfig("x", pages, 4, "decode"), plan, POD)["kv_cache"]
+    assert comp["kv_cache"] + comp["kv_paging"] == pytest.approx(plain_at)
+
+
+def test_ssm_family_has_no_paging_pressure():
+    """SSM decode state is sequence-independent: pages add nothing."""
+    mamba = get_config("mamba2-1.3b")
+    comp = resident_components(mamba, decode_shape(_wl(), 8),
+                               ShardingPlan(), POD)
+    assert comp.get("kv_paging", 0.0) == 0.0
+
+
+def test_disaggregated_zero_handoff_latency_equals_colocated():
+    """Zero arrival + zero handoff bytes: the disaggregated pool pair's
+    latency metrics are bit-exact the colocated ones (queue waits vanish,
+    the handoff is free, and both pools run the colocated pool's config)."""
+    wl = _wl(arrival_rate=0.0)
+    plan = ShardingPlan()
+    cache = PlanCostCache()
+    colo = cost_serving_schedule(ARCH, wl, _colocated(POD), 8, plan, plan,
+                                 cache=cache)
+    pair = ServingCandidate("pair", POD, POD, handoff_cc=CLUSTERS["2pod"],
+                            handoff_axis="pod")
+    assert not pair.colocated
+    disagg = cost_serving_schedule(ARCH, wl, pair, 8, plan, plan,
+                                   cache=cache, handoff_bytes=0.0)
+    assert disagg.handoff_time == 0.0
+    assert disagg.decode_step_time == colo.decode_step_time
+    assert disagg.prefill_time == colo.prefill_time
+    assert disagg.prefill_time_p99 == colo.prefill_time_p99
+    assert disagg.ttft_p99 == colo.ttft_p99
+    assert disagg.ttft_mean == colo.ttft_mean
+    # ... but the schedule algebra differs exactly as documented:
+    assert colo.window_time == colo.prefill_window_time + \
+        colo.decode_window_time
+    assert disagg.window_time == max(disagg.prefill_window_time,
+                                     disagg.decode_window_time)
+
+
+def test_real_handoff_is_positive_and_priced_on_one_link():
+    """With real KV bytes the handoff costs > 0 and scales ~linearly in
+    the payload (one-link path: no ring phases to amortize)."""
+    wl = _wl(arrival_rate=0.1)
+    plan = ShardingPlan()
+    pair = disaggregate(CLUSTERS["v5p-dcn"])
+    assert pair is not None and not pair.colocated
+    s1 = cost_serving_schedule(ARCH, wl, pair, 8, plan, plan,
+                               handoff_bytes=1e9)
+    s2 = cost_serving_schedule(ARCH, wl, pair, 8, plan, plan,
+                               handoff_bytes=2e9)
+    s3 = cost_serving_schedule(ARCH, wl, pair, 8, plan, plan,
+                               handoff_bytes=3e9)
+    assert s1.handoff_time > 0
+    # affine in the payload: one wire transfer plus a fixed message
+    # latency — equal marginal cost per extra byte, no ring phases
+    assert (s2.handoff_time - s1.handoff_time) == pytest.approx(
+        s3.handoff_time - s2.handoff_time, rel=1e-6)
+    assert s2.handoff_time < 2 * s1.handoff_time   # latency term amortizes
+    assert kv_handoff_bytes(ARCH, 2048) > 0
+
+
+def test_cross_chip_pool_pairs():
+    """Heterogeneous disaggregation: cross-chip pairs join single-slice
+    pools of different chip families, price per-pool dollars, and carry a
+    DCN-classed handoff mesh."""
+    grid = enumerate_serving_clusters(chips=["tpu_v6e", "tpu_v5e"],
+                                      pod_counts=(1,), mesh_variants=1,
+                                      cross_chip=True)
+    pairs = [c for c in grid if not c.colocated]
+    assert pairs, "cross_chip=True emitted no pool pairs"
+    for pair in pairs:
+        assert pair.prefill_cc.chip.name != pair.decode_cc.chip.name
+        assert pair.handoff_cc.mesh_axes[0] == "pod"
+        assert pair.handoff_cc.mesh_shape[0] == 2
+        assert pair.handoff_cc.link_class("pod") == "dcn"
+        assert pair.dollars_per_hour == pytest.approx(
+            pair.prefill_cc.num_chips
+            * pair.prefill_cc.chip.cost_per_chip_hour
+            + pair.decode_cc.num_chips
+            * pair.decode_cc.chip.cost_per_chip_hour)
+    # without the flag the grid stays homogeneous, as before
+    assert all(c.prefill_cc.chip.name == c.decode_cc.chip.name
+               for c in enumerate_serving_clusters(
+                   chips=["tpu_v6e", "tpu_v5e"], pod_counts=(1,)))
+
+
+def test_disaggregated_pair_wins_heterogeneous_fleet():
+    """The scenario the resource_opt.serving benchmark gates: under
+    prefill-heavy traffic at an arrival rate above every cheaper colocated
+    candidate's capacity, the cheapest *stable* fleet is a v6e prefill pod
+    feeding a v5e decode pod — and the beam finds the exhaustive winner."""
+    arch = get_config("gemma3-12b")
+    wl = ServeWorkload("hetero", arrival_rate=450.0,
+                       prompt_len=LengthDistribution(8192, 16384),
+                       output_len=LengthDistribution(64, 128),
+                       ttft_slo=0.5, kv_page_tokens=128)
+    grid = enumerate_serving_clusters(chips=["tpu_v6e", "tpu_v5e"],
+                                      pod_counts=(1, 2), mesh_variants=1,
+                                      cross_chip=True)
+    cache = PlanCostCache()
+    dec = optimize_serving(arch, wl, grid, objective="tokens_per_dollar",
+                           cache=cache)
+    ex = optimize_serving(arch, wl, grid, objective="tokens_per_dollar",
+                          search="exhaustive", cache=cache)
+    best = dec[0]
+    assert best.feasible and not best.cand.colocated
+    assert best.cand.prefill_cc.chip.name == "tpu_v6e"
+    assert best.cand.decode_cc.chip.name == "tpu_v5e"
+    assert (best.cluster_id, best.slots) == (ex[0].cluster_id, ex[0].slots)
+    # every colocated candidate cheaper than the pair is saturated
+    for d in dec:
+        if d.cand.colocated and d.dollars_per_hour < best.dollars_per_hour:
+            assert not d.feasible
+
+
+# ----------------------------------------------------------- traffic math
+
+
+def test_metrics_monotone_in_arrival_rate():
+    """Utilization and p99 TTFT never improve with more traffic — the
+    property the floor-pruning argument leans on."""
+    plan = ShardingPlan()
+    cache = PlanCostCache()
+    prev_util, prev_ttft = -1.0, -1.0
+    for lam in (0.0, 2.0, 8.0, 32.0, 128.0, 512.0):
+        s = cost_serving_schedule(ARCH, _wl(arrival_rate=lam),
+                                  _colocated(POD), 32, plan, plan,
+                                  cache=cache)
+        assert s.utilization >= prev_util
+        assert s.ttft_p99 >= prev_ttft
+        prev_util, prev_ttft = s.utilization, s.ttft_p99
+    # saturation: unstable schedules deliver nothing and price at infinity
+    sat = cost_serving_schedule(ARCH, _wl(arrival_rate=1e9),
+                                _colocated(POD), 8, plan, plan, cache=cache)
+    assert not sat.stable
+    assert sat.tokens_per_second == 0.0
+    assert sat.ttft_p99 == float("inf")
+    assert sat.cost_per_1k_tokens == float("inf")
+
+
+def test_serving_floor_is_sound():
+    """Every floor metric lower-bounds its costed value, for colocated and
+    disaggregated candidates, across slot counts."""
+    wl = _wl(arrival_rate=16.0)
+    cands = [_colocated(POD), disaggregate(CLUSTERS["v5p-dcn"])]
+    for cand in cands:
+        for slots in SLOT_OPTS:
+            fl = serving_floor(ARCH, wl, cand, slots)
+            # the floor must hold for EVERY plan, not just the default
+            for plan in (ShardingPlan(),
+                         ShardingPlan(name="tp", batch_axes=(),
+                                      tp_axes=("model",))):
+                s = cost_serving_schedule(ARCH, wl, cand, slots, plan, plan)
+                assert fl.decode_step <= s.decode_step_time + 1e-12
+                assert fl.prefill_step <= s.prefill_time + 1e-12
+                assert fl.prefill_step_p99 <= s.prefill_time_p99 + 1e-12
+                assert fl.utilization <= s.utilization + 1e-12
+                assert fl.ttft_p99 <= s.ttft_p99 + 1e-12
+
+
+# ------------------------------------------------------------ cache replay
+
+
+def test_schedule_costs_replay_bit_exact_through_shared_cache():
+    """Costing the same schedule through a fresh cache and through a cache
+    warmed by other schedules returns identical floats (the PlanCostCache
+    replay guarantee extended to serving programs)."""
+    plan = ShardingPlan()
+    warm = PlanCostCache()
+    # warm the cache with neighbours
+    for slots in (8, 32):
+        cost_serving_schedule(ARCH, CHAT, _colocated(POD), slots, plan, plan,
+                              cache=warm)
+    a = cost_serving_schedule(ARCH, CHAT, _colocated(POD), 32, plan, plan,
+                              cache=warm)
+    b = cost_serving_schedule(ARCH, CHAT, _colocated(POD), 32, plan, plan,
+                              cache=PlanCostCache())
+    assert a == b
+    assert warm.stats().hits > 0
+
+
+# ------------------------------------------------------- typed API surface
+
+
+def test_objective_aliases_and_validation():
+    assert as_objective("time").kind == "step_time"
+    assert as_objective("ttft").kind == "ttft_p99"
+    assert Objective.step_slo(0.05).slo == 0.05
+    assert as_objective(Objective.job_cost(500)).steps_per_job == 500
+    # typed fields win over loose kwargs
+    assert as_objective(Objective.step_slo(0.1), slo=0.2).slo == 0.1
+    with pytest.raises(ValueError):
+        Objective("nonsense")
+    with pytest.raises(ValueError):
+        Objective("slo", slo=-1.0)
+    with pytest.raises(ValueError):
+        LengthDistribution(100, 50)       # p99 below mean
+    with pytest.raises(ValueError):
+        ServeWorkload("w", -1.0, LengthDistribution(10),
+                      LengthDistribution(10))
+
+
+def test_typed_train_workload_matches_string_call():
+    shape = SHAPES["decode_32k"]
+    clusters = [CLUSTERS["pod"], CLUSTERS["v5p-pod"]]
+    legacy = optimize_resources(ARCH, shape, clusters, objective="step_time")
+    typed = optimize_resources(ARCH, TrainWorkload(shape), clusters,
+                               objective=Objective.step_time())
+    assert [d.cluster_id for d in typed] == [d.cluster_id for d in legacy]
+    assert typed[0].time == legacy[0].time
+    # TrainWorkload carries its own job length into job_cost
+    j = optimize_resources(ARCH, TrainWorkload(shape, steps_per_job=77),
+                           clusters, objective="job_cost")
+    assert j[0].steps_per_job == 77
+
+
+def test_serving_objective_on_plain_shape_raises_helpfully():
+    with pytest.raises(ValueError, match="ServeWorkload"):
+        optimize_resources(ARCH, SHAPES["decode_32k"], objective="ttft_p99")
+    with pytest.raises(ValueError, match="slo"):
+        optimize_serving(ARCH, _wl(ttft_slo=None), [_colocated(POD)],
+                         objective="ttft_p99")
+
+
+def test_optimize_resources_dispatches_serve_workload():
+    cands = [_colocated(POD, "pod"), disaggregate(CLUSTERS["v5p-dcn"])]
+    via_resources = optimize_resources(ARCH, CHAT, cands,
+                                       objective="tokens_per_dollar")
+    direct = optimize_serving(ARCH, CHAT, cands,
+                              objective="tokens_per_dollar")
+    assert [(d.cluster_id, d.slots) for d in via_resources] == \
+        [(d.cluster_id, d.slots) for d in direct]
+    best = via_resources[0]
+    assert best.feasible and best.decision is not None
+    assert best.schedule.stable
+
+
+# --------------------------------------------------- co-search correctness
+
+
+def test_beam_equals_exhaustive_on_serving_grid():
+    """The acceptance property, in-tree at small scale: pruned beam search
+    returns the exhaustive (candidate x slots x plan) scan's winner, with
+    at least one disaggregated candidate in the grid."""
+    cands = ([_colocated(CLUSTERS["pod"], "pod"),
+              _colocated(CLUSTERS["v5p-pod"], "v5p-pod"),
+              _colocated(CLUSTERS["v5p-dcn"], "v5p-dcn")]
+             + [disaggregate(CLUSTERS["v5p-dcn"])])
+    for objective in ("tokens_per_dollar", "ttft_p99"):
+        beam = optimize_serving(ARCH, CHAT, cands, objective=objective)
+        full = optimize_serving(ARCH, CHAT, cands, objective=objective,
+                                search="exhaustive")
+        assert (beam[0].cluster_id, beam[0].slots) == \
+            (full[0].cluster_id, full[0].slots)
+        assert beam[0].decode_decision.plan == full[0].decode_decision.plan
+
+
+def test_sweep_accepts_serving_workloads():
+    eng = SweepEngine()
+    cells = eng.sweep(["qwen1.5-0.5b"], ["chat_2k"], ["pod"])
+    assert len(cells) == 1
+    c = cells[0]
+    assert c.key == "qwen1.5-0.5b|chat_2k|pod"
+    assert not c.skipped and c.decision is not None
+    assert c.stats.costed > 0
+    # the workload object spells the same cell
+    c2 = eng.cost_cell("qwen1.5-0.5b", CHAT, "pod")
+    assert c2.decision.time == c.decision.time
+    with pytest.raises(KeyError):
+        eng.cost_cell("qwen1.5-0.5b", "no_such_shape", "pod")
+
+
+def test_serve_cell_feasibility_requires_stability():
+    """A cluster that fits in HBM but cannot carry the traffic reports an
+    infeasible serving cell."""
+    tiny = ClusterConfig(mesh_shape=(2,), mesh_axes=("data",))
+    hot = _wl(arrival_rate=1e9)
+    pd, _ = serve_cell(ARCH, hot, tiny, cluster_id="tiny")
+    assert not pd.feasible
+    calm, _ = serve_cell(ARCH, _wl(arrival_rate=0.001), POD,
+                         cluster_id="pod")
+    assert calm.feasible
+
+
+def test_elastic_replan_serving_workload():
+    from repro.runtime.elastic import replan
+    ep = replan(ARCH, CHAT, old_cc=POD, available_chips=128,
+                objective=Objective.ttft_p99())
+    assert ep.cc.num_chips == 128
+    assert ep.decision is not None
+
+
+# ------------------------------------------------------------- hypothesis
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+if HAVE_HYPOTHESIS:
+    _PROP_CACHE = PlanCostCache()      # shared: examples replay each other
+
+    @settings(max_examples=20, deadline=None)
+    @given(lam=st.floats(0.0, 64.0),
+           slots=st.sampled_from(SLOT_OPTS),
+           prompt=st.integers(64, 4096),
+           out=st.integers(16, 512),
+           disagg=st.booleans())
+    def test_property_schedule_costs_round_trip_plan_cost_cache(
+            lam, slots, prompt, out, disagg):
+        """Any schedule costed through the shared cache equals the same
+        schedule costed on a cold cache — sub-plan replay is bit-exact
+        across arbitrary (traffic x slots x pool) neighbours."""
+        wl = _wl(arrival_rate=lam,
+                 prompt_len=LengthDistribution(prompt, 2 * prompt),
+                 output_len=LengthDistribution(out, 2 * out))
+        cand = disaggregate(CLUSTERS["v5p-dcn"]) if disagg \
+            else _colocated(POD)
+        plan = ShardingPlan()
+        warm = cost_serving_schedule(ARCH, wl, cand, slots, plan, plan,
+                                     cache=_PROP_CACHE)
+        cold = cost_serving_schedule(ARCH, wl, cand, slots, plan, plan,
+                                     cache=PlanCostCache())
+        assert warm == cold
+        fl = serving_floor(ARCH, wl, cand, slots)
+        assert fl.decode_step <= warm.decode_step_time + 1e-12
+        assert fl.utilization <= warm.utilization + 1e-12
+else:
+    def test_property_schedule_costs_round_trip_plan_cost_cache():
+        pytest.skip("property test needs hypothesis "
+                    "(pip install -r requirements-dev.txt)")
