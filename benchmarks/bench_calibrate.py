@@ -1,0 +1,230 @@
+"""Calibration harvest + fit + drift gate (ROADMAP item: close the
+estimate↔reality loop).
+
+Harvests ``(peak-rate features, measured wall seconds)`` pairs on the
+CPU host — matmul microbenchmarks spanning the three MXU shape classes,
+a streaming op for the HBM fraction, the §3.4 LinReg accuracy scenarios
+(reusing :mod:`benchmarks.bench_accuracy`), and the two cheap-to-compile
+smoke architectures lowered through :func:`repro.core.hlo_cost
+.lower_and_cost` — then least-squares a
+:class:`repro.core.calibration.CalibrationProfile` and re-estimates
+every validation cell under ``cc.with_calibration(profile)``.
+
+Rows:
+  * ``calib.fit``            — fitted terms / residual / sample counts
+  * ``calib.profile``        — the fitted factors themselves
+  * ``calib.drift.<cell>``   — est/measured ratio, uncalibrated vs
+                               calibrated, per validation cell
+  * ``calib.drift``          — the gate: median |ratio − 1| must
+                               strictly improve under the fitted profile
+                               and every calibrated ratio must sit
+                               inside a generous sanity band (out-of-
+                               band means the measurement path, not the
+                               workload, drifted — fail the job).
+
+Samples whose HLO walk hit unknown dtypes (``CompiledCost
+.unknown_dtypes``) are marked polluted and rejected by the fitter.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import estimate
+from repro.core.calibration import (HBM_KEY, CalibrationSample, fit_profile,
+                                    features_from_totals, mxu_key,
+                                    shape_class)
+from repro.core.cluster import cpu_host_config
+from repro.core.hlo_cost import lower_and_cost
+from repro.core.linreg import build_linreg_program
+
+from benchmarks.bench_accuracy import BUDGETS, CPU_SCENARIOS, _execute
+
+# Calibrated ratios outside this band fail the gate: the profile was
+# fitted from these very measurements, so a wildly off ratio means the
+# measurement path itself is broken (polluted payloads, a dead timer),
+# not that the hardware is slow.
+RATIO_BAND = (0.25, 4.0)
+
+# Square-matmul sides spanning the small / medium / large shape classes
+# (2n^3 FLOPs: ~3.4e7 / ~9.1e8 / ~1.3e10 against the 1e8/1e10 breaks).
+MATMUL_SIDES = (256, 768, 1856)
+MATMUL_SIDES_QUICK = (256, 768)
+
+# The two cheap-to-compile families (tests/test_models_smoke.FAST_ARCHS)
+# — the smoke-arch grid the drift rows cover.
+SMOKE_ARCHS = ("qwen1.5-0.5b", "mamba2-1.3b")
+
+
+def _mesh1():
+    from jax.sharding import Mesh
+    return Mesh(np.array(jax.devices("cpu")[:1]), ("data",))
+
+
+def _time_compiled(compiled, args, reps: int) -> float:
+    """Median wall seconds of one dispatch (first call excluded)."""
+    jax.block_until_ready(compiled(*args))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(compiled(*args))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2]
+
+
+def _matmul_sample(n: int, cc, reps: int) -> Tuple[CalibrationSample, float]:
+    """One n x n @ n x n float32 matmul; returns (sample, measured)."""
+    rng = np.random.default_rng(n)
+    x = jnp.asarray(rng.standard_normal((n, n)), jnp.float32)
+    compiled, cost = lower_and_cost(f"matmul{n}", lambda a, b: a @ b,
+                                    (x, x), _mesh1())
+    measured = _time_compiled(compiled, (x, x), reps)
+    # Compiled modules report bf16-dominated MXU work (cc.chip.peak is
+    # dtype-degenerate on the CPU host anyway) — key the feature the way
+    # CompiledCost.time_breakdown will consult the fitted profile.
+    feats = {mxu_key("bfloat16", shape_class(cost.flops_per_device)):
+             cost.flops_per_device / cc.chip.peak("bfloat16"),
+             HBM_KEY: cost.bytes_per_device / cc.chip.hbm_bw}
+    return CalibrationSample(
+        features=feats, measured_seconds=measured,
+        fixed_seconds=cc.dispatch_latency, label=f"matmul{n}",
+        polluted=bool(cost.unknown_dtypes)), measured
+
+
+def _stream_sample(cc, reps: int) -> CalibrationSample:
+    """A bandwidth-bound elementwise op: pins the HBM fraction."""
+    n = 48 * 2 ** 20                      # 192 MB in, 192 MB out
+    x = jnp.ones((n,), jnp.float32)
+    compiled, cost = lower_and_cost("stream", lambda a: a * 1.0001 + 1.0,
+                                    (x,), _mesh1())
+    measured = _time_compiled(compiled, (x,), reps)
+    return CalibrationSample(
+        features={HBM_KEY: cost.bytes_per_device / cc.chip.hbm_bw},
+        measured_seconds=measured, fixed_seconds=cc.dispatch_latency,
+        label="stream", polluted=bool(cost.unknown_dtypes))
+
+
+def _linreg_cell(sc, cc) -> Tuple[CalibrationSample, float, float]:
+    """One §3.4 LinReg scenario: (sample, est_seconds_fn-able, measured).
+
+    Returns the sample plus (uncalibrated estimate, measured); the
+    calibrated estimate is recomputed by the caller under the fitted cc.
+    """
+    prog, _ = build_linreg_program(sc, cc, BUDGETS)
+    costed = estimate(prog, cc)
+    est = costed.breakdown.compute + costed.breakdown.collective
+    actual = _execute(sc)
+    sample = CalibrationSample(
+        features=features_from_totals(costed.totals, cc),
+        measured_seconds=actual, estimated_seconds=est,
+        label=f"linreg:{sc.name}")
+    return sample, est, actual
+
+
+def _linreg_estimate(sc, cc) -> float:
+    prog, _ = build_linreg_program(sc, cc, BUDGETS)
+    costed = estimate(prog, cc)
+    return costed.breakdown.compute + costed.breakdown.collective
+
+
+def _arch_cell(arch_id: str, cc, reps: int):
+    """Lower one smoke arch's loss step on a 1-device CPU mesh, time it,
+    and return (sample, CompiledCost, measured)."""
+    from repro.configs import get_config
+    from repro.models.model import build_model
+
+    cfg = dataclasses.replace(get_config(arch_id).reduced(), dtype="float32")
+    model = build_model(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    B, S = 2, 64
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                cfg.vocab_size)
+    batch = {"tokens": tokens}
+    fs = model.frontend_shape(B)
+    if fs is not None:
+        batch["frontend"] = jax.random.normal(jax.random.PRNGKey(2), fs,
+                                              jnp.float32)
+    compiled, cost = lower_and_cost(
+        arch_id, lambda p, b: model.loss(p, b)[0], (params, batch), _mesh1())
+    measured = _time_compiled(compiled, (params, batch), reps)
+    feats = {mxu_key("bfloat16", shape_class(cost.flops_per_device)):
+             cost.flops_per_device / cc.chip.peak("bfloat16"),
+             HBM_KEY: cost.bytes_per_device / cc.chip.hbm_bw}
+    sample = CalibrationSample(
+        features=feats, measured_seconds=measured,
+        fixed_seconds=cc.dispatch_latency, label=f"arch:{arch_id}",
+        polluted=bool(cost.unknown_dtypes))
+    return sample, cost, measured
+
+
+def _arch_estimate(cost, cc) -> float:
+    bd = cost.time_breakdown(cc)
+    return bd.compute + bd.collective
+
+
+def _median_abs_dev(ratios: List[float]) -> float:
+    devs = sorted(abs(r - 1.0) for r in ratios)
+    n = len(devs)
+    return devs[n // 2] if n % 2 else 0.5 * (devs[n // 2 - 1] + devs[n // 2])
+
+
+def run(quick: bool = False) -> List[str]:
+    cc = cpu_host_config()
+    reps = 3 if quick else 5
+    rows: List[str] = []
+    samples: List[CalibrationSample] = []
+    # cell name -> (re-estimate under a given cc, measured seconds)
+    cells: Dict[str, Tuple] = {}
+
+    # ---- harvest: microbenchmarks (fit-only, not validation cells) ----
+    for n in (MATMUL_SIDES_QUICK if quick else MATMUL_SIDES):
+        s, _ = _matmul_sample(n, cc, reps)
+        samples.append(s)
+    samples.append(_stream_sample(cc, reps))
+
+    # ---- harvest: LinReg accuracy scenarios (bench_accuracy reuse) ----
+    for sc in (CPU_SCENARIOS[:1] if quick else CPU_SCENARIOS):
+        s, _, actual = _linreg_cell(sc, cc)
+        samples.append(s)
+        cells[sc.name] = (lambda c, sc=sc: _linreg_estimate(sc, c), actual)
+
+    # ---- harvest: the two cheap jit smoke archs -----------------------
+    for arch_id in SMOKE_ARCHS:
+        s, cost, measured = _arch_cell(arch_id, cc, reps)
+        samples.append(s)
+        cells[arch_id] = (lambda c, cost=cost: _arch_estimate(cost, c),
+                          measured)
+
+    # ---- fit ----------------------------------------------------------
+    fit = fit_profile(samples, chip_name=cc.chip.name)
+    rows.append(f"calib.fit,0,terms={len(fit.factors)};"
+                f"residual={fit.residual:.3f};samples={fit.n_samples};"
+                f"rejected={fit.n_rejected}")
+    rows.append(f"calib.profile,0,{fit.profile.describe()}")
+    cc_cal = cc.with_calibration(fit.profile)
+
+    # ---- validate: per-cell drift rows + the gate ---------------------
+    unc, cal = [], []
+    in_band = True
+    for name, (est_fn, measured) in cells.items():
+        r_unc = est_fn(cc) / measured
+        r_cal = est_fn(cc_cal) / measured
+        unc.append(r_unc)
+        cal.append(r_cal)
+        in_band &= RATIO_BAND[0] <= r_cal <= RATIO_BAND[1]
+        rows.append(f"calib.drift.{name},0,"
+                    f"ratio_uncal={r_unc:.3f};ratio_cal={r_cal:.3f}")
+    med_unc = _median_abs_dev(unc)
+    med_cal = _median_abs_dev(cal)
+    ok = in_band and med_cal < med_unc
+    rows.append(f"calib.drift,0,median_uncal={med_unc:.3f};"
+                f"median_cal={med_cal:.3f};"
+                f"band=[{RATIO_BAND[0]:.2f},{RATIO_BAND[1]:.2f}];"
+                f"{'PASS' if ok else 'FAIL'}")
+    return rows

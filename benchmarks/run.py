@@ -30,6 +30,13 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           fewer evaluations, and at least one cell won by a
                           disaggregated prefill/decode pool pair
   * bench_roofline      — (beyond paper) roofline terms per dry-run cell
+  * bench_calibrate     — the estimate↔reality loop: harvests measured
+                          runtimes (matmul/stream microbenches, the §3.4
+                          LinReg cells, the two cheap jit smoke archs),
+                          fits a CalibrationProfile, and gates on the
+                          median |est/measured − 1| strictly improving
+                          under the fitted profile
+                          (``calib.drift,...,PASS``)
 
 ``--quick`` shrinks every module to tiny configs (CI smoke tier); any
 module that raises prints an ``EXCEPTION`` row and the run exits non-zero.
@@ -57,9 +64,10 @@ def main() -> None:
                     help="run a single module (e.g. costing_speed)")
     args = ap.parse_args()
 
-    from benchmarks import (bench_accuracy, bench_costing_speed,
-                            bench_plan_costing, bench_resource_opt,
-                            bench_roofline, bench_scenarios, bench_serving)
+    from benchmarks import (bench_accuracy, bench_calibrate,
+                            bench_costing_speed, bench_plan_costing,
+                            bench_resource_opt, bench_roofline,
+                            bench_scenarios, bench_serving)
     mods = [
         ("scenarios", bench_scenarios),
         ("plan_costing", bench_plan_costing),
@@ -68,6 +76,7 @@ def main() -> None:
         ("resource_opt", bench_resource_opt),
         ("serving", bench_serving),
         ("roofline", bench_roofline),
+        ("calibrate", bench_calibrate),
     ]
     if args.only:
         mods = [(n, m) for n, m in mods if n == args.only]

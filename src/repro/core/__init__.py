@@ -24,8 +24,15 @@ map and ``docs/COST_MODEL.md`` for the formulas):
                          ((pool x slots x plan) co-search under p99-TTFT /
                          tokens-per-$ objectives; disaggregated pools)
   * scenario sweeps    — :class:`repro.core.sweep.SweepEngine`
+  * calibration        — :mod:`repro.core.calibration`
+                         (:class:`~repro.core.calibration.CalibrationProfile`
+                         fitted factors, :func:`~repro.core.calibration
+                         .fit_profile` least squares)
   * running example    — :mod:`repro.core.linreg` (paper §2, LinReg DS)
 """
+from repro.core.calibration import (CalibrationProfile, CalibrationSample,
+                                    FitResult, features_from_totals,
+                                    fit_profile, shape_class)
 from repro.core.cluster import (ClusterConfig, ChipSpec, CHIPS, TPU_V5E,
                                 TPU_V5P, TPU_V6E, CPU_HOST,
                                 single_pod_config, multi_pod_config,
@@ -67,6 +74,8 @@ from repro.core.workload import (SERVE_WORKLOADS, LengthDistribution,
                                  as_objective)
 
 __all__ = [
+    "CalibrationProfile", "CalibrationSample", "FitResult",
+    "features_from_totals", "fit_profile", "shape_class",
     "ClusterConfig", "ChipSpec", "CHIPS", "TPU_V5E", "TPU_V5P", "TPU_V6E",
     "CPU_HOST", "single_pod_config",
     "multi_pod_config", "single_chip_config", "cpu_host_config",

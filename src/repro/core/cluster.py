@@ -16,6 +16,8 @@ import dataclasses
 import math
 from typing import Dict, Optional, Tuple
 
+from repro.core.calibration import CalibrationProfile
+
 # ---------------------------------------------------------------------------
 # Per-chip hardware descriptions
 # ---------------------------------------------------------------------------
@@ -223,6 +225,13 @@ class ClusterConfig:
     # enables overlap (microbatched accumulation / async collectives).
     overlap_fraction: float = 0.0
 
+    # Fitted corrections for this chip type (repro.core.calibration) —
+    # achieved fractions measured by benchmarks/bench_calibrate.py.  None
+    # (the default) keeps the hand-set constants above bit-identical;
+    # every consulting property below checks ``calibration is None``
+    # first, so the uncalibrated path never changes.
+    calibration: Optional[CalibrationProfile] = None
+
     # --- memory budgets (the paper's memory-budget analogue) ---
     hbm_budget_fraction: float = 0.9   # usable HBM fraction (runtime reserve)
 
@@ -269,15 +278,76 @@ class ClusterConfig:
     # Effective bandwidths -------------------------------------------------
     @property
     def hbm_bw_eff(self) -> float:
+        cal = self.calibration
+        if cal is not None and cal.hbm_fraction is not None:
+            return self.chip.hbm_bw * cal.hbm_fraction
         return self.chip.hbm_bw * self.hbm_eff
 
     @property
     def ici_bw_eff(self) -> float:
+        cal = self.calibration
+        if cal is not None and cal.ici_fraction is not None:
+            return self.chip.ici_bw_per_link * cal.ici_fraction
         return self.chip.ici_bw_per_link * self.ici_eff
 
     @property
     def dcn_bw_eff(self) -> float:
+        cal = self.calibration
+        if cal is not None and cal.dcn_fraction is not None:
+            return self.chip.dcn_bw * cal.dcn_fraction
         return self.chip.dcn_bw * self.dcn_eff
+
+    # MXU efficiency -------------------------------------------------------
+    def mxu_util(self, dtype: str, flops: float) -> float:
+        """Achievable MXU fraction for one matmul of ``flops`` in
+        ``dtype``.  Uncalibrated: the log-linear ramp from
+        ``small_matmul_util`` (<=1e8 FLOPs) to ``matmul_util`` (>=1e10) —
+        smooth, so estimated time stays monotone in problem size (a step
+        function made bigger ops 'faster').  A calibration profile with a
+        fitted (dtype, shape-class) entry replaces the ramp value for
+        that class; uncovered classes keep the ramp."""
+        cal = self.calibration
+        if cal is not None:
+            f = cal.mxu_util(dtype, flops)
+            if f is not None:
+                return f
+        lo, hi = 1e8, 1e10
+        if flops <= lo:
+            return self.small_matmul_util
+        if flops >= hi:
+            return self.matmul_util
+        frac = (math.log10(flops) - 8.0) / 2.0
+        return self.small_matmul_util + frac * (self.matmul_util
+                                                - self.small_matmul_util)
+
+    def mxu_util_ceiling(self, dtype: str) -> float:
+        """The most generous MXU fraction ANY op of ``dtype`` can earn —
+        what a sound cluster floor must price FLOPs at.  Uncalibrated this
+        is ``max(matmul_util, small_matmul_util)`` (the ramp's endpoints
+        bound it); a calibrated profile's per-class table raises or lowers
+        it, but classes the table does not cover still fall back to the
+        ramp, so the uncalibrated ceiling stays folded in."""
+        ceiling = max(self.matmul_util, self.small_matmul_util)
+        cal = self.calibration
+        if cal is not None:
+            return cal.mxu_ceiling(dtype, ceiling)
+        return ceiling
+
+    def overlap(self, fabric: str) -> float:
+        """Effective overlap fraction for one fabric (``"ici"``/``"dcn"``).
+        The *gate* stays with the plan: ``overlap_fraction == 0`` (plan
+        did not enable overlap) always yields 0.  When the plan enables
+        overlap, a calibrated per-fabric achieved overlap replaces the
+        enabled value; uncalibrated both fabrics get ``overlap_fraction``
+        unchanged."""
+        if self.overlap_fraction == 0.0:
+            return 0.0
+        cal = self.calibration
+        if cal is not None:
+            o = cal.overlap_ici if fabric == "ici" else cal.overlap_dcn
+            if o is not None:
+                return o
+        return self.overlap_fraction
 
     def link_class(self, axis: str) -> str:
         """``"dcn"`` for the pod axis (crosses the data-center network),
@@ -342,7 +412,15 @@ class ClusterConfig:
             torus_links=tuple(torus_links) if torus_links else ())
 
     def with_overlap(self, fraction: float) -> "ClusterConfig":
+        # The calibration profile rides along (dataclasses.replace keeps
+        # every other field), so an overlap-enabled copy of a calibrated
+        # config still consults the fitted per-fabric overlap values.
         return dataclasses.replace(self, overlap_fraction=float(fraction))
+
+    def with_calibration(self, profile: Optional[CalibrationProfile]
+                         ) -> "ClusterConfig":
+        """Attach (or with ``None`` detach) a fitted calibration profile."""
+        return dataclasses.replace(self, calibration=profile)
 
     def fingerprint(self) -> Tuple:
         """Hashable identity over every field the cost model may consult —
@@ -367,7 +445,11 @@ class ClusterConfig:
                   tuple(self.default_branch_weights),
                   self.job_startup_seconds, self.checkpoint_restore_seconds,
                   self.preemption_rate_per_chip_hour,
-                  self.checkpoint_interval_steps)
+                  self.checkpoint_interval_steps,
+                  # calibrated and uncalibrated costs must never share a
+                  # PlanCostCache entry
+                  None if self.calibration is None
+                  else self.calibration.fingerprint())
             object.__setattr__(self, "_fp", fp)
         return fp
 

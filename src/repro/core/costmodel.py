@@ -554,7 +554,7 @@ class CostEstimator:
         bytes_moved = prof.bytes / n_shards
         dtype = stats[0].dtype if stats else "bfloat16"
         if prof.util == "mxu":
-            util = _mxu_util(cc, prof.flops)
+            util = cc.mxu_util(dtype, prof.flops)
             peak = cc.chip.peak(dtype) * util
         else:
             peak = cc.chip.peak("float32") * VPU_FRACTION
@@ -603,14 +603,25 @@ class CostEstimator:
             raise KeyError(f"collective on undefined var '{inst.var}'")
         t = 0.0
         wire = {"ici": 0.0, "dcn": 0.0}
+        t_fab = {"ici": 0.0, "dcn": 0.0}
         phases = collective_phases(inst.kind, payload,
                                    [cc.axis_size(ax) for ax in inst.axes])
         for ax, (w, hops) in zip(inst.axes, phases):
             # axis_bandwidth folds in the torus link count (2 per axis on a
             # 3D-torus mesh, 1 on the calibrated flat model)
-            t += w / cc.axis_bandwidth(ax) + hops * cc.collective_phase_latency
-            wire[cc.link_class(ax)] += w
-        t *= (1.0 - cc.overlap_fraction)
+            dt = w / cc.axis_bandwidth(ax) + hops * cc.collective_phase_latency
+            t += dt
+            cls = cc.link_class(ax)
+            t_fab[cls] += dt
+            wire[cls] += w
+        o_ici, o_dcn = cc.overlap("ici"), cc.overlap("dcn")
+        if o_ici == o_dcn:
+            # one discount (always the uncalibrated case): keep the exact
+            # pre-calibration accumulation order, bit-identical
+            t *= (1.0 - o_ici)
+        else:
+            # calibrated per-fabric overlap: discount each fabric's share
+            t = t_fab["ici"] * (1.0 - o_ici) + t_fab["dcn"] * (1.0 - o_dcn)
         if inst.output and st is not None:
             symtab.createvar(inst.output, dataclasses.replace(st))
         return self._leaf(inst, CostBreakdown(collective=t), symtab,
@@ -634,9 +645,9 @@ class CostEstimator:
             raise KeyError(f"p2p on undefined var '{inst.var}'")
         n = cc.axis_size(inst.axis)
         wire, _ = p2p_wire(payload, n)
-        t = p2p_cost(payload, n, cc.p2p_bw(inst.axis),
-                     cc.collective_phase_latency) * (1.0 - cc.overlap_fraction)
         cls = cc.link_class(inst.axis)
+        t = p2p_cost(payload, n, cc.p2p_bw(inst.axis),
+                     cc.collective_phase_latency) * (1.0 - cc.overlap(cls))
         return self._leaf(inst, CostBreakdown(collective=t), symtab,
                           totals=ProgramTotals(
                               ici_bytes=wire if cls == "ici" else 0.0,
@@ -649,17 +660,29 @@ class CostEstimator:
         for w in inst.writes:
             if w in symtab:
                 symtab.touch_hbm(w)
+        # Compiled HLO does not name mesh axes: collectives are attributed
+        # to a fabric by group size (CollectiveStat.attribute_axis), and a
+        # collective that demonstrably crossed the DCN pod axis takes the
+        # DCN overlap discount; everything else rides ICI.
+        cc = self.cc
+        t_fab = {"ici": 0.0, "dcn": 0.0}
+        wire = {"ici": 0.0, "dcn": 0.0}
+        for c in getattr(cost_rec, "collectives", ()):
+            ax = c.attribute_axis(cc)
+            cls = cc.link_class(ax) if ax is not None else "ici"
+            t_fab[cls] += c.time(cc, axis=ax)
+            wire[cls] += collective_wire(c.kind, c.operand_bytes,
+                                         c.group_size)[0]
+        coll_t = (t_fab["ici"] * (1.0 - cc.overlap("ici"))
+                  + t_fab["dcn"] * (1.0 - cc.overlap("dcn")))
         cost = CostBreakdown(io=io_t + bd.io, compute=bd.compute,
-                             collective=bd.collective * (1.0 - self.cc.overlap_fraction),
+                             collective=coll_t,
                              latency=bd.latency + self.cc.dispatch_latency)
-        # Compiled modules report bf16-dominated MXU work; collectives in
-        # generated HLO ride ICI (time_breakdown prices them at ici_bw_eff).
-        ici = sum(collective_wire(c.kind, c.operand_bytes, c.group_size)[0]
-                  for c in getattr(cost_rec, "collectives", ()))
+        # Compiled modules report bf16-dominated MXU work.
         totals = ProgramTotals(
             mxu_flops={"bfloat16": getattr(cost_rec, "flops_per_device", 0.0)},
             hbm_bytes=getattr(cost_rec, "bytes_per_device", 0.0),
-            ici_bytes=ici)
+            ici_bytes=wire["ici"], dcn_bytes=wire["dcn"])
         return self._leaf(inst, cost, symtab, totals=totals,
                           note=f"from compiled HLO: {cost_rec.summary()}")
 
@@ -677,17 +700,12 @@ class CostEstimator:
         return node
 
 
-def _mxu_util(cc: ClusterConfig, flops: float) -> float:
-    """Achievable MXU fraction, ramping log-linearly from small_matmul_util
-    (<=1e8 FLOPs) to matmul_util (>=1e10).  Smooth, so estimated time stays
-    monotone in problem size (a step function made bigger ops 'faster')."""
-    lo, hi = 1e8, 1e10
-    if flops <= lo:
-        return cc.small_matmul_util
-    if flops >= hi:
-        return cc.matmul_util
-    frac = (math.log10(flops) - 8.0) / 2.0
-    return cc.small_matmul_util + frac * (cc.matmul_util - cc.small_matmul_util)
+def _mxu_util(cc: ClusterConfig, flops: float,
+              dtype: str = "bfloat16") -> float:
+    """Achievable MXU fraction — delegates to ``cc.mxu_util`` (the ramp
+    lives on :class:`ClusterConfig` now so calibration profiles can
+    replace it per dtype and shape class)."""
+    return cc.mxu_util(dtype, flops)
 
 
 def _path_legs(src: MemState, dst: MemState) -> List[str]:

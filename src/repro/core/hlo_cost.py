@@ -32,26 +32,45 @@ COLLECTIVE_OPS = (
 )
 
 _HLO_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "pred": 1, "s8": 1, "u8": 1,
     "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
     "s32": 4, "u32": 4, "f32": 4,
     "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+    # sub-byte
+    "s4": 0.5, "u4": 0.5, "s2": 0.25, "u2": 0.25, "f4e2m1fn": 0.5,
+    # fp8 family (incl. the fnuz/b11 variants and the scale dtype)
+    "f8e4m3": 1, "f8e4m3fn": 1, "f8e4m3fnuz": 1, "f8e4m3b11fnuz": 1,
+    "f8e5m2": 1, "f8e5m2fnuz": 1, "f8e3m4": 1, "f8e8m0fnu": 1,
+    # zero-size control types
+    "token": 0,
 }
 
-_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9]+m[0-9]+(?:fn)?)?)\[([0-9,]*)\]")
+# dtype token: letters+digits with an optional exponent/mantissa suffix
+# tail ("fn", "fnuz", "b11fnuz", ...), immediately followed by [dims]
+_SHAPE_RE = re.compile(r"([a-z]+[0-9]*(?:e[0-9]+m[0-9]+[a-z0-9]*)?)\[([0-9,]*)\]")
 _DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(\([^)]*\)|[^ ]+)\s+([\w\-]+)")
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
 _EXPLICIT_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
 
 
-def _shape_bytes(sig: str) -> float:
-    """Sum byte sizes of every dtype[dims] token in a type signature."""
+def _shape_bytes(sig: str, unknown: Optional[set] = None) -> float:
+    """Sum byte sizes of every dtype[dims] token in a type signature.
+
+    A dtype missing from the table used to be *silently skipped*, which
+    undercounted collective payloads and corrupted any calibration profile
+    fitted from them.  Unknowns now take a conservative 4-byte estimate
+    and are reported through ``unknown`` (a set the caller may pass) so
+    downstream consumers — :attr:`CompiledCost.unknown_dtypes` — can
+    reject polluted samples instead of fitting garbage.
+    """
     total = 0.0
     for dtype, dims in _SHAPE_RE.findall(sig):
         nbytes = _HLO_DTYPE_BYTES.get(dtype)
         if nbytes is None:
-            continue
+            nbytes = 4
+            if unknown is not None:
+                unknown.add(dtype)
         cells = 1
         if dims:
             for d in dims.split(","):
@@ -68,12 +87,48 @@ class CollectiveStat:
     group_size: int
     hlo_name: str = ""
 
+    def attribute_axis(self, cc: ClusterConfig) -> Optional[str]:
+        """Best-effort mesh-axis attribution of an unnamed collective by
+        its replica-group size.  Compiled HLO never names mesh axes, but
+        the group size constrains which fabric the payload rode:
+
+        * a group exactly the size of one ICI axis is priced on that axis
+          (the most generous one when several match — consistent with the
+          best-case default);
+        * a group exactly the size of a DCN ("pod") axis crossed DCN;
+        * a group spanning MORE chips than all ICI axes combined cannot
+          have stayed on the torus — it crossed the pod axis, and pricing
+          it at torus-doubled ICI rates flatters every DCN-bound cell;
+        * anything else (a multi-axis ICI group) stays unattributed
+          (``None`` — callers fall back to best-case ICI).
+        """
+        g = self.group_size
+        if g <= 1:
+            return None
+        ici_axes = [a for a in cc.mesh_axes if cc.link_class(a) == "ici"]
+        dcn_axes = [a for a in cc.mesh_axes if cc.link_class(a) == "dcn"]
+        exact_ici = [a for a in ici_axes if cc.axis_size(a) == g]
+        if exact_ici:
+            return max(exact_ici, key=cc.axis_links)
+        exact_dcn = [a for a in dcn_axes if cc.axis_size(a) == g]
+        if exact_dcn:
+            return exact_dcn[0]
+        ici_chips = 1
+        for a in ici_axes:
+            ici_chips *= cc.axis_size(a)
+        if g > ici_chips and dcn_axes:
+            return dcn_axes[0]
+        return None
+
     def time(self, cc: ClusterConfig, axis: Optional[str] = None) -> float:
         # Topology-aware rate via the links= form (2 links/axis on a
         # 3D-torus mesh) — the same rate the analytical estimator charges,
         # so JitCall-embedded and native plans stay commensurable on torus
-        # meshes.  Unattributed collectives (compiled HLO does not name
-        # mesh axes) assume ICI at the mesh's best per-axis link count.
+        # meshes.  Unnamed collectives are attributed by group size
+        # (attribute_axis); only genuinely ambiguous multi-axis ICI groups
+        # keep the best-case ICI assumption at max_ici_links.
+        if axis is None:
+            axis = self.attribute_axis(cc)
         if axis is not None:
             bw, links = cc.link_bw(axis), cc.axis_links(axis)
         else:
@@ -82,13 +137,17 @@ class CollectiveStat:
                                bw, cc.collective_phase_latency, links=links)
 
 
-def parse_collectives(hlo_text: str) -> List[CollectiveStat]:
+def parse_collectives(hlo_text: str,
+                      unknown_out: Optional[set] = None
+                      ) -> List[CollectiveStat]:
     """Extract every collective op's payload from optimized HLO text.
 
     Operand shapes are not inline in modern HLO dumps, so we first build a
     name -> result-type map over all instruction definitions, then resolve
     each collective's operand list against it.  ``*-done`` ops are skipped
-    (their payload was counted at ``*-start``).
+    (their payload was counted at ``*-start``).  Dtypes missing from the
+    byte table are counted at a conservative 4 bytes and collected into
+    ``unknown_out`` (when given) so callers can flag polluted payloads.
     """
     shapes: Dict[str, str] = {}
     coll_lines: List[Tuple[str, str, str, str]] = []  # (name, sig, opcode, line)
@@ -114,8 +173,9 @@ def parse_collectives(hlo_text: str) -> List[CollectiveStat]:
             args_str = ""
         operand_bytes = 0.0
         for op_name in _OPERAND_RE.findall(args_str):
-            operand_bytes += _shape_bytes(shapes.get(op_name, ""))
-        result_bytes = _shape_bytes(sig)
+            operand_bytes += _shape_bytes(shapes.get(op_name, ""),
+                                          unknown=unknown_out)
+        result_bytes = _shape_bytes(sig, unknown=unknown_out)
         if operand_bytes == 0.0:
             # parameter-less forms: fall back to result size
             operand_bytes = result_bytes
@@ -145,6 +205,10 @@ class CompiledCost:
     temp_bytes: float = 0.0
     peak_memory_bytes: float = 0.0
     dispatch_count: int = 1          # jit calls represented (for latency)
+    # dtype tokens the HLO walk could not size (counted at a conservative
+    # 4 bytes each) — non-empty means collective payloads are estimates,
+    # and calibration fitting must reject this record as polluted.
+    unknown_dtypes: List[str] = dataclasses.field(default_factory=list)
 
     # ------------------------------------------------------------- derive
     @property
@@ -193,19 +257,21 @@ class CompiledCost:
         """Estimated wall time of one call under ``cc`` (for JitCall)."""
         from repro.core.costmodel import CostBreakdown  # local: avoid cycle
         r = self.roofline(cc)
-        # achievable (not peak) rates for the time estimate
-        compute = max(self.flops_per_device / (cc.chip.peak("bfloat16") * cc.matmul_util),
+        # achievable (not peak) rates for the time estimate; compiled
+        # modules report bf16-dominated MXU work, and cc.mxu_util routes
+        # through the shape-class ramp / fitted calibration profile
+        compute = max(self.flops_per_device
+                      / (cc.chip.peak("bfloat16")
+                         * cc.mxu_util("bfloat16", self.flops_per_device)),
                       self.bytes_per_device / cc.hbm_bw_eff)
-        # compiled HLO does not name mesh axes, so collectives ride ICI at
-        # the mesh's best per-axis link count — the same torus-aware rate
-        # the analytical estimator charges, keeping JitCall-embedded plans
-        # commensurable with native ones on 3D meshes (on 2D meshes
-        # max_ici_links == 1 and this is exactly the old rate)
-        collective = sum(
-            collective_cost(c.kind, c.operand_bytes, c.group_size,
-                            cc.ici_bw_eff, cc.collective_phase_latency,
-                            links=cc.max_ici_links)
-            for c in self.collectives)
+        # Compiled HLO does not name mesh axes; CollectiveStat.time
+        # attributes each collective to a fabric by replica-group size
+        # (exact ICI-axis matches ride that axis's torus-aware rate, a
+        # group spanning more chips than the whole torus is priced at DCN
+        # rates, ambiguous multi-axis ICI groups keep the best-case ICI
+        # assumption) — a single-axis 2D/3D ICI mesh prices exactly as
+        # the analytical estimator would.
+        collective = sum(c.time(cc) for c in self.collectives)
         return CostBreakdown(io=0.0, compute=compute, collective=collective,
                              latency=cc.dispatch_latency * self.dispatch_count)
 
@@ -236,7 +302,8 @@ def from_compiled(name: str, compiled, num_devices: int,
     byts = float(ca.get("bytes accessed", 0.0))
     ma = compiled.memory_analysis()
     text = compiled.as_text()
-    colls = parse_collectives(text)
+    unknown: set = set()
+    colls = parse_collectives(text, unknown_out=unknown)
     return CompiledCost(
         name=name,
         flops_per_device=flops,
@@ -248,6 +315,7 @@ def from_compiled(name: str, compiled, num_devices: int,
         temp_bytes=float(getattr(ma, "temp_size_in_bytes", 0)),
         peak_memory_bytes=float(getattr(ma, "peak_memory_in_bytes", 0) or 0),
         dispatch_count=dispatch_count,
+        unknown_dtypes=sorted(unknown),
     )
 
 

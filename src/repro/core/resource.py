@@ -339,11 +339,22 @@ def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
     ``(wire/link_bw + hops·latency) · (1 − overlap)`` plus nonnegative
     IO/latency terms; this floor keeps only
 
-      ``max(Σ t_flops, Σ t_mem) + Σ wire/axis_bw · (1 − OVERLAP_FRACTION)``
+      ``max(Σ t_flops, Σ t_mem)
+        + wire_ici/ici_bw_best · (1 − o_ici)
+        + wire_dcn/dcn_bw_eff · (1 − o_dcn)``
 
-    at the most generous rates (``matmul_util`` for every MXU op, effective
-    link bandwidths at the mesh's *best* per-axis link count, no phase
-    latency), each a term-wise lower bound of what the estimator charges.
+    at the most generous rates (the per-dtype MXU ceiling
+    ``cc.mxu_util_ceiling`` for every MXU op, effective link bandwidths at
+    the mesh's *best* per-axis link count, no phase latency, the
+    per-fabric overlap discount o_ici/o_dcn of an overlap-*enabled* plan),
+    each a term-wise lower bound of what the estimator charges.  The
+    per-fabric split matters once a :class:`CalibrationProfile` fits
+    different overlap for ICI and DCN: lumping both fabrics under one
+    discount would over- or under-discount one of them.  Every rate above
+    consults ``cc.calibration`` exactly as the estimator does, so the
+    floor stays a term-wise bound under ANY profile — and with fitted
+    factors ≤ 1 each calibrated rate only drops below its hand-set value,
+    never above peak (see docs/COST_MODEL.md §Calibration).
     On a 3D-torus mesh the estimator prices each ICI axis at up to
     ``ici_bw_eff · axis_links`` (wrapped rings expose 2 links), so the
     floor divides the pooled ICI wire volume by ``ici_bw_eff ·
@@ -371,12 +382,20 @@ def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
     low), so the pipeline floor can only *drop* below the sequential
     roofline where pipelining genuinely helps — verified by full plan
     enumeration in tests/test_pipeline.py."""
-    util = max(cc.matmul_util, cc.small_matmul_util)
     vpu_peak = cc.chip.peak("float32") * VPU_FRACTION
     ici_bw_best = cc.ici_bw_eff * cc.max_ici_links
+    # The wire discount must match the most generous overlap any plan can
+    # earn — per fabric, because a calibrated profile may hide more ICI
+    # than DCN time (or vice versa).  Overlap-enabled plans are costed
+    # under with_overlap(OVERLAP_FRACTION), whose cc.overlap(fabric)
+    # resolves the calibrated per-fabric value; uncalibrated both fabrics
+    # give exactly OVERLAP_FRACTION and the lumped pre-calibration form is
+    # kept bit-identical.
+    occ = cc.with_overlap(OVERLAP_FRACTION)
+    o_ici, o_dcn = occ.overlap("ici"), occ.overlap("dcn")
     best = float("inf")
     for t, pp_s in _floor_totals(arch, shape, cc.mesh_shape, cc.mesh_axes):
-        t_flops = sum(f / (cc.chip.peak(dt) * util)
+        t_flops = sum(f / (cc.chip.peak(dt) * cc.mxu_util_ceiling(dt))
                       for dt, f in t.mxu_flops.items())
         t_flops += t.vpu_flops / vpu_peak
         t_mem = t.hbm_bytes / cc.hbm_bw_eff
@@ -384,8 +403,12 @@ def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
             cand = (max(t_flops, t_mem) / pp_s
                     * (1.0 + (pp_s - 1) / MAX_MICROBATCHES))
         else:
-            t_coll = (t.ici_bytes / ici_bw_best
-                      + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - OVERLAP_FRACTION)
+            if o_ici == o_dcn:
+                t_coll = (t.ici_bytes / ici_bw_best
+                          + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - o_ici)
+            else:
+                t_coll = (t.ici_bytes / ici_bw_best * (1.0 - o_ici)
+                          + t.dcn_bytes / cc.dcn_bw_eff * (1.0 - o_dcn))
             cand = max(t_flops, t_mem) + t_coll
         best = min(best, cand)
     return best

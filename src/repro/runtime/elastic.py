@@ -14,6 +14,7 @@ from typing import Any, Optional, Tuple, Union
 import jax
 
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.calibration import CalibrationProfile
 from repro.core.cluster import ClusterConfig
 from repro.core.costmodel import PlanCostCache
 from repro.core.planner import PlanDecision, ShardingPlan, choose_plan
@@ -39,7 +40,9 @@ def replan(arch: ArchConfig,
            available_chips: Optional[int] = None,
            objective: Union[str, Objective] = "step_time",
            steps_per_job: int = DEFAULT_STEPS_PER_JOB,
-           cache: Optional[PlanCostCache] = None) -> ElasticPlan:
+           cache: Optional[PlanCostCache] = None,
+           calibration: Optional[CalibrationProfile] = None,
+           candidates=None) -> ElasticPlan:
     """Re-cost the program for a resized cluster.
 
     Pass ``new_mesh_shape`` to pin the mesh explicitly (the old behavior),
@@ -58,7 +61,23 @@ def replan(arch: ArchConfig,
     :class:`ServeWorkload`) and the objective a typed :class:`Objective`:
     a serving fleet that loses a slice replans its (pool x slots x plan)
     schedule under its traffic model, e.g. ``objective="ttft_p99"``.
+
+    ``calibration`` attaches (or, as ``old_cc.calibration`` does by
+    default, carries over) a fitted :class:`CalibrationProfile`: the
+    replan is then priced under measured rates — this is the path the
+    online recalibrator (:class:`repro.runtime.train_loop
+    .OnlineRecalibrator`) takes when drift flips the plan ranking.  Note
+    ``with_mesh``/``dataclasses.replace`` preserve ``old_cc.calibration``
+    on every derived config, so a calibrated job stays calibrated across
+    resizes without re-passing the profile.  ``candidates`` restricts the
+    plan search to a vetted plan family (a sequence of
+    :class:`ShardingPlan`; plain ``ShapeConfig`` workloads only) — the
+    online recalibrator passes its own family through here so the
+    drift-triggered replan can never jump outside the plans operations
+    has signed off on.
     """
+    if calibration is not None:
+        old_cc = dataclasses.replace(old_cc, calibration=calibration)
     if new_mesh_shape is not None:
         axes = new_mesh_axes or old_cc.mesh_axes
         # A pinned 3-axis mesh on a 3D-torus-capable chip gets the same
@@ -77,7 +96,7 @@ def replan(arch: ArchConfig,
             decision = best.decision
         else:
             decision = choose_plan(arch, shape, new_cc, top_k=1,
-                                   cache=cache)[0]
+                                   candidates=candidates, cache=cache)[0]
     elif available_chips is not None:
         cands = mesh_candidates(old_cc.chip, available_chips, base=old_cc)
         if not cands:

@@ -8,6 +8,12 @@ runtime plan that ``hlo_cost`` can cost (the paper's object of study).
 ``Trainer`` adds the operational shell: cost-based plan selection,
 sharded data pipeline, async checkpointing + resume, straggler monitoring,
 and elastic re-mesh on cluster-size change.
+
+``OnlineRecalibrator`` closes the estimate↔reality loop at runtime: it
+watches the measured/estimated step-time ratio (EWMA), refits a
+:class:`repro.core.calibration.CalibrationProfile` when the drift leaves
+a band, and — only when the *re-costed plan ranking changes* — routes
+through :func:`repro.runtime.elastic.replan` to switch plans.
 """
 from __future__ import annotations
 
@@ -15,15 +21,19 @@ import dataclasses
 import os
 import time
 from functools import partial
-from typing import Any, Callable, Dict, Optional, Tuple
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.checkpoint import store
 from repro.configs.base import ArchConfig, ShapeConfig
+from repro.core.calibration import (CalibrationProfile, CalibrationSample,
+                                    features_from_totals, fit_profile)
 from repro.core.cluster import ClusterConfig
-from repro.core.planner import ShardingPlan, choose_plan
+from repro.core.costmodel import (PlanCostCache, VPU_FRACTION, estimate)
+from repro.core.planner import (OVERLAP_FRACTION, ShardingPlan,
+                                build_step_program, choose_plan)
 from repro.data.pipeline import make_pipeline
 from repro.models.model import Model, build_model
 from repro.optim import adamw, compress
@@ -77,6 +87,154 @@ def make_train_step(model: Model, opt_cfg: adamw.AdamWConfig,
     return train_step
 
 
+# ---------------------------------------------------------------------------
+# Online recalibration (estimate↔reality loop)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RecalibrationEvent:
+    """One drift-triggered refit: the EWMA ratio that tripped the band,
+    the profile fitted from it, and — when the re-costed ranking changed —
+    the elastic replan that switches the job onto the new winner."""
+
+    step: int
+    ratio: float                        # EWMA measured/estimated at refit
+    profile: CalibrationProfile
+    replanned: bool
+    old_plan: str
+    new_plan: str
+    elastic: Optional[Any] = None       # ElasticPlan when replanned
+
+
+class OnlineRecalibrator:
+    """Maintains an EWMA of measured/estimated step time and refits the
+    calibration profile when drift leaves the band.
+
+    The refit path: the incumbent plan's charged :class:`ProgramTotals`
+    become one peak-rate feature vector (``features_from_totals``), the
+    EWMA measured time its target, and :func:`fit_profile`'s min-norm
+    least squares distributes the drift across the plan's term mix —
+    comm-heavy drift lands mostly on the fabric factors, compute-heavy
+    drift on the MXU factors.  The candidate ranking is then re-costed
+    under the fitted profile (through the shared :class:`PlanCostCache`;
+    the calibration-aware cluster fingerprint keeps calibrated and
+    uncalibrated entries apart) and :func:`repro.runtime.elastic.replan`
+    fires only when the winner actually changes — a uniform slowdown
+    rescales every candidate and changes nothing, which is exactly the
+    "not merely when the ratio moves" contract.
+    """
+
+    def __init__(self, arch: ArchConfig, shape: ShapeConfig,
+                 cc: ClusterConfig, *,
+                 plan: Optional[ShardingPlan] = None,
+                 band: Tuple[float, float] = (0.85, 1.18),
+                 alpha: float = 0.25,
+                 min_observations: int = 8,
+                 cooldown_steps: int = 16,
+                 candidates: Optional[List[ShardingPlan]] = None,
+                 cache: Optional[PlanCostCache] = None):
+        self.arch, self.shape = arch, shape
+        self.cc = cc
+        self.band = band
+        self.alpha = alpha
+        self.min_observations = min_observations
+        self.cooldown_steps = cooldown_steps
+        # an optional vetted plan family: both the ranking check and the
+        # elastic replan stay inside it (None = the full enumeration)
+        self.candidates = list(candidates) if candidates is not None else None
+        self.cache = cache if cache is not None else PlanCostCache()
+        self.events: List[RecalibrationEvent] = []
+        if plan is None:
+            plan = choose_plan(arch, shape, cc, top_k=1,
+                               candidates=self.candidates,
+                               cache=self.cache)[0].plan
+        self._n = 0
+        self._step = 0
+        self._last_refit: Optional[int] = None
+        self.ewma: Optional[float] = None
+        self._set_plan(plan)
+
+    # ------------------------------------------------------------------
+    def _set_plan(self, plan: ShardingPlan) -> None:
+        """Re-cost the incumbent plan under the current (possibly
+        calibrated) cc: the estimate the measured ratio is taken against,
+        its charged totals (the refit features), and the non-calibratable
+        part of the estimate (VPU work, IO, latency)."""
+        cc_p = self.cc.with_overlap(OVERLAP_FRACTION if plan.overlap else 0.0)
+        est = estimate(build_step_program(self.arch, self.shape, plan, cc_p),
+                       cc_p, cache=self.cache)
+        self.plan = plan
+        self.estimated = est.total
+        self._totals = est.totals
+        vpu_t = est.totals.vpu_flops / (cc_p.chip.peak("float32")
+                                        * VPU_FRACTION)
+        self._fixed = est.breakdown.io + est.breakdown.latency + vpu_t
+
+    # ------------------------------------------------------------------
+    def observe(self, measured_seconds: float,
+                step: Optional[int] = None) -> Optional[RecalibrationEvent]:
+        """Feed one measured step time; returns a
+        :class:`RecalibrationEvent` when drift triggered a refit."""
+        self._n += 1
+        self._step = step if step is not None else self._n
+        ratio = measured_seconds / self.estimated
+        self.ewma = (ratio if self.ewma is None
+                     else (1.0 - self.alpha) * self.ewma + self.alpha * ratio)
+        if self._n < self.min_observations:
+            return None
+        if self.band[0] <= self.ewma <= self.band[1]:
+            return None
+        if (self._last_refit is not None
+                and self._step - self._last_refit < self.cooldown_steps):
+            return None
+        return self._refit()
+
+    # ------------------------------------------------------------------
+    def _refit(self) -> RecalibrationEvent:
+        from repro.runtime import elastic
+
+        self._last_refit = self._step
+        measured = self.ewma * self.estimated
+        sample = CalibrationSample(
+            features=features_from_totals(self._totals, self.cc),
+            measured_seconds=measured,
+            estimated_seconds=self.estimated,
+            # the fixed offset can't exceed the measurement it is
+            # subtracted from (clock noise on very fast steps)
+            fixed_seconds=min(self._fixed, 0.5 * measured),
+            label=f"online:{self.plan.name}@{self._step}")
+        profile = fit_profile([sample], chip_name=self.cc.chip.name).profile
+        new_cc = self.cc.with_calibration(profile)
+        winner = choose_plan(self.arch, self.shape, new_cc, top_k=1,
+                             candidates=self.candidates,
+                             cache=self.cache)[0].plan
+        replanned = winner != self.plan
+        event = RecalibrationEvent(
+            step=self._step, ratio=self.ewma, profile=profile,
+            replanned=replanned, old_plan=self.plan.describe(),
+            new_plan=winner.describe())
+        old_plan = self.plan
+        self.cc = new_cc
+        if replanned:
+            event.elastic = elastic.replan(
+                self.arch, self.shape, old_cc=new_cc,
+                new_mesh_shape=new_cc.mesh_shape,
+                new_mesh_axes=new_cc.mesh_axes,
+                candidates=self.candidates, cache=self.cache)
+            self.cc = event.elastic.cc
+            self._set_plan(event.elastic.decision.plan)
+        else:
+            self._set_plan(old_plan)
+        # rebase the EWMA against the calibrated estimate: the fit just
+        # explained the drift, so the loop restarts near ratio 1 and only
+        # *new* drift can trip the band again
+        self.ewma = measured / self.estimated if not replanned else None
+        self._n = 0 if replanned else self._n
+        self.events.append(event)
+        return event
+
+
 @dataclasses.dataclass
 class TrainerConfig:
     steps: int = 100
@@ -87,6 +245,10 @@ class TrainerConfig:
     compress_scheme: str = "none"
     use_kernel: bool = False
     donate: bool = True
+    # Enable the online estimate↔reality loop: an OnlineRecalibrator
+    # watches measured step times and refits the calibration profile when
+    # drift leaves its band (see OnlineRecalibrator for the replan rule).
+    recalibrate: bool = False
 
 
 class Trainer:
@@ -127,6 +289,9 @@ class Trainer:
         donate = (0, 1) if self.tcfg.donate else ()
         self.train_step = jax.jit(step_fn, donate_argnums=donate)
         self.monitor = StepTimeMonitor()
+        self.recalibrator = (OnlineRecalibrator(arch, shape, cc,
+                                                plan=self.plan)
+                             if self.tcfg.recalibrate else None)
         self.checkpointer = (store.AsyncCheckpointer(self.tcfg.ckpt_dir)
                              if self.tcfg.ckpt_dir else None)
 
@@ -179,6 +344,11 @@ class Trainer:
                     metrics = {k: float(v) for k, v in metrics.items()}
                     dt = time.perf_counter() - t0
                     self.monitor.record({0: dt})
+                    if self.recalibrator is not None:
+                        # observation only: acting on a replan (restore
+                        # under new shardings) stays with the caller, who
+                        # reads .events / the returned history
+                        self.recalibrator.observe(dt, step=gstep)
                     if gstep % self.tcfg.log_every == 0:
                         history.append({"step": gstep, "time_s": dt, **metrics})
                         if on_metrics:

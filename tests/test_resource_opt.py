@@ -101,6 +101,36 @@ def test_cluster_floor_is_sound():
                                                plan.describe())
 
 
+def test_cluster_floor_is_sound_under_calibration():
+    """The floor/plan soundness invariant must survive ANY profile with
+    factors <= 1 — including asymmetric per-fabric overlap, which is what
+    the per-fabric wire split in ``cluster_floor_time`` exists for (see
+    docs/COST_MODEL.md §Calibration).  Full enumeration per cluster: the
+    calibrated floor stays below every calibrated plan cost."""
+    from repro.core.calibration import SHAPE_CLASSES, CalibrationProfile
+
+    profile = CalibrationProfile(
+        chip_name="any",
+        mxu={"bfloat16": {c: f for c, f in zip(SHAPE_CLASSES,
+                                               (0.22, 0.48, 0.67))},
+             "float32": {"large": 0.6}},
+        hbm_fraction=0.71, ici_fraction=0.55, dcn_fraction=0.62,
+        overlap_ici=0.45, overlap_dcn=0.15)    # deliberately asymmetric
+    cache = PlanCostCache()
+    arch = get_config("qwen1.5-0.5b")
+    for shape_id in GRID_SHAPES:
+        shape = SHAPES[shape_id]
+        for cand in VERIFY_CLUSTERS[::3]:
+            cc = cand.cc.with_calibration(profile)
+            floor = cluster_floor_time(arch, shape, cc)
+            assert floor > 0
+            for plan in enumerate_plans(arch, shape, cc):
+                costed = estimate(build_step_program(arch, shape, plan, cc),
+                                  cc, cache=cache)
+                assert costed.total >= floor, (shape_id, cand.cid,
+                                               plan.describe())
+
+
 def test_decode_cells_prune_strictly_more_than_before():
     """Decode-shaped cells must prune strictly more clusters than the PR-2
     optimizer managed.  Per-step $ is nearly flat across clusters for
