@@ -13,8 +13,11 @@ Prints ``name,us_per_call,derived`` CSV rows:
   * bench_costing_speed — §2 "<0.5 ms to generate+cost a plan", plus the
                           plan-search gates: ``candidate_set`` (cached
                           engine must be >=5x the uncached path on an
-                          enumerated candidate set, bit-exact) and
-                          ``beam_matches_exhaustive`` per config
+                          enumerated candidate set, bit-exact),
+                          ``candidate_throughput`` (the lane-vector batched
+                          engine must be >=10x the uncached scalar walk on
+                          an expanded knob grid, bit-exact, same winner)
+                          and ``beam_matches_exhaustive`` per config
   * bench_resource_opt  — the cluster/plan co-search gates: the resource
                           optimizer must return the exhaustive
                           (cluster x plan) winner (``MATCH`` per cell) with

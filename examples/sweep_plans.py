@@ -55,7 +55,7 @@ def main():
                     default=DEFAULT_STEPS_PER_JOB,
                     help="job length priced by --objective job_cost")
     ap.add_argument("--search", default="beam",
-                    choices=["beam", "exhaustive"])
+                    choices=["beam", "exhaustive", "batched"])
     args = ap.parse_args()
 
     engine = SweepEngine(search=args.search)

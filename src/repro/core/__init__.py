@@ -12,7 +12,14 @@ map and ``docs/COST_MODEL.md`` for the formulas):
   * EXPLAIN            — :func:`repro.core.explain.explain`
   * plan optimizer     — :func:`repro.core.planner.choose_plan` (staged beam
                          over sharding plans, memoized via
-                         :class:`~repro.core.costmodel.PlanCostCache`)
+                         :class:`~repro.core.costmodel.PlanCostCache`;
+                         ``search="batched"`` costs one lane-vector walk
+                         per structure group via
+                         :func:`~repro.core.planner.cost_candidates_batched`,
+                         and :class:`~repro.core.planner.IncrementalCoster`
+                         re-costs single-knob mutations marginally)
+  * dominance pool     — :class:`repro.core.dominance.DominancePool`
+                         (anytime-search pruning by sound lower bounds)
   * resource optimizer — :func:`repro.core.resource.optimize_resources`
                          (cluster x plan co-search under step-time / $-per-
                          step / $-per-job / SLO objectives)
@@ -49,10 +56,12 @@ from repro.core.plan import (Block, Call, Collective, Compute, CpVar,
                              GenericBlock, IfBlock, Instruction, IO, JitCall,
                              P2P, ParForBlock, PipelinedLoopBlock, Program,
                              RmVar, WhileBlock)
-from repro.core.planner import (PlanDecision, SearchStats, ShardingPlan,
-                                build_step_program, choose_plan,
-                                enumerate_plans, estimate_hbm,
-                                reference_plans, resident_components)
+from repro.core.dominance import DominancePool, pareto_dominates
+from repro.core.planner import (IncrementalCoster, PlanDecision, SearchStats,
+                                ShardingPlan, build_step_program, choose_plan,
+                                cost_candidates_batched, enumerate_plans,
+                                estimate_hbm, reference_plans,
+                                resident_components)
 from repro.core.resource import (DEFAULT_STEPS_PER_JOB, ClusterCandidate,
                                  ResourceDecision, ResourceSearchStats,
                                  checkpoint_bytes, checkpoint_restore_seconds,
@@ -88,8 +97,10 @@ __all__ = [
     "IfBlock", "Instruction", "IO", "JitCall", "P2P", "ParForBlock",
     "PipelinedLoopBlock", "Program",
     "RmVar", "WhileBlock", "PlanDecision", "SearchStats", "ShardingPlan",
-    "build_step_program", "choose_plan", "enumerate_plans", "estimate_hbm",
-    "reference_plans", "resident_components",
+    "build_step_program", "choose_plan", "cost_candidates_batched",
+    "enumerate_plans", "estimate_hbm", "reference_plans",
+    "resident_components", "IncrementalCoster", "DominancePool",
+    "pareto_dominates",
     "DEFAULT_STEPS_PER_JOB", "ClusterCandidate", "ResourceDecision",
     "ResourceSearchStats", "cluster_floor_time", "enumerate_clusters",
     "format_decisions", "job_dollars", "job_seconds",

@@ -305,7 +305,23 @@ class ClusterConfig:
         smooth, so estimated time stays monotone in problem size (a step
         function made bigger ops 'faster').  A calibration profile with a
         fitted (dtype, shape-class) entry replaces the ramp value for
-        that class; uncovered classes keep the ramp."""
+        that class; uncovered classes keep the ramp.
+
+        ``flops`` may be a knob-grid lane vector (the batched cost walk):
+        the ramp is then evaluated per lane with the same float64 ops the
+        scalar branch uses; a calibration profile classifies per lane, so
+        calibrated vectors fall back to elementwise scalar calls."""
+        import numpy as np
+        if isinstance(flops, np.ndarray):
+            if self.calibration is not None:
+                return np.array([self.mxu_util(dtype, float(f))
+                                 for f in flops], dtype=np.float64)
+            lo, hi = 1e8, 1e10
+            frac = (np.log10(flops) - 8.0) / 2.0
+            ramp = self.small_matmul_util + frac * (self.matmul_util
+                                                    - self.small_matmul_util)
+            return np.where(flops <= lo, self.small_matmul_util,
+                            np.where(flops >= hi, self.matmul_util, ramp))
         cal = self.calibration
         if cal is not None:
             f = cal.mxu_util(dtype, flops)

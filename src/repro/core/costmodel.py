@@ -40,10 +40,14 @@ import dataclasses
 import math
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+import numpy as np
+
 from repro.core import linalg_ops
 from repro.core.cluster import ClusterConfig
 from repro.core.linalg_ops import (collective_phases, collective_wire,
                                    p2p_cost, p2p_wire)
+from repro.core.npvec import (as_payload, dim_int, fmt, is_vec, lane,
+                              lane_count, pmax, uniform_bool)
 from repro.core.plan import (
     Block, Call, Collective, Compute, CpVar, CreateVar, DataGen, ForBlock,
     FunctionBlock, GenericBlock, IfBlock, Instruction, IO, JitCall, P2P,
@@ -109,7 +113,7 @@ class ProgramTotals:
                              self.dcn_bytes + o.dcn_bytes)
 
     def scaled(self, w: float) -> "ProgramTotals":
-        if self is ZERO_TOTALS or w == 1.0:
+        if self is ZERO_TOTALS or (not is_vec(w) and w == 1.0):
             return self
         return ProgramTotals({dt: f * w for dt, f in self.mxu_flops.items()},
                              self.vpu_flops * w, self.hbm_bytes * w,
@@ -256,10 +260,16 @@ class CostEstimator:
     """Walks a :class:`Program` and produces a :class:`CostedProgram`."""
 
     def __init__(self, cc: ClusterConfig, verbose: bool = False,
-                 cache: Optional[PlanCostCache] = None):
+                 cache: Optional[PlanCostCache] = None,
+                 terse_labels: bool = False):
         self.cc = cc
         self.verbose = verbose
         self.cache = cache
+        # The batched (lane-vector) walk discards every label below the
+        # root when the lanes are split back out, and formatting a lane
+        # array into a node label costs more than costing the node —
+        # terse_labels swaps describe() for the bare instruction kind.
+        self.terse_labels = terse_labels
 
     # ------------------------------------------------------------------ API
     def estimate(self, program: Program) -> CostedProgram:
@@ -364,10 +374,12 @@ class CostEstimator:
         loops, where only the first iteration reads persistent inputs".
         """
         n = node.iterations if node.iterations is not None else self.cc.default_loop_iterations
-        n = max(int(n), 1)
+        n = pmax(dim_int(n), 1)
         pred = self._sum_children("predicate", node.predicate, symtab, stack)
         first = self._sum_children("body[first]", node.body, symtab, stack)
-        if n > 1:
+        # lane vectors must agree on the warm-branch shape (uniform_bool
+        # raises to the batched driver's scalar fallback otherwise)
+        if uniform_bool(n > 1):
             warm = self._sum_children("body[warm]", node.body, symtab, stack)
             agg = pred.cost.scaled(n) + first.cost + warm.cost.scaled(n - 1)
             totals = (pred.totals.scaled(n) + first.totals
@@ -415,7 +427,7 @@ class CostEstimator:
         At S=1 both formulas reduce bit-exactly to the sequential loop's
         ``T_first + (N-1) * T_warm``.
         """
-        m = max(int(node.microbatches), 1)
+        m = pmax(dim_int(node.microbatches), 1)
         s = len(node.stages)
         if not s:      # no stages: an empty loop body, nothing to charge
             return CostedNode(f"PIPELINE {node.label} (S=0, M={m})",
@@ -430,23 +442,56 @@ class CostEstimator:
             totals = totals + fn.totals
         children: List[CostedNode] = list(firsts)
         note = ""
-        if m > 1:
+        if uniform_bool(m > 1):
             warms = [self._sum_children(f"stage[{i}][warm]", body, symtab,
                                         stack)
                      for i, body in enumerate(node.stages)]
             children.extend(warms)
-            crit = max(range(s), key=lambda i: warms[i].cost.total)
+            crit, crit_cost = self._critical_stage(warms)
             warm_totals = ZERO_TOTALS
             for wn in warms:
                 warm_totals = warm_totals + wn.totals
-            agg = fill + warms[crit].cost.scaled(m - 1)
+            agg = fill + crit_cost.scaled(m - 1)
             totals = totals + warm_totals.scaled(m - 1)
-            note = (f"critical stage={crit} "
-                    f"bubble~(S-1)/M={(s - 1) / m:.3f}")
+            note = (f"critical stage={fmt(crit)} "
+                    f"bubble~(S-1)/M={fmt((s - 1) / m, '.3f')}")
         else:
             agg = fill
         label = f"PIPELINE {node.label} (S={s}, M={m})"
         return CostedNode(label, agg, children, note=note, totals=totals)
+
+    @staticmethod
+    def _critical_stage(warms: List[CostedNode]):
+        """The slowest warm stage: ``argmax`` over stage totals, first max
+        on ties (the builtin-max tie rule the scalar walk has always used;
+        ``np.argmax`` matches it, asserted by the property suite).
+
+        With lane-vector stage costs the critical stage is selected *per
+        lane* and every :class:`CostBreakdown` field gathered along the
+        winning stage, so one batched walk reproduces each lane's scalar
+        pipeline time bit-exact even when lanes disagree on which stage
+        dominates."""
+        tots = [w.cost.total for w in warms]
+        try:
+            crit = max(range(len(warms)), key=lambda i: tots[i])
+            return crit, warms[crit].cost
+        except ValueError:   # truth-value ambiguity: lane vectors
+            k = lane_count(*tots)
+            stacked = np.stack(
+                [np.broadcast_to(np.asarray(t, dtype=np.float64), (k,))
+                 for t in tots])
+            crit_lanes = np.argmax(stacked, axis=0)     # first max per lane
+
+            def gather(field: str):
+                vals = np.stack(
+                    [np.broadcast_to(
+                        np.asarray(getattr(w.cost, field), dtype=np.float64),
+                        (k,)) for w in warms])
+                return np.take_along_axis(vals, crit_lanes[None, :], axis=0)[0]
+
+            cost = CostBreakdown(gather("io"), gather("compute"),
+                                 gather("collective"), gather("latency"))
+            return crit_lanes, cost
 
     def _cost_if(self, node: IfBlock, symtab, stack) -> CostedNode:
         pred = self._sum_children("predicate", node.predicate, symtab, stack)
@@ -515,8 +560,10 @@ class CostEstimator:
     def _leaf(self, inst: Instruction, cost: CostBreakdown,
               symtab: SymbolTable, note: str = "",
               totals: ProgramTotals = ZERO_TOTALS) -> CostedNode:
-        self._peak_hbm = max(self._peak_hbm, symtab.live_hbm_bytes())
-        return CostedNode(inst.describe(), cost, note=note, totals=totals)
+        self._peak_hbm = pmax(self._peak_hbm, symtab.live_hbm_bytes())
+        label = (inst.__class__.__name__ if self.terse_labels
+                 else inst.describe())
+        return CostedNode(label, cost, note=note, totals=totals)
 
     # -- first-use IO (the "pays the read" rule) --------------------------
     def _stage_in(self, name: str, symtab: SymbolTable) -> float:
@@ -524,7 +571,7 @@ class CostEstimator:
         if st is None or st.state == MemState.HBM:
             return 0.0
         t = 0.0
-        per_dev = st.bytes_serialized() / max(1, st.shards)
+        per_dev = st.bytes_serialized() / pmax(1, st.shards)
         if st.state == MemState.DISK:
             t += per_dev / self.cc.chip.disk_bw
             t += per_dev / self.cc.chip.pcie_bw
@@ -560,7 +607,7 @@ class CostEstimator:
             peak = cc.chip.peak("float32") * VPU_FRACTION
         t_flops = flops / peak
         t_mem = bytes_moved / cc.hbm_bw_eff
-        compute_t = max(t_flops, t_mem)
+        compute_t = pmax(t_flops, t_mem)
 
         out_stat = dataclasses.replace(prof.out, shards=n_shards, state=MemState.HBM)
         symtab.createvar(inst.output, out_stat)
@@ -582,7 +629,9 @@ class CostEstimator:
         if st is None:
             raise KeyError(f"io on undefined var '{inst.var}'")
         per_dev = (st.bytes_serialized() if inst.serialized else st.bytes_in_memory())
-        per_dev /= max(1, st.shards)
+        # not //=: per_dev may be an int64 lane vector, and in-place true
+        # division cannot widen it to float64
+        per_dev = per_dev / pmax(1, st.shards)
         t = 0.0
         legs = _path_legs(inst.src, inst.dst)
         for leg in legs:
@@ -596,7 +645,7 @@ class CostEstimator:
         cc = self.cc
         st = symtab.get(inst.var)
         if inst.bytes_override is not None:
-            payload = float(inst.bytes_override)
+            payload = as_payload(inst.bytes_override)
         elif st is not None:
             payload = st.bytes_per_device()
         else:
@@ -638,7 +687,7 @@ class CostEstimator:
         cc = self.cc
         st = symtab.get(inst.var)
         if inst.bytes_override is not None:
-            payload = float(inst.bytes_override)
+            payload = as_payload(inst.bytes_override)
         elif st is not None:
             payload = st.bytes_per_device()
         else:
@@ -720,7 +769,8 @@ def _path_legs(src: MemState, dst: MemState) -> List[str]:
 
 
 def estimate(program: Program, cc: ClusterConfig,
-             cache: Optional[PlanCostCache] = None) -> CostedProgram:
+             cache: Optional[PlanCostCache] = None,
+             terse_labels: bool = False) -> CostedProgram:
     """``C(P, cc)`` — cost a runtime plan under a cluster config.
 
     One recursive pass in execution order (no profiling, R1) returning a
@@ -736,4 +786,31 @@ def estimate(program: Program, cc: ClusterConfig,
     blocks of sibling candidates) — hits replay cost, totals, symbol-table
     effects and peak-HBM bit-exact.
     """
-    return CostEstimator(cc, cache=cache).estimate(program)
+    return CostEstimator(cc, cache=cache,
+                         terse_labels=terse_labels).estimate(program)
+
+
+def split_costed_lanes(cp: CostedProgram, k: int) -> List[CostedProgram]:
+    """Split a lane-vector :class:`CostedProgram` — one batched walk over a
+    K-member knob grid — into K scalar results.
+
+    Every numeric field (four breakdown terms, five work totals, peak HBM)
+    is extracted per lane; fields the walk left scalar broadcast unchanged.
+    Extraction is a float64 read, so each returned program carries exactly
+    the numbers the scalar walk computes for that knob assignment (the
+    property suite asserts this field-by-field).  The returned trees are
+    root-only: the batched walk trades the per-node EXPLAIN annotations for
+    throughput — cost a single candidate scalar when the tree matters.
+    """
+    outs: List[CostedProgram] = []
+    bd, tt = cp.breakdown, cp.totals
+    for j in range(k):
+        b = CostBreakdown(lane(bd.io, j), lane(bd.compute, j),
+                          lane(bd.collective, j), lane(bd.latency, j))
+        t = ProgramTotals({dt: lane(f, j) for dt, f in tt.mxu_flops.items()},
+                          lane(tt.vpu_flops, j), lane(tt.hbm_bytes, j),
+                          lane(tt.ici_bytes, j), lane(tt.dcn_bytes, j))
+        root = CostedNode(cp.root.label, b, totals=t)
+        outs.append(CostedProgram(root, b.total, b,
+                                  lane(cp.peak_hbm_per_device, j), t))
+    return outs

@@ -22,7 +22,10 @@ import dataclasses
 import math
 from typing import Callable, Dict, Sequence, Tuple, Union
 
+import numpy as np
+
 from repro.core.cluster import dtype_bytes
+from repro.core.npvec import HeterogeneousLanes, as_payload, dim_int, pmax
 from repro.core.symbols import MemState, TensorStat
 
 # Operation-specific corrections (the paper's MMD_corr / MMS_corr analogues).
@@ -65,7 +68,8 @@ def _bytes(st: TensorStat) -> float:
 
 
 def _out(shape, like: TensorStat, dtype=None, sparsity=1.0) -> TensorStat:
-    return TensorStat(tuple(int(x) for x in shape), dtype or like.dtype,
+    # dim_int keeps knob-grid lane vectors (batched cost walk) intact.
+    return TensorStat(tuple(dim_int(x) for x in shape), dtype or like.dtype,
                       sparsity=sparsity, state=MemState.HBM, shards=like.shards)
 
 
@@ -80,7 +84,7 @@ def _matmul(a: TensorStat, b: TensorStat, **attrs) -> OpProfile:
     *ba, m, k = a.shape
     *bb, k2, n = b.shape
     assert k == k2, f"matmul contraction mismatch {a.shape} x {b.shape}"
-    batch = max(math.prod(ba) if ba else 1, math.prod(bb) if bb else 1)
+    batch = pmax(math.prod(ba) if ba else 1, math.prod(bb) if bb else 1)
     # sparse inputs scale flops by sparsity (paper's s / s^2 terms)
     s = a.sparsity * b.sparsity
     flops = 2.0 * batch * m * n * k * s
@@ -123,9 +127,35 @@ def _solve(a: TensorStat, b: TensorStat, **attrs) -> OpProfile:
 # ---------------------------------------------------------------------------
 
 
+def _pick_big(ins: Sequence[TensorStat]) -> TensorStat:
+    """The largest input by cells — ``max(ins, key=cells)`` made lane-safe.
+
+    When some cell counts are knob-grid lane vectors, replay the builtin
+    max's first-of-ties scan per lane; every lane must elect the same input
+    (else the group's programs differ structurally per lane and the batched
+    driver must fall back to scalar costing)."""
+    if len(ins) == 1:
+        return ins[0]
+    try:
+        return max(ins, key=lambda s: s.cells)
+    except ValueError:  # truth-value ambiguity: at least one lane vector
+        cells = [np.asarray(s.cells, dtype=np.float64) for s in ins]
+        best = np.array(np.broadcast_to(cells[0], np.broadcast(*cells).shape))
+        sel = np.zeros(best.shape, dtype=np.int64)
+        for i in range(1, len(cells)):
+            gt = cells[i] > best
+            sel = np.where(gt, i, sel)
+            best = np.maximum(best, cells[i])
+        first = int(sel.flat[0])
+        if not (sel == first).all():
+            raise HeterogeneousLanes("lanes elect different elementwise "
+                                     "broadcast shapes")
+        return ins[first]
+
+
 def _ew(arity: int, flops_per_cell: float = 1.0):
     def fn(*ins: TensorStat, **attrs) -> OpProfile:
-        big = max(ins, key=lambda s: s.cells)
+        big = _pick_big(ins)
         out = _out(big.shape, big)
         reads = sum(_bytes(i) for i in ins)
         return OpProfile(flops_per_cell * big.cells, reads, _bytes(out), out, "vpu")
@@ -149,7 +179,7 @@ def _reduce(x: TensorStat, **attrs) -> OpProfile:
     else:
         out_shape = tuple(d for i, d in enumerate(x.shape) if i not in set(axes))
     out = _out(out_shape, x)
-    return OpProfile(float(x.cells), _bytes(x), _bytes(out), out, "vpu")
+    return OpProfile(as_payload(x.cells), _bytes(x), _bytes(out), out, "vpu")
 
 
 @register("rdiag")
@@ -308,7 +338,7 @@ def collective_wire(kind: str, bytes_per_device: float,
     n = max(int(axis_size), 1)
     if n == 1:
         return 0.0, 0
-    b = float(bytes_per_device)
+    b = as_payload(bytes_per_device)
     if kind == "all_reduce":
         return 2.0 * (n - 1) / n * b, 2 * (n - 1)
     if kind == "all_gather":
@@ -333,11 +363,14 @@ def collective_phases(kind: str, bytes_per_device: float,
     each phase separately because axes carry different bandwidths) and the
     tuple form of :func:`collective_wire` both consume it, so the two can
     never drift apart."""
-    payload = float(bytes_per_device)
+    payload = as_payload(bytes_per_device)
     for n in axis_sizes:
         yield collective_wire(kind, payload, int(n))
         if kind == "all_gather":
-            payload *= max(int(n), 1)
+            # rebind, never *=: a lane-vector payload aliases the caller's
+            # array (bytes_override / a TensorStat's cached bytes), and an
+            # in-place multiply would corrupt it for every later walk
+            payload = payload * max(int(n), 1)
 
 
 def p2p_wire(bytes_per_device: float, axis_size: int) -> Tuple[float, int]:
@@ -352,7 +385,7 @@ def p2p_wire(bytes_per_device: float, axis_size: int) -> Tuple[float, int]:
     """
     if int(axis_size) <= 1:
         return 0.0, 0
-    return float(bytes_per_device), 1
+    return as_payload(bytes_per_device), 1
 
 
 def p2p_cost(bytes_per_device: float, axis_size: int,

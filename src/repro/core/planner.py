@@ -29,10 +29,15 @@ import itertools
 import math
 from typing import Dict, List, Optional, Sequence, Tuple
 
+import numpy as np
+
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig, dtype_bytes
 from repro.core.costmodel import (CacheStats, CostedProgram, PlanCostCache,
-                                  estimate)
+                                  estimate, split_costed_lanes)
+from repro.core.dominance import DominancePool
+from repro.core.npvec import (HeterogeneousLanes, dim_ceil, dim_int, is_vec,
+                              pmax, pmin, uniform_bool)
 from repro.core.plan import (Collective, Compute, CreateVar, DataGen, ForBlock,
                              GenericBlock, IO, P2P, PipelinedLoopBlock,
                              Program)
@@ -56,6 +61,35 @@ MAX_MICROBATCHES = MICRO_OPTS[-1]
 # ---------------------------------------------------------------------------
 # Sharding plan: the searchable decision vector
 # ---------------------------------------------------------------------------
+
+
+class VecKnob:
+    """A per-lane knob vector standing in for one scalar ShardingPlan field
+    during a batched build (``cost_candidates_batched``): lane ``j`` holds
+    group member ``j``'s knob value.  ``microbatches`` lanes carry the
+    counts themselves; ``grad_reduce_dtype`` lanes carry the *byte widths*
+    (the only thing the program builder reads off the dtype)."""
+
+    __slots__ = ("values", "display")
+
+    def __init__(self, values, display: str = "vec"):
+        self.values = np.asarray(values)
+        self.display = display
+
+    def __str__(self) -> str:
+        return f"<{self.display}x{self.values.shape[0]}>"
+
+    __repr__ = __str__
+
+
+def _kv(x):
+    """Unwrap a possibly-:class:`VecKnob` knob to its numeric value(s)."""
+    return x.values if isinstance(x, VecKnob) else x
+
+
+def _gd_bytes(gd) -> int:
+    """Byte width of the grad-reduce dtype knob (per-lane when batched)."""
+    return gd.values if isinstance(gd, VecKnob) else dtype_bytes(gd)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -88,6 +122,10 @@ class ShardingPlan:
         model on every chip — caught by the generated-plan costing, see
         EXPERIMENTS.md §Perf cell 2.)"""
         d = self.degree(cc, axes)
+        if is_vec(units):   # per-lane unit counts (batched build)
+            if d <= 0:
+                return np.ones_like(units)
+            return np.where(units % d == 0, d, 1)
         return d if (d > 0 and units % d == 0) else 1
 
     def describe(self) -> str:
@@ -103,9 +141,10 @@ class ShardingPlan:
         if self.pp_axes:
             bits.append(f"pp={'x'.join(self.pp_axes)}")
         bits.append(f"remat={self.remat}")
-        if self.microbatches > 1:
+        if isinstance(self.microbatches, VecKnob) or self.microbatches > 1:
             bits.append(f"ubatch={self.microbatches}")
-        if self.grad_reduce_dtype != "float32":
+        if (isinstance(self.grad_reduce_dtype, VecKnob)
+                or self.grad_reduce_dtype != "float32"):
             bits.append(f"gdtype={self.grad_reduce_dtype}")
         return f"{self.name}[{','.join(bits)}]"
 
@@ -116,8 +155,10 @@ class ShardingPlan:
 
 
 def _ts(shape, dtype="bfloat16", shards=1, state=MemState.HBM, sparsity=1.0):
-    return TensorStat(tuple(int(x) for x in shape), dtype, sparsity, state,
-                      max(int(shards), 1))
+    # dim_int/pmax keep knob-grid lane vectors (batched build) intact; the
+    # scalar path is the same int()/max() it has always been.
+    return TensorStat(tuple(dim_int(x) for x in shape), dtype, sparsity, state,
+                      pmax(dim_int(shards), 1))
 
 
 def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
@@ -131,8 +172,8 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     parallelism.
     """
     mode = shape.mode
-    micro0 = plan.microbatches if shape.mode == "train" else 1
-    mb0 = max(shape.global_batch // micro0, 1)
+    micro0 = _kv(plan.microbatches) if shape.mode == "train" else 1
+    mb0 = pmax(shape.global_batch // micro0, 1)
     dp = plan.eff_degree(cc, plan.batch_axes, mb0)
     tp = plan.degree(cc, plan.tp_axes)
     fsdp = plan.degree(cc, plan.fsdp_axes)
@@ -146,12 +187,12 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     nh, nkv = max(arch.n_heads, 1), max(arch.n_kv_heads, 1)
     dt = arch.dtype
     bpe = dtype_bytes(dt)
-    micro = plan.microbatches if mode == "train" else 1
+    micro = _kv(plan.microbatches) if mode == "train" else 1
 
     batch = shape.global_batch
     q_len = 1 if mode == "decode" else shape.seq_len
     kv_len = shape.seq_len
-    mb_batch = max(batch // micro, 1)          # global batch per microbatch
+    mb_batch = pmax(batch // micro, 1)         # global batch per microbatch
     tokens = mb_batch * q_len                  # global tokens per microbatch
     act_axes = plan.batch_axes + plan.seq_axes # divide token work
     mm_axes = act_axes + plan.tp_axes          # divide matmul work
@@ -181,13 +222,15 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     logits_like = "ce_head" if mode == "train" else "logits"
     if logits_like in comps:
         logits_var = (tokens * arch.vocab_size
-                      * (4 if mode == "train" else bpe) / max(head_sh, 1))
-        comps[logits_like] = max(comps[logits_like] - logits_var, 0.0)
+                      * (4 if mode == "train" else bpe) / pmax(head_sh, 1))
+        comps[logits_like] = pmax(comps[logits_like] - logits_var, 0.0)
     for comp_name, comp_bytes in comps.items():
-        if comp_name == "params" or comp_bytes < 1.0:
+        # lane vectors must agree on which components materialize
+        # (uniform_bool raises to the batched driver's scalar fallback)
+        if comp_name == "params" or uniform_bool(comp_bytes < 1.0):
             continue
         setup.children.append(CreateVar(f"resident_{comp_name}",
-                                        _ts((int(comp_bytes + 0.999),), "int8")))
+                                        _ts((dim_ceil(comp_bytes),), "int8")))
     setup.children.append(CreateVar("embed_table",
                                     _ts((arch.vocab_size, d), dt, weight_shards)))
     prog.blocks.append(setup)
@@ -356,7 +399,7 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
             # gathered params are reused across microbatches (prefetch +
             # persist for the step), so amortize the payload by micro
             per_layer = (pc["layers"] / arch.n_layers * bpe / weight_shards
-                         / max(micro, 1))
+                         / pmax(micro, 1))
             ops.insert(0, Collective("all_gather", "params", plan.fsdp_axes,
                                      bytes_override=per_layer))
             if backward:
@@ -412,7 +455,7 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                                         body=layer_body("AB_", True, "attn-shared")))
 
         tail = GenericBlock("grad reduce + update")
-        grad_bytes = (pc["total"] * dtype_bytes(plan.grad_reduce_dtype)
+        grad_bytes = (pc["total"] * _gd_bytes(plan.grad_reduce_dtype)
                       / (weight_shards * pp_s))
         if arch.moe is not None and ep > 1:
             grad_bytes /= ep
@@ -433,7 +476,7 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                 arch, plan, pp_s, micro, stage, loss, enc_block, shared_fwd,
                 layer_body, main_kind, recompute,
                 act_payload=tokens * d * bpe / act_sh))
-        elif micro > 1:
+        elif uniform_bool(micro > 1):
             prog.blocks.append(ForBlock(f"microbatches x{micro}", micro,
                                         body=body_blocks))
         else:
@@ -525,8 +568,8 @@ def resident_components(arch: ArchConfig, shape: ShapeConfig,
     costed peak-HBM excursion fits (asserted by tests/test_planner.py).
     """
     pc = arch.param_counts()
-    mb0 = max(shape.global_batch
-              // (plan.microbatches if shape.mode == "train" else 1), 1)
+    mb0 = pmax(shape.global_batch
+               // (_kv(plan.microbatches) if shape.mode == "train" else 1), 1)
     dp = plan.eff_degree(cc, plan.batch_axes, mb0)
     tp = plan.degree(cc, plan.tp_axes)
     fsdp = plan.degree(cc, plan.fsdp_axes)
@@ -544,7 +587,7 @@ def resident_components(arch: ArchConfig, shape: ShapeConfig,
         # adam m,v (fp32) + fp32 transients during the update, sharded like
         # params (+dp if fsdp); calibrated against compiled memory_analysis
         opt_shards = wsh * (dp if (fsdp > 1 or plan.zero1) else 1)
-        comp["opt_state"] = 4 * pc["total"] * 4 / (max(opt_shards, wsh) * pp)
+        comp["opt_state"] = 4 * pc["total"] * 4 / (pmax(opt_shards, wsh) * pp)
         # gradients: resident fp32 accumulator regardless of microbatching
         # (grad_reduce_dtype only changes the wire payload, not the buffer;
         # calibrated against compiled memory_analysis)
@@ -564,7 +607,7 @@ def resident_components(arch: ArchConfig, shape: ShapeConfig,
                "full": (2.0, 0.0)}[plan.remat]
         per_tok = (fac[0] * d * bpe
                    + fac[1] * (hd_total + ff_eff) * bpe / max(tp, 1))
-        tokens_dev = shape.tokens / max(dp * sp * plan.microbatches, 1)
+        tokens_dev = shape.tokens / pmax(dp * sp * _kv(plan.microbatches), 1)
         if pp > 1:
             # 1F1B-style schedule memory: a stage stashes activations for
             # its own n_layers/S layers, but keeps min(M, S) microbatches
@@ -573,7 +616,7 @@ def resident_components(arch: ArchConfig, shape: ShapeConfig,
             # S in-flight microbatches cancel); weights/optimizer state
             # above still drop S-fold.
             comp["act_stash"] = (tokens_dev * (arch.n_layers / pp) * per_tok
-                                 * min(plan.microbatches, pp))
+                                 * pmin(_kv(plan.microbatches), pp))
         else:
             comp["act_stash"] = tokens_dev * arch.n_layers * per_tok
         # chunked-CE head: [ce_chunk, vocab] fp32 (+bwd copy), tp-sharded
@@ -876,6 +919,140 @@ def _rank_key(d: PlanDecision) -> Tuple:
     return (not d.feasible, d.time)
 
 
+# ---------------------------------------------------------------------------
+# Batched costing: one walk per structure signature
+# ---------------------------------------------------------------------------
+
+
+def _structure_key(plan: ShardingPlan, mode: str) -> Tuple:
+    """The program-tree identity of a candidate: every ShardingPlan field
+    that changes which nodes :func:`build_step_program` emits (axis roles,
+    remat re-emission, micro>1's loop wrap, the pipelined/sequential split,
+    overlap/zero1).  Candidates sharing a key differ only in the *values*
+    of (microbatches, grad_reduce_dtype) — the same tree with different
+    numbers — so one lane-vector walk costs them all.  The micro>1 flag is
+    part of the key because it IS structure: the microbatch ForBlock (and
+    the warm-branch shape of every loop walker) exists only on one side."""
+    micro = plan.microbatches if mode == "train" else 1
+    return (plan.name, plan.batch_axes, plan.tp_axes, plan.fsdp_axes,
+            plan.ep_axes, plan.seq_axes, plan.pp_axes, plan.remat,
+            plan.overlap, plan.zero1, micro > 1)
+
+
+def _cost_group_vectorized(arch: ArchConfig, shape: ShapeConfig,
+                           members: Sequence[ShardingPlan],
+                           cc: ClusterConfig) -> List[CostedProgram]:
+    """Cost one structure group with a single lane-vector tree walk.
+
+    The group's representative program is built once with
+    :class:`VecKnob`-wrapped knob fields — lane ``j`` carries member
+    ``j``'s (microbatches, grad-dtype bytes) — and costed with
+    ``cache=None`` (lane vectors have no hashable read-set signatures; the
+    vectorized walk IS the fast path, it does not also memoize).  Lane
+    extraction then yields each member's scalar-walk numbers bit-exact
+    (tests/test_properties.py asserts every field)."""
+    base = members[0]
+    micros = np.array([p.microbatches for p in members], dtype=np.int64)
+    gdb = np.array([dtype_bytes(p.grad_reduce_dtype) for p in members],
+                   dtype=np.int64)
+    vec_plan = dataclasses.replace(
+        base,
+        microbatches=VecKnob(micros, "ubatch"),
+        grad_reduce_dtype=VecKnob(gdb, "gdB"))
+    cc_p = cc.with_overlap(OVERLAP_FRACTION if base.overlap else 0.0)
+    prog = build_step_program(arch, shape, vec_plan, cc_p)
+    costed = estimate(prog, cc_p, cache=None, terse_labels=True)
+    return split_costed_lanes(costed, len(members))
+
+
+def cost_candidates_batched(arch: ArchConfig, shape: ShapeConfig,
+                            plans: Sequence[ShardingPlan], cc: ClusterConfig,
+                            cache: Optional[PlanCostCache] = None,
+                            stats: Optional[SearchStats] = None
+                            ) -> List[PlanDecision]:
+    """Cost ``plans`` with one tree walk per structure signature.
+
+    Candidates are grouped by :func:`_structure_key`; each K>1 group is
+    costed by one vectorized walk (:func:`_cost_group_vectorized`),
+    singleton groups by the ordinary scalar walk (which still shares the
+    sub-plan ``cache``).  Any group the vectorized walk cannot hold
+    uniform (:class:`repro.core.npvec.HeterogeneousLanes`, or an
+    array-blind code path) falls back to scalar costing member by member —
+    the engine is exact by construction, never by hope.  Results come back
+    in input order."""
+    if stats is None:
+        stats = SearchStats()
+    groups: Dict[Tuple, List[int]] = {}
+    for i, p in enumerate(plans):
+        groups.setdefault(_structure_key(p, shape.mode), []).append(i)
+    out: List[Optional[PlanDecision]] = [None] * len(plans)
+    for idxs in groups.values():
+        members = [plans[i] for i in idxs]
+        costed = None
+        if len(idxs) > 1:
+            try:
+                costed = _cost_group_vectorized(arch, shape, members, cc)
+            except (HeterogeneousLanes, TypeError, ValueError):
+                costed = None
+        if costed is None:
+            for i, p in zip(idxs, members):
+                out[i] = _cost_candidate(arch, shape, p, cc, cache, stats)
+            continue
+        stats.costed += len(idxs)
+        cc_p = cc.with_overlap(OVERLAP_FRACTION if members[0].overlap
+                               else 0.0)
+        for i, p, cp in zip(idxs, members, costed):
+            hbm = estimate_hbm(arch, shape, p, cc_p)
+            out[i] = PlanDecision(p, cp, hbm, hbm <= cc.hbm_budget)
+    return out
+
+
+class IncrementalCoster:
+    """Incremental re-costing for single-knob plan mutations.
+
+    Wraps one (arch, shape, cc) context around a shared
+    :class:`PlanCostCache`: the first :meth:`cost` pays the full walk and
+    populates the cache; a :meth:`recost` after mutating one knob re-walks
+    only the dirty subtree — every block whose structural signature and
+    read-set fingerprint survive the mutation replays from cache (e.g. a
+    ``grad_reduce_dtype`` flip misses only the grad-reduce tail; a remat
+    change misses the backward bodies but keeps the forward stack).  The
+    result is the from-scratch answer bit-exact — the cache key semantics
+    guarantee it, and tests/test_incremental.py asserts it per knob —
+    ``marginal`` just reports how little was recomputed."""
+
+    def __init__(self, arch: ArchConfig, shape: ShapeConfig,
+                 cc: ClusterConfig,
+                 cache: Optional[PlanCostCache] = None):
+        self.arch = arch
+        self.shape = shape
+        self.cc = cc
+        self.cache = cache if cache is not None else PlanCostCache()
+        self.stats = SearchStats()
+        self.marginal: Optional[CacheStats] = None
+
+    def cost(self, plan: ShardingPlan,
+             shape: Optional[ShapeConfig] = None) -> PlanDecision:
+        """Cost ``plan`` (optionally under a shape override, e.g. a
+        re-slotted decode shape) through the shared cache, recording the
+        walk's *marginal* hits/misses in :attr:`marginal`."""
+        h0, m0 = self.cache.hits, self.cache.misses
+        d = _cost_candidate(self.arch, shape or self.shape, plan,
+                            self.cc, self.cache, self.stats)
+        self.marginal = CacheStats(self.cache.hits - h0,
+                                   self.cache.misses - m0,
+                                   self.cache.entries)
+        return d
+
+    def recost(self, base_plan: ShardingPlan,
+               shape: Optional[ShapeConfig] = None,
+               **mutation) -> PlanDecision:
+        """Re-cost ``base_plan`` with the given knob fields replaced
+        (``remat=...``, ``microbatches=...``, ``grad_reduce_dtype=...``)."""
+        return self.cost(dataclasses.replace(base_plan, **mutation)
+                         if mutation else base_plan, shape=shape)
+
+
 def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
                 top_k: int = 5,
                 candidates: Optional[Sequence[ShardingPlan]] = None,
@@ -889,7 +1066,14 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     overlap — pruning HBM-infeasible and dominated prefixes without costing
     them.  ``search="exhaustive"`` costs every enumerated candidate (the
     seed behavior; also used whenever an explicit ``candidates`` list is
-    given).  Pass a shared :class:`PlanCostCache` to reuse sub-plan costs
+    given with the default search).  ``search="batched"`` covers the SAME
+    exhaustive space through the vectorized engine — one tree walk per
+    structure signature (:func:`cost_candidates_batched`), streaming the
+    structure groups through a role-floor dominance pool that, at
+    ``top_k=1``, skips whole groups whose sound per-role floor already
+    loses to the incumbent (the winner is provably unaffected; wider
+    ``top_k`` disables the pruning so the full ranking stays exhaustive).
+    Pass a shared :class:`PlanCostCache` to reuse sub-plan costs
     across calls (scenario sweeps); by default each call gets a private
     cache, which already dedupes the per-layer loop bodies shared between
     candidates.
@@ -898,6 +1082,13 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
         stats = SearchStats()
     if cache is None:
         cache = PlanCostCache()
+    if search == "batched":
+        cands = (list(candidates) if candidates is not None
+                 else enumerate_plans(arch, shape, cc))
+        decisions = _batched_search(arch, shape, cc, top_k, cands, cache,
+                                    stats)
+        stats.cache = cache.stats()
+        return decisions[:top_k]
     if candidates is not None or search == "exhaustive":
         cands = (list(candidates) if candidates is not None
                  else enumerate_plans(arch, shape, cc))
@@ -910,6 +1101,49 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
         raise ValueError(f"unknown search strategy {search!r}")
     decisions = _beam_search(arch, shape, cc, top_k, beam_width, cache, stats)
     stats.cache = cache.stats()
+    return decisions
+
+
+def _batched_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
+                    top_k: int, cands: List[ShardingPlan],
+                    cache: PlanCostCache,
+                    stats: SearchStats) -> List[PlanDecision]:
+    """Exhaustive-space search through the vectorized engine.
+
+    Structure groups stream in ascending role-floor order through a
+    rank-key :class:`DominancePool`; at ``top_k == 1`` a group whose
+    role's sound cluster floor (``resource.role_floor_times`` — a lower
+    bound on every member's time, knobs included) strictly loses to a
+    *feasible* incumbent is pruned without being costed: each member
+    would rank behind the incumbent under ``_rank_key`` whether feasible
+    (worse time) or not (feasibility sinks).  Ties are never pruned
+    (strict inequality), so the returned winner is the exhaustive winner
+    bit-for-bit.  With ``top_k > 1`` every group is costed — the tail of
+    the ranking has no floor argument."""
+    from repro.core import resource as _resource  # circular at import time
+    try:
+        floors = _resource.role_floor_times(arch, shape, cc)
+    except Exception:
+        floors = {}
+    groups: Dict[Tuple, List[ShardingPlan]] = {}
+    for p in cands:
+        groups.setdefault(_structure_key(p, shape.mode), []).append(p)
+    ordered = sorted(groups.items(),
+                     key=lambda kv: floors.get(kv[0][0], 0.0))
+    pool = DominancePool(
+        rank_key=_rank_key,
+        cannot_win=lambda floor_t, best: best.feasible and floor_t > best.time)
+    decisions: List[PlanDecision] = []
+    for key, members in ordered:
+        floor_t = floors.get(key[0], 0.0)
+        if top_k == 1 and not pool.admit(floor_t):
+            stats.pruned_dominated += len(members)
+            continue
+        for d in cost_candidates_batched(arch, shape, members, cc, cache,
+                                         stats):
+            decisions.append(d)
+            pool.offer(d)
+    decisions.sort(key=_rank_key)
     return decisions
 
 

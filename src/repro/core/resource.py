@@ -36,13 +36,14 @@ from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import List, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import (CHIPS, DEFAULT_CHECKPOINT_RESTORE_SECONDS,
                                 ChipSpec, ClusterConfig)
 from repro.core.costmodel import (VPU_FRACTION, CacheStats, PlanCostCache,
                                   ProgramTotals, estimate)
+from repro.core.dominance import DominancePool
 from repro.core.planner import (MAX_MICROBATCHES, OVERLAP_FRACTION,
                                 PlanDecision, SearchStats,
                                 build_step_program, choose_plan,
@@ -309,11 +310,11 @@ def _plan_space_size(arch: ArchConfig, shape: ShapeConfig,
 def _floor_totals(arch: ArchConfig, shape: ShapeConfig,
                   mesh_shape: Tuple[int, ...],
                   mesh_axes: Tuple[str, ...]
-                  ) -> Tuple[Tuple[ProgramTotals, int], ...]:
+                  ) -> Tuple[Tuple[str, ProgramTotals, int], ...]:
     """Estimator-charged work totals of each role's minimum-work reference
     plan (:func:`repro.core.planner.reference_plans`) on a mesh geometry,
-    paired with the role's pipeline-stage count S (1 for every
-    non-pipelined role).
+    keyed by role name and paired with the role's pipeline-stage count S
+    (1 for every non-pipelined role).
 
     Totals (per-device flops/bytes after sharding, collective wire volume
     per link class) never consult the chip, so one entry serves every chip
@@ -321,10 +322,53 @@ def _floor_totals(arch: ArchConfig, shape: ShapeConfig,
     candidate grid and across optimize calls."""
     cc = ClusterConfig(mesh_shape=mesh_shape, mesh_axes=mesh_axes)
     return tuple(
-        (estimate(build_step_program(arch, shape, plan, cc), cc,
+        (plan.name,
+         estimate(build_step_program(arch, shape, plan, cc), cc,
                   cache=_FLOOR_CACHE).totals,
          plan.degree(cc, plan.pp_axes))
         for plan in reference_plans(arch, shape, cc))
+
+
+def role_floor_times(arch: ArchConfig, shape: ShapeConfig,
+                     cc: ClusterConfig) -> Dict[str, float]:
+    """Per-role sound lower bounds on ``C(P, cc)``: role name -> a floor
+    that every enumerated plan *in that role* must at least pay, knob
+    values included (see :func:`cluster_floor_time` for the derivation —
+    the cluster floor is exactly the minimum over these values).  The
+    plan searcher's dominance pool (``choose_plan(search="batched")``)
+    uses the per-role resolution to skip whole structure groups whose
+    role floor already loses to a feasible incumbent."""
+    vpu_peak = cc.chip.peak("float32") * VPU_FRACTION
+    ici_bw_best = cc.ici_bw_eff * cc.max_ici_links
+    # The wire discount must match the most generous overlap any plan can
+    # earn — per fabric, because a calibrated profile may hide more ICI
+    # than DCN time (or vice versa).  Overlap-enabled plans are costed
+    # under with_overlap(OVERLAP_FRACTION), whose cc.overlap(fabric)
+    # resolves the calibrated per-fabric value; uncalibrated both fabrics
+    # give exactly OVERLAP_FRACTION and the lumped pre-calibration form is
+    # kept bit-identical.
+    occ = cc.with_overlap(OVERLAP_FRACTION)
+    o_ici, o_dcn = occ.overlap("ici"), occ.overlap("dcn")
+    floors: Dict[str, float] = {}
+    for name, t, pp_s in _floor_totals(arch, shape, cc.mesh_shape,
+                                       cc.mesh_axes):
+        t_flops = sum(f / (cc.chip.peak(dt) * cc.mxu_util_ceiling(dt))
+                      for dt, f in t.mxu_flops.items())
+        t_flops += t.vpu_flops / vpu_peak
+        t_mem = t.hbm_bytes / cc.hbm_bw_eff
+        if pp_s > 1:
+            cand = (max(t_flops, t_mem) / pp_s
+                    * (1.0 + (pp_s - 1) / MAX_MICROBATCHES))
+        else:
+            if o_ici == o_dcn:
+                t_coll = (t.ici_bytes / ici_bw_best
+                          + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - o_ici)
+            else:
+                t_coll = (t.ici_bytes / ici_bw_best * (1.0 - o_ici)
+                          + t.dcn_bytes / cc.dcn_bw_eff * (1.0 - o_dcn))
+            cand = max(t_flops, t_mem) + t_coll
+        floors[name] = min(floors.get(name, float("inf")), cand)
+    return floors
 
 
 def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
@@ -382,36 +426,8 @@ def cluster_floor_time(arch: ArchConfig, shape: ShapeConfig,
     low), so the pipeline floor can only *drop* below the sequential
     roofline where pipelining genuinely helps — verified by full plan
     enumeration in tests/test_pipeline.py."""
-    vpu_peak = cc.chip.peak("float32") * VPU_FRACTION
-    ici_bw_best = cc.ici_bw_eff * cc.max_ici_links
-    # The wire discount must match the most generous overlap any plan can
-    # earn — per fabric, because a calibrated profile may hide more ICI
-    # than DCN time (or vice versa).  Overlap-enabled plans are costed
-    # under with_overlap(OVERLAP_FRACTION), whose cc.overlap(fabric)
-    # resolves the calibrated per-fabric value; uncalibrated both fabrics
-    # give exactly OVERLAP_FRACTION and the lumped pre-calibration form is
-    # kept bit-identical.
-    occ = cc.with_overlap(OVERLAP_FRACTION)
-    o_ici, o_dcn = occ.overlap("ici"), occ.overlap("dcn")
-    best = float("inf")
-    for t, pp_s in _floor_totals(arch, shape, cc.mesh_shape, cc.mesh_axes):
-        t_flops = sum(f / (cc.chip.peak(dt) * cc.mxu_util_ceiling(dt))
-                      for dt, f in t.mxu_flops.items())
-        t_flops += t.vpu_flops / vpu_peak
-        t_mem = t.hbm_bytes / cc.hbm_bw_eff
-        if pp_s > 1:
-            cand = (max(t_flops, t_mem) / pp_s
-                    * (1.0 + (pp_s - 1) / MAX_MICROBATCHES))
-        else:
-            if o_ici == o_dcn:
-                t_coll = (t.ici_bytes / ici_bw_best
-                          + t.dcn_bytes / cc.dcn_bw_eff) * (1.0 - o_ici)
-            else:
-                t_coll = (t.ici_bytes / ici_bw_best * (1.0 - o_ici)
-                          + t.dcn_bytes / cc.dcn_bw_eff * (1.0 - o_dcn))
-            cand = max(t_flops, t_mem) + t_coll
-        best = min(best, cand)
-    return best
+    return min(role_floor_times(arch, shape, cc).values(),
+               default=float("inf"))
 
 
 # ---------------------------------------------------------------------------
@@ -740,17 +756,19 @@ def optimize_resources(arch: ArchConfig,
         entries.sort(key=_visit_order_key(objective, slo, steps_per_job,
                                           arch))
     key = _rank_key(objective, slo)
-    incumbent: Optional[ResourceDecision] = None
+    pool = DominancePool(
+        rank_key=key,
+        cannot_win=(lambda bound, best: _floor_cannot_win(
+            objective, slo, best, bound[0].cc, bound[1], steps_per_job,
+            arch)) if prune else None)
     out: List[ResourceDecision] = []
     for cand, floor_t in entries:
-        if (prune and incumbent is not None
-                and _floor_cannot_win(objective, slo, incumbent, cand.cc,
-                                      floor_t, steps_per_job, arch)):
+        if not pool.admit((cand, floor_t)):
             stats.clusters_pruned += 1
             out.append(ResourceDecision(
                 cand.cid, cand.cc, None, floor_t,
                 pruned=f"floor {floor_t * 1e3:.2f}ms loses to "
-                       f"{incumbent.cluster_id}",
+                       f"{pool.best.cluster_id}",
                 steps_per_job=steps_per_job, arch=arch))
             continue
         pstats = SearchStats()
@@ -762,8 +780,8 @@ def optimize_resources(arch: ArchConfig,
         rd = ResourceDecision(cand.cid, cand.cc, best, floor_t, search=pstats,
                               steps_per_job=steps_per_job, arch=arch)
         out.append(rd)
-        if rd.feasible and (incumbent is None or key(rd) < key(incumbent)):
-            incumbent = rd
+        if rd.feasible:
+            pool.offer(rd)
     stats.cache = cache.stats()
     out.sort(key=key)
     return out

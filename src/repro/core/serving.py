@@ -58,6 +58,7 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 from repro.configs.base import ArchConfig, ShapeConfig
 from repro.core.cluster import ClusterConfig, single_chip_config
 from repro.core.costmodel import PlanCostCache, estimate
+from repro.core.dominance import DominancePool
 from repro.core.plan import CreateVar, ForBlock, GenericBlock, P2P, Program
 from repro.core.planner import (OVERLAP_FRACTION, PlanDecision, SearchStats,
                                 ShardingPlan, build_step_program, choose_plan,
@@ -742,18 +743,20 @@ def optimize_serving(arch: ArchConfig, wl: ServeWorkload,
     if prune:
         entries.sort(key=_visit_order_key(obj))
     key = _rank_key(obj)
-    incumbent: Optional[ServingDecision] = None
+    pool = DominancePool(
+        rank_key=key,
+        cannot_win=(lambda bound, best: _floor_cannot_win(
+            obj, wl, best, bound[0], bound[1])) if prune else None)
     pre_memo: Dict[str, Tuple[PlanDecision, int]] = {}
     out: List[ServingDecision] = []
     for cand, slots, floor in entries:
-        if (prune and incumbent is not None
-                and _floor_cannot_win(obj, wl, incumbent, cand, floor)):
+        if not pool.admit((cand, floor)):
             stats.clusters_pruned += 1
             out.append(ServingDecision(
                 cand.cid, cand, wl, obj, slots, None, None, None,
                 floor=floor,
-                pruned=f"floor loses to {incumbent.cluster_id}"
-                       f"@B{incumbent.slots}"))
+                pruned=f"floor loses to {pool.best.cluster_id}"
+                       f"@B{pool.best.slots}"))
             continue
         pstats = SearchStats()
         dec_best = choose_plan(arch, decode_shape(wl, slots), cand.decode_cc,
@@ -774,8 +777,8 @@ def optimize_serving(arch: ArchConfig, wl: ServeWorkload,
         sd = ServingDecision(cand.cid, cand, wl, obj, slots, sched,
                              dec_best, pre_best, floor=floor, search=pstats)
         out.append(sd)
-        if sd.feasible and (incumbent is None or key(sd) < key(incumbent)):
-            incumbent = sd
+        if sd.feasible:
+            pool.offer(sd)
     stats.cache = cache.stats()
     out.sort(key=key)
     return out

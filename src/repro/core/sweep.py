@@ -96,6 +96,14 @@ class SweepEngine:
     (new shapes, a what-if cluster, one more architecture) keep hitting
     the same cache, so the marginal cost of a new scenario drops toward
     the cache-replay floor rather than paying full plan-walk price.
+
+    ``search`` selects the per-cell plan search: ``"beam"`` (default),
+    ``"exhaustive"``, or ``"batched"`` — the vectorized engine that walks
+    each structure signature once with the whole knob grid as lane
+    vectors and prunes provably-dominated groups by their role floors
+    (see :func:`repro.core.planner.choose_plan`); its winners are
+    bit-identical to the exhaustive scan, so swapping it in never moves a
+    sweep's golden results.
     """
 
     def __init__(self, search: str = "beam", beam_width: int = 4,

@@ -18,6 +18,7 @@ import math
 from typing import Dict, Optional, Tuple
 
 from repro.core.cluster import dtype_bytes
+from repro.core.npvec import dim_int, pmax
 
 
 class MemState(enum.Enum):
@@ -51,7 +52,9 @@ class TensorStat:
     def cells(self) -> int:
         c = self.__dict__.get("_cells")
         if c is None:
-            c = int(math.prod(self.shape)) if self.shape else 1
+            # dim_int: a dim may be a knob-grid lane vector (batched walk),
+            # in which case the product is one too and the cast is skipped.
+            c = dim_int(math.prod(self.shape)) if self.shape else 1
             self.__dict__["_cells"] = c
         return c
 
@@ -77,7 +80,7 @@ class TensorStat:
     def bytes_per_device(self) -> float:
         b = self.__dict__.get("_bpd")
         if b is None:
-            b = self.bytes_in_memory() / max(1, self.shards)
+            b = self.bytes_in_memory() / pmax(1, self.shards)
             self.__dict__["_bpd"] = b
         return b
 

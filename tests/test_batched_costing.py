@@ -1,0 +1,153 @@
+"""Vectorized (lane-vector) plan costing: bit-exactness vs the scalar walk.
+
+One tree walk per structure signature covers a whole knob grid
+(microbatches, grad-reduce dtype) as numpy lanes.  These tests sweep every
+K>1 structure group of real cells and assert the lane extraction equals
+the scalar estimator bit for bit — every CostBreakdown field, every
+ProgramTotals field, and peak HBM.  The hypothesis-randomized
+counterparts live in tests/test_properties.py; this module runs always.
+"""
+import dataclasses
+
+from repro.configs import SHAPES, get_config
+from repro.core.cluster import (multi_pod_config, single_pod_config,
+                                torus_3d_config)
+from repro.core.planner import (SearchStats, _cost_candidate,
+                                _cost_group_vectorized, _structure_key,
+                                cost_candidates_batched, choose_plan,
+                                enumerate_plans)
+
+POD = single_pod_config()
+MULTI = multi_pod_config()
+TORUS = torus_3d_config()
+
+
+def _knob_groups(arch, shape, cc):
+    """Structure groups with more than one knob-grid member."""
+    groups = {}
+    for p in enumerate_plans(arch, shape, cc):
+        groups.setdefault(_structure_key(p, shape.mode), []).append(p)
+    return [g for g in groups.values() if len(g) > 1]
+
+
+def _assert_lane_exact(arch, shape, members, cc):
+    """The vectorized group walk must engage (no fallback) and reproduce
+    the scalar walk bit-for-bit on every lane."""
+    vec = _cost_group_vectorized(arch, shape, members, cc)
+    for p, got in zip(members, vec):
+        base = _cost_candidate(arch, shape, p, cc, None,
+                               SearchStats()).cost
+        assert got.total == base.total, p.describe()
+        for field in ("io", "compute", "collective", "latency"):
+            assert getattr(got.breakdown, field) == \
+                getattr(base.breakdown, field), (p.describe(), field)
+        assert got.peak_hbm_per_device == base.peak_hbm_per_device, \
+            p.describe()
+        assert got.totals.as_tuple() == base.totals.as_tuple(), p.describe()
+
+
+def test_batched_walk_bit_exact_on_every_structure_group():
+    """Every K>1 structure group of one train cell and one decode cell,
+    on the 2D pod, the 3D torus and the pipeline-bearing multi-pod mesh
+    — no sampling, no fallback tolerated."""
+    arch = get_config("qwen1.5-0.5b")
+    for shape_id in ("train_4k", "decode_32k"):
+        shape = SHAPES[shape_id]
+        for cc in (POD, TORUS, MULTI):
+            for members in _knob_groups(arch, shape, cc):
+                _assert_lane_exact(arch, shape, members, cc)
+
+
+def test_batched_walk_bit_exact_on_moe_and_pipelined_groups():
+    """MoE roles (expert-parallel collectives) and multi-pod pipelined
+    roles exercise the per-lane critical-stage argmax and the routed-
+    activation sparsity math."""
+    arch, shape = get_config("phi3.5-moe-42b-a6.6b"), SHAPES["train_4k"]
+    for cc in (POD, MULTI):
+        groups = _knob_groups(arch, shape, cc)
+        assert groups
+        for members in groups:
+            _assert_lane_exact(arch, shape, members, cc)
+    assert any(m.pp_axes
+               for g in _knob_groups(arch, shape, MULTI) for m in g), \
+        "multi-pod grid lost its pipelined roles"
+
+
+def test_batched_decisions_match_scalar_in_input_order():
+    """cost_candidates_batched returns input-order PlanDecisions whose
+    time/hbm/feasibility equal the scalar path's, grid-wide."""
+    arch, shape = get_config("pixtral-12b"), SHAPES["train_4k"]
+    cands = enumerate_plans(arch, shape, POD)
+    batched = cost_candidates_batched(arch, shape, cands, POD)
+    for p, got in zip(cands, batched):
+        base = _cost_candidate(arch, shape, p, POD, None, SearchStats())
+        assert got.plan == p == base.plan
+        assert got.time == base.time
+        assert got.hbm_est == base.hbm_est
+        assert got.feasible == base.feasible
+
+
+def test_batched_walk_counts_one_walk_per_structure():
+    """The engine's whole point: far fewer tree walks than candidates.
+    Walk count is observed by intercepting the group walker."""
+    from repro.core import planner
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["train_4k"]
+    cands = enumerate_plans(arch, shape, POD)
+    n_groups = len({_structure_key(p, shape.mode) for p in cands})
+    walks = []
+    orig = planner._cost_group_vectorized
+    planner._cost_group_vectorized = \
+        lambda *a: walks.append(1) or orig(*a)
+    try:
+        cost_candidates_batched(arch, shape, cands, POD)
+    finally:
+        planner._cost_group_vectorized = orig
+    assert len(walks) <= n_groups < len(cands)
+    assert len(walks) >= 1
+
+
+def test_choose_plan_batched_ranking_matches_exhaustive():
+    """search="batched" at full top_k reproduces the exhaustive ranking
+    decision-for-decision (identical rank keys => identical order)."""
+    for arch_id, cc in (("qwen1.5-0.5b", POD), ("pixtral-12b", MULTI)):
+        arch, shape = get_config(arch_id), SHAPES["train_4k"]
+        k = len(enumerate_plans(arch, shape, cc))
+        ex = choose_plan(arch, shape, cc, top_k=k, search="exhaustive")
+        ba = choose_plan(arch, shape, cc, top_k=k, search="batched")
+        assert [d.plan for d in ex] == [d.plan for d in ba]
+        assert [d.time for d in ex] == [d.time for d in ba]
+        assert [d.feasible for d in ex] == [d.feasible for d in ba]
+
+
+def test_choose_plan_batched_top1_prunes_and_preserves_winner():
+    """At top_k=1 the role-floor dominance pool may skip whole structure
+    groups, but the returned winner must equal the exhaustive winner."""
+    for arch_id in ("qwen1.5-0.5b", "pixtral-12b", "gemma3-12b"):
+        for cc in (POD, MULTI):
+            arch, shape = get_config(arch_id), SHAPES["train_4k"]
+            stats = SearchStats()
+            ba = choose_plan(arch, shape, cc, top_k=1, search="batched",
+                             stats=stats)[0]
+            ex = choose_plan(arch, shape, cc, top_k=1,
+                             search="exhaustive")[0]
+            assert ba.plan == ex.plan
+            assert ba.time == ex.time
+            n_space = len(enumerate_plans(arch, shape, cc))
+            assert stats.costed + stats.pruned_dominated >= n_space
+
+
+def test_scalar_fallback_is_exact_when_lanes_disagree():
+    """A hand-built group whose lanes would take different structural
+    branches must fall back to per-member scalar costing and still return
+    exact decisions (the 'exact by construction' contract)."""
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["train_4k"]
+    base = [p for p in enumerate_plans(arch, shape, POD)
+            if p.microbatches > 1][0]
+    # microbatch values straddling the shape's dp divisibility: eff_degree
+    # collapses on some lanes only, so resident shapes disagree -> the
+    # driver must not silently mis-vectorize
+    odd = [dataclasses.replace(base, microbatches=m) for m in (2, 3, 5, 8)]
+    got = cost_candidates_batched(arch, shape, odd, POD)
+    for p, d in zip(odd, got):
+        ref = _cost_candidate(arch, shape, p, POD, None, SearchStats())
+        assert d.time == ref.time and d.hbm_est == ref.hbm_est

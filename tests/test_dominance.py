@@ -1,0 +1,189 @@
+"""Dominance-pool pruning must never drop the exhaustive winner.
+
+:class:`repro.core.dominance.DominancePool` centralizes the incumbent/
+floor pruning of the three optimizers.  Unit tests pin its two modes
+(rank-key incumbent, Pareto frontier); the integration tests full-
+enumerate the PR-5 pipeline-inclusive resource grid and the PR-6 serving
+grid and assert pruned search == exhaustive winner, then re-run on
+seeded-random cluster subsets (the order/subset robustness property).
+"""
+import random
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.costmodel import PlanCostCache
+from repro.core.dominance import DominancePool, pareto_dominates
+from repro.core.planner import SearchStats, choose_plan
+from repro.core.resource import (ResourceSearchStats, enumerate_clusters,
+                                 optimize_resources)
+from repro.core.serving import ServingCandidate, disaggregate, optimize_serving
+from repro.core.sweep import CLUSTERS
+from repro.core.workload import SERVE_WORKLOADS
+
+CHAT = SERVE_WORKLOADS["chat_2k"]
+GRID = enumerate_clusters(pod_counts=(1, 2))
+
+
+# ------------------------------------------------------------- unit: Pareto
+
+
+def test_pareto_dominates_semantics():
+    assert pareto_dominates((1, 2), (2, 2))        # <= all, < one
+    assert not pareto_dominates((2, 2), (1, 2))
+    assert not pareto_dominates((1, 2), (1, 2))    # ties never dominate
+    assert not pareto_dominates((1, 3), (2, 2))    # incomparable
+    assert pareto_dominates((1, 1, 1), (1, 1, 2))
+
+
+def test_pareto_pool_keeps_frontier_and_counts():
+    pool = DominancePool()
+    assert pool.admit((3.0, 5.0)) and pool.offer((3.0, 5.0))
+    assert pool.admit((5.0, 3.0)) and pool.offer((5.0, 3.0))
+    assert len(pool) == 2                           # incomparable pair
+    # dominated bound: pruned without costing
+    assert not pool.admit((4.0, 6.0))
+    assert pool.admitted == 2 and pool.pruned == 1
+    # exact ties are admitted AND offered: strict dominance never fires
+    assert pool.admit((3.0, 5.0))
+    assert pool.offer((3.0, 5.0))
+    assert len(pool) == 3
+    # a dominator evicts everything it beats
+    assert pool.offer((2.0, 2.0))
+    assert pool.frontier == [(2.0, 2.0)]
+
+
+def test_pareto_pool_never_prunes_the_monotone_optimum():
+    """Any ranking monotone in each coordinate picks its optimum from the
+    admitted stream: the exhaustive winner is never strictly dominated,
+    hence never pruned — for random streams in random orders."""
+    rng = random.Random(7)
+    for _ in range(50):
+        pts = [(rng.randint(0, 9), rng.randint(0, 9), rng.randint(0, 9))
+               for _ in range(30)]
+        for key in (lambda t: t, lambda t: (t[2], t[0], t[1]),
+                    lambda t: sum(t)):
+            best = min(pts, key=key)
+            pool = DominancePool()
+            survived = []
+            for t in pts:
+                if pool.admit(t):
+                    pool.offer(t)
+                    survived.append(t)
+            assert key(min(survived, key=key)) == key(best)
+
+
+# ----------------------------------------------------------- unit: rank-key
+
+
+def test_rank_key_pool_never_prunes_without_incumbent():
+    pool = DominancePool(rank_key=lambda d: d,
+                         cannot_win=lambda bound, best: True)
+    assert pool.admit(123)                    # no incumbent yet
+    pool.offer(5)
+    assert not pool.admit(123)                # now the predicate rules
+    assert pool.pruned == 1
+
+
+def test_rank_key_pool_keeps_strictly_best_incumbent():
+    pool = DominancePool(rank_key=lambda d: d)
+    assert pool.offer(5) and pool.best == 5
+    assert not pool.offer(5)                  # ties do not replace
+    assert pool.offer(3) and pool.best == 3
+    assert not pool.offer(4)
+    assert len(pool) == 1
+
+
+# ----------------------------------- integration: plan-search group pruning
+
+
+def test_batched_plan_search_prunes_groups_and_keeps_winner():
+    """choose_plan(search="batched", top_k=1) skips whole structure
+    groups by their role floors on at least one real cell — and still
+    returns the exhaustive winner on every cell."""
+    pruned_anywhere = 0
+    for arch_id in ("qwen1.5-0.5b", "gemma3-12b", "qwen1.5-4b"):
+        for cc in (CLUSTERS["pod"], CLUSTERS["v5p-dcn"]):
+            arch, shape = get_config(arch_id), SHAPES["train_4k"]
+            stats = SearchStats()
+            ba = choose_plan(arch, shape, cc, top_k=1, search="batched",
+                             stats=stats)[0]
+            ex = choose_plan(arch, shape, cc, top_k=1,
+                             search="exhaustive")[0]
+            assert (ba.plan, ba.time) == (ex.plan, ex.time), arch_id
+            pruned_anywhere += stats.pruned_dominated
+    assert pruned_anywhere > 0, "role-floor pruning never engaged"
+
+
+# ------------------------------------ integration: PR-5 resource co-search
+
+
+@pytest.mark.parametrize("objective,slo", [("step_time", None),
+                                           ("cost", None),
+                                           ("job_cost", None),
+                                           ("slo", 0.25)])
+def test_resource_pruning_keeps_exhaustive_winner(objective, slo):
+    """Full enumeration over the pipeline-inclusive cluster grid (DCN
+    multi-slice members carry pp roles since PR 5): the pool-pruned
+    search returns the exhaustive scan's winner under every objective."""
+    cache = PlanCostCache()
+    for arch_id in ("qwen1.5-0.5b", "mamba2-1.3b"):
+        arch, shape = get_config(arch_id), SHAPES["train_4k"]
+        stats = ResourceSearchStats()
+        pruned = optimize_resources(arch, shape, GRID, objective=objective,
+                                    slo=slo, cache=cache, stats=stats)
+        full = optimize_resources(arch, shape, GRID, objective=objective,
+                                  slo=slo, search="exhaustive", cache=cache)
+        assert pruned[0].cluster_id == full[0].cluster_id, arch_id
+        assert pruned[0].decision.plan == full[0].decision.plan
+        assert pruned[0].time == full[0].time
+        # the pool actually pruned: its rows carry the incumbent's id
+        marks = [d for d in pruned if d.pruned]
+        assert stats.clusters_pruned == len(marks)
+        for d in marks:
+            assert "loses to" in d.pruned
+
+
+def test_resource_pruning_on_seeded_random_cluster_subsets():
+    """The winner-preservation property must hold for ANY subset of the
+    grid (incumbents form in different orders): seeded random subsets,
+    pruned vs exhaustive, bit-equal winners."""
+    cache = PlanCostCache()
+    arch, shape = get_config("qwen1.5-0.5b"), SHAPES["train_4k"]
+    for seed in range(6):
+        rng = random.Random(seed)
+        subset = rng.sample(GRID, rng.randint(3, len(GRID)))
+        pruned = optimize_resources(arch, shape, subset,
+                                    objective="job_cost", cache=cache)
+        full = optimize_resources(arch, shape, subset, objective="job_cost",
+                                  search="exhaustive", cache=cache)
+        assert pruned[0].cluster_id == full[0].cluster_id, seed
+        assert pruned[0].cost_per_job == full[0].cost_per_job, seed
+
+
+# ------------------------------------- integration: PR-6 serving co-search
+
+
+def test_serving_pruning_keeps_exhaustive_winner():
+    """The (candidate x slots x plan) serving grid with a disaggregated
+    member: pool-pruned search == exhaustive winner for both serving
+    objectives, and the pruned rows carry the pool incumbent's identity."""
+    cands = ([ServingCandidate(cid, CLUSTERS[cid], CLUSTERS[cid])
+              for cid in ("pod", "v5p-pod", "v5p-dcn")]
+             + [disaggregate(CLUSTERS["v5p-dcn"])])
+    cache = PlanCostCache()
+    for objective in ("tokens_per_dollar", "ttft_p99"):
+        stats = ResourceSearchStats()
+        beam = optimize_serving(get_config("qwen1.5-0.5b"), CHAT, cands,
+                                objective=objective, cache=cache,
+                                stats=stats)
+        full = optimize_serving(get_config("qwen1.5-0.5b"), CHAT, cands,
+                                objective=objective, search="exhaustive",
+                                cache=cache)
+        assert (beam[0].cluster_id, beam[0].slots) == \
+            (full[0].cluster_id, full[0].slots), objective
+        assert beam[0].decode_decision.plan == full[0].decode_decision.plan
+        for d in beam:
+            if d.pruned:
+                assert f"{beam[0].cluster_id}@B{beam[0].slots}" \
+                    in d.pruned or "loses to" in d.pruned

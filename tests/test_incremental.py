@@ -1,0 +1,146 @@
+"""Incremental re-costing: a single-knob mutation equals from-scratch.
+
+:class:`repro.core.planner.IncrementalCoster` re-costs a mutated plan
+through the shared sub-plan cache; only the dirty subtree recomputes.
+These tests assert the contract per knob — remat, microbatches,
+grad-reduce dtype, and (for serving) the slot count via a shape override —
+and that the cache fingerprint keeps calibrated and uncalibrated worlds
+apart (a profile swap must never replay stale entries).
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.calibration import CalibrationProfile
+from repro.core.cluster import single_pod_config
+from repro.core.costmodel import PlanCostCache
+from repro.core.planner import (IncrementalCoster, SearchStats,
+                                ShardingPlan, _cost_candidate)
+from repro.core.serving import decode_shape
+from repro.core.workload import SERVE_WORKLOADS
+
+CC = single_pod_config()
+ARCH = get_config("qwen1.5-0.5b")
+TRAIN = SHAPES["train_4k"]
+BASE = ShardingPlan(name="dp+tp", batch_axes=("data",), tp_axes=("model",),
+                    remat="none", microbatches=2,
+                    grad_reduce_dtype="float32")
+
+
+def _scratch(plan, shape=TRAIN, cc=CC):
+    """From-scratch scalar costing with a cold private cache."""
+    return _cost_candidate(ARCH, shape, plan, cc, PlanCostCache(),
+                           SearchStats())
+
+
+def _assert_equal(a, b, what):
+    assert a.time == b.time, what
+    assert a.hbm_est == b.hbm_est, what
+    assert a.feasible == b.feasible, what
+    assert a.cost.totals.as_tuple() == b.cost.totals.as_tuple(), what
+    for field in ("io", "compute", "collective", "latency"):
+        assert getattr(a.cost.breakdown, field) == \
+            getattr(b.cost.breakdown, field), (what, field)
+
+
+@pytest.mark.parametrize("mutation", [
+    {"remat": "selective"},
+    {"remat": "full"},
+    {"microbatches": 4},
+    {"microbatches": 8},
+    {"microbatches": 1},
+    {"grad_reduce_dtype": "bfloat16"},
+    {"grad_reduce_dtype": "float8_e4m3fn"},
+    {"overlap": False},
+    {"zero1": True},
+])
+def test_single_knob_recost_equals_from_scratch(mutation):
+    ic = IncrementalCoster(ARCH, TRAIN, CC)
+    ic.cost(BASE)
+    got = ic.recost(BASE, **mutation)
+    want = _scratch(dataclasses.replace(BASE, **mutation))
+    _assert_equal(got, want, mutation)
+
+
+def test_recost_is_marginal_not_full():
+    """The whole point: after the base walk, a knob flip re-walks only
+    the dirty subtree — the marginal walk must be mostly cache hits."""
+    ic = IncrementalCoster(ARCH, TRAIN, CC)
+    ic.cost(BASE)
+    base_misses = ic.marginal.misses
+    assert base_misses > 0                      # cold walk populated it
+    ic.recost(BASE, grad_reduce_dtype="bfloat16")
+    m = ic.marginal
+    assert m.hits > 0, "mutation re-walked nothing from cache"
+    assert m.misses < base_misses, \
+        f"grad-dtype flip recomputed {m.misses}/{base_misses} blocks"
+    # re-costing the original plan again is a pure replay
+    ic.recost(BASE)
+    assert ic.marginal.misses == 0
+
+
+def test_knob_walkthrough_every_mutation_stays_exact():
+    """A chained session: each mutation applies to the previous plan (not
+    the base), as an anytime search would drive it."""
+    ic = IncrementalCoster(ARCH, TRAIN, CC)
+    plan = BASE
+    ic.cost(plan)
+    for mutation in ({"remat": "selective"}, {"microbatches": 4},
+                     {"grad_reduce_dtype": "bfloat16"}, {"remat": "none"},
+                     {"microbatches": 2}):
+        plan = dataclasses.replace(plan, **mutation)
+        got = ic.recost(plan)
+        _assert_equal(got, _scratch(plan), mutation)
+
+
+def test_slots_knob_via_shape_override():
+    """Serving's slot count is a *shape* knob: re-costing a decode plan
+    under a re-slotted shape through the shared cache must equal the
+    from-scratch walk of that shape."""
+    wl = SERVE_WORKLOADS["chat_2k"]
+    plan = ShardingPlan(name="dp+tp", batch_axes=("data",),
+                        tp_axes=("model",))
+    ic = IncrementalCoster(ARCH, decode_shape(wl, 8), CC)
+    ic.cost(plan)
+    for slots in (32, 128, 8):
+        shape = decode_shape(wl, slots)
+        got = ic.recost(plan, shape=shape)
+        want = _scratch(plan, shape=shape)
+        _assert_equal(got, want, f"slots={slots}")
+
+
+def test_calibration_profile_separates_cache_entries():
+    """One shared cache serving calibrated and uncalibrated ClusterConfigs
+    must keep their sub-plan entries apart (the cc fingerprint embeds the
+    profile) — and each world's incremental answers stay exact."""
+    profile = CalibrationProfile(chip_name=CC.chip.name, hbm_fraction=0.5,
+                                 ici_fraction=0.6)
+    cal = CC.with_calibration(profile)
+    cache = PlanCostCache()
+    ic_raw = IncrementalCoster(ARCH, TRAIN, CC, cache=cache)
+    ic_cal = IncrementalCoster(ARCH, TRAIN, cal, cache=cache)
+    raw = ic_raw.cost(BASE)
+    got_cal = ic_cal.cost(BASE)
+    want_cal = _scratch(BASE, cc=cal)
+    _assert_equal(got_cal, want_cal, "calibrated world")
+    assert got_cal.time > raw.time, \
+        "derated profile must slow the plan down"
+    # warm replays on both sides of the fingerprint stay exact
+    _assert_equal(ic_raw.cost(BASE), raw, "uncalibrated replay")
+    assert ic_raw.marginal.misses == 0
+    _assert_equal(ic_cal.cost(BASE), want_cal, "calibrated replay")
+    assert ic_cal.marginal.misses == 0
+
+
+def test_incremental_matches_batched_engine_lanewise():
+    """Cross-check the two PR-8 engines against each other: for one knob
+    grid, incremental re-costs and the lane-vector walk agree exactly."""
+    from repro.core.planner import cost_candidates_batched
+    grid = [dataclasses.replace(BASE, microbatches=m, grad_reduce_dtype=g)
+            for m in (2, 4, 8) for g in ("float32", "bfloat16")]
+    batched = cost_candidates_batched(ARCH, TRAIN, grid, CC)
+    ic = IncrementalCoster(ARCH, TRAIN, CC)
+    ic.cost(BASE)
+    for p, b in zip(grid, batched):
+        _assert_equal(ic.recost(p), b, p.describe())

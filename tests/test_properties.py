@@ -357,6 +357,52 @@ def test_pipelined_cache_replay_bit_exact(stages, m):
             assert got.peak_hbm_per_device == base.peak_hbm_per_device
 
 
+# ------------------------------------------------------------------------
+# Batched (lane-vector) costing: one walk per structure signature must be
+# bit-exact vs. the scalar walk on every knob-grid member — every
+# CostBreakdown field, every ProgramTotals field, peak HBM (the ISSUE-8
+# acceptance properties).  The programs under test are the real enumerated
+# LM step plans: layer loops, remat re-emission, microbatch loops, grad
+# branches, and (on the multi-pod mesh) software-pipelined stages.
+# ------------------------------------------------------------------------
+
+import dataclasses as _dc
+
+from repro.configs import SHAPES, get_config
+from repro.core.cluster import multi_pod_config
+from test_batched_costing import _assert_lane_exact, _knob_groups
+
+MULTI = multi_pod_config()
+_MESHES = {"pod": POD, "torus": TORUS, "multi": MULTI}
+
+
+@settings(max_examples=12, deadline=None)
+@given(arch_id=st.sampled_from(["qwen1.5-0.5b", "pixtral-12b",
+                                "phi3.5-moe-42b-a6.6b", "mamba2-1.3b"]),
+       mesh=st.sampled_from(["pod", "torus", "multi"]),
+       mult=st.sampled_from([1, 2, 4]),
+       data=st.data())
+def test_batched_walk_bit_exact_on_enumerated_knob_grids(arch_id, mesh,
+                                                         mult, data):
+    """For a random (arch, mesh, batch) cell, a random structure group of
+    the enumerated plan space costs bit-exact through one lane-vector
+    walk — loops, remat branches, microbatch wraps and (multi-pod)
+    pipelined stages included."""
+    arch = get_config(arch_id)
+    shape = _dc.replace(SHAPES["train_4k"],
+                        global_batch=SHAPES["train_4k"].global_batch * mult)
+    cc = _MESHES[mesh]
+    groups = _knob_groups(arch, shape, cc)
+    assert groups, "knob grid unexpectedly degenerate"
+    members = data.draw(st.sampled_from(groups))
+    _assert_lane_exact(arch, shape, members, cc)
+
+
+# (The deterministic, no-sampling counterparts — every structure group of
+# whole cells, input-order decision equality — live in
+# tests/test_batched_costing.py so they run even without hypothesis.)
+
+
 @settings(max_examples=30, deadline=None)
 @given(sh=st.sampled_from([1, 2, 4, 8, 16]))
 def test_sharded_collective_payload_scales(sh):
