@@ -68,9 +68,9 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (bench_accuracy, bench_calibrate,
-                            bench_costing_speed, bench_plan_costing,
-                            bench_resource_opt, bench_roofline,
-                            bench_scenarios, bench_serving)
+                            bench_costing_speed, bench_fusion,
+                            bench_plan_costing, bench_resource_opt,
+                            bench_roofline, bench_scenarios, bench_serving)
     mods = [
         ("scenarios", bench_scenarios),
         ("plan_costing", bench_plan_costing),
@@ -78,6 +78,7 @@ def main() -> None:
         ("costing_speed", bench_costing_speed),
         ("resource_opt", bench_resource_opt),
         ("serving", bench_serving),
+        ("fusion", bench_fusion),
         ("roofline", bench_roofline),
         ("calibrate", bench_calibrate),
     ]

@@ -32,6 +32,20 @@ from repro.core.symbols import MemState, TensorStat
 TSMM_CORR = 0.5          # symmetric output: half the computation
 SOLVE_CHOL_CORR = 1.0 / 3.0
 
+# Fused-epilogue flop charges per output cell — MUST stay equal to the
+# standalone elementwise ops they replace (``silu``/``gelu``/``layernorm``
+# below), so folding an epilogue into its producing matmul changes HBM
+# traffic and *nothing else*: the fused-vs-materialized cost delta is
+# exactly the intermediate's round trip (see docs/COST_MODEL.md
+# §Costing fusion plans).
+EPILOGUE_FLOPS_PER_CELL = {"bias": 1.0, "silu": 6.0, "gelu": 8.0,
+                           "layernorm": 6.0}
+
+# Materialized attention scores and the softmax over them run in fp32
+# (XLA upcasts bf16 logits before the reduction), so the unfused score
+# round trip is priced at accumulator width.
+ATTN_SCORE_ACC_BYTES = 4.0
+
 
 @dataclasses.dataclass
 class OpProfile:
@@ -80,7 +94,23 @@ def _out(shape, like: TensorStat, dtype=None, sparsity=1.0) -> TensorStat:
 
 @register("matmul")
 def _matmul(a: TensorStat, b: TensorStat, **attrs) -> OpProfile:
-    """General (batched) matmul: [..., m, k] x [..., k, n]."""
+    """General (batched) matmul: [..., m, k] x [..., k, n].
+
+    Fusion variants (the costed plan dimension — see docs/COST_MODEL.md
+    §Costing fusion plans):
+
+      * ``epilogue="bias"|"silu"|"gelu"|"layernorm"`` folds the named
+        elementwise tail into the matmul flush: its flops ride the matmul
+        (same per-cell charge as the standalone op) but the intermediate
+        never round-trips HBM — the caller simply does not emit the
+        separate op.  ``epi_cols`` narrows the epilogue to the first
+        ``epi_cols`` output columns (a gated MLP applies the activation to
+        d_ff of its 3*d_ff fused projection).
+      * ``sink_cast_bytes=<width>`` sinks a dtype cast into the output
+        write: the result leaves the MXU accumulator at ``width`` bytes
+        per cell instead of the input dtype's, replacing a materialized
+        read-modify-write ``cast`` op downstream.
+    """
     *ba, m, k = a.shape
     *bb, k2, n = b.shape
     assert k == k2, f"matmul contraction mismatch {a.shape} x {b.shape}"
@@ -89,7 +119,18 @@ def _matmul(a: TensorStat, b: TensorStat, **attrs) -> OpProfile:
     s = a.sparsity * b.sparsity
     flops = 2.0 * batch * m * n * k * s
     out = _out(tuple(ba or bb) + (m, n), a)
-    return OpProfile(flops, _bytes(a) + _bytes(b), _bytes(out), out, "mxu")
+    reads = _bytes(a) + _bytes(b)
+    writes = _bytes(out)
+    epi = attrs.get("epilogue")
+    if epi:
+        cols = attrs.get("epi_cols", n)
+        flops = flops + EPILOGUE_FLOPS_PER_CELL[epi] * batch * m * cols
+        if epi == "bias":
+            reads = reads + n * dtype_bytes(a.dtype)
+    sink = attrs.get("sink_cast_bytes")
+    if sink is not None:
+        writes = out.cells * as_payload(sink)
+    return OpProfile(flops, reads, writes, out, "mxu")
 
 
 @register("tsmm")
@@ -226,25 +267,74 @@ def _embedding(ids: TensorStat, table: TensorStat, **attrs) -> OpProfile:
 # ---------------------------------------------------------------------------
 
 
+def avg_keys_per_query(sq: int, skv: int, window, causal: bool) -> float:
+    """Exact average number of keys each query attends to.
+
+    Queries occupy the last ``sq`` positions of a ``skv``-long context
+    (decode/suffix convention): query i sees ``min(skv - sq + i + 1, w)``
+    keys under a causal mask with window ``w`` (``w = skv`` when
+    unwindowed).  The closed-form average prices windowed *and* causal
+    attention correctly where the window overhangs the sequence start —
+    the legacy profile's all-or-nothing ``frac=0.5`` granted no causal
+    discount there at all.
+    """
+    w = min(window, skv) if window else skv
+    if not causal:
+        return float(w)
+    lo, hi = skv - sq + 1, skv          # visible-key counts, pre-clamp
+    if w >= hi:
+        return (lo + hi) / 2.0
+    if w <= lo:
+        return float(w)
+    # queries with <= w visible keys average (lo+w)/2; the rest clamp at w
+    return ((w - lo + 1) * (lo + w) / 2.0 + (hi - w) * w) / sq
+
+
 @register("attention")
 def _attention(q: TensorStat, k: TensorStat, v: TensorStat, **attrs) -> OpProfile:
     """Scaled dot-product attention, optionally windowed/causal.
 
     q: [B, Hq, Sq, D], k/v: [B, Hkv, Skv, D].  ``window`` limits keys per
     query (sliding window); causal halves the score work.
+
+    The ``fused`` attr selects the fusion variant (the costed plan
+    dimension).  Absent — the legacy profile: flash-style fusion assumed
+    unconditionally (reads only q+k+v) and the coarse all-or-nothing
+    causal discount; every pre-fusion baseline rides on this path
+    bit-identically.  ``fused=True`` — the flash plan, priced with the
+    exact averaged keys-per-query discount.  ``fused=False`` — the
+    *materialized* plan: same flops, plus the B*Hq*Sq*Skv score matrix's
+    HBM round trip (fp32 scores written + read by softmax, probs written
+    + read by the AV matmul at input width).
     """
     b, hq, sq, d = q.shape
     _, hkv, skv, _ = k.shape
     window = attrs.get("window")
     eff_kv = min(skv, window) if window else skv
     causal = attrs.get("causal", False)
-    frac = 0.5 if (causal and eff_kv == skv and sq == skv) else 1.0
-    score_flops = 2.0 * b * hq * sq * eff_kv * d * frac
-    av_flops = 2.0 * b * hq * sq * eff_kv * d * frac
-    softmax_flops = 5.0 * b * hq * sq * eff_kv * frac
     out = _out((b, hq, sq, d), q)
     reads = _bytes(q) + _bytes(k) + _bytes(v)
-    return OpProfile(score_flops + av_flops + softmax_flops, reads, _bytes(out), out, "mxu")
+    if "fused" not in attrs:
+        frac = 0.5 if (causal and eff_kv == skv and sq == skv) else 1.0
+        score_flops = 2.0 * b * hq * sq * eff_kv * d * frac
+        av_flops = 2.0 * b * hq * sq * eff_kv * d * frac
+        softmax_flops = 5.0 * b * hq * sq * eff_kv * frac
+        return OpProfile(score_flops + av_flops + softmax_flops, reads,
+                         _bytes(out), out, "mxu")
+    avg = avg_keys_per_query(sq, skv, window, causal)
+    score_flops = 2.0 * b * hq * sq * avg * d
+    av_flops = 2.0 * b * hq * sq * avg * d
+    softmax_flops = 5.0 * b * hq * sq * avg
+    writes = _bytes(out)
+    if not attrs["fused"]:
+        # The materialized plan pays the full rectangular score matrix
+        # (masked entries are computed-and-discarded, not skipped).
+        score_cells = b * hq * sq * skv
+        bpe = dtype_bytes(q.dtype)
+        reads = reads + score_cells * (ATTN_SCORE_ACC_BYTES + bpe)
+        writes = writes + score_cells * (ATTN_SCORE_ACC_BYTES + bpe)
+    return OpProfile(score_flops + av_flops + softmax_flops, reads,
+                     writes, out, "mxu")
 
 
 @register("moe_ffn")
@@ -277,8 +367,30 @@ def _ssd_scan(x: TensorStat, **attrs) -> OpProfile:
     chunk = attrs.get("chunk", 256)
     flops = 2.0 * b * s * h * p * (chunk + 2 * n)
     out = _out(x.shape, x)
-    state_bytes = b * h * p * n * dtype_bytes(x.dtype) * (s // max(chunk, 1))
+    # ceil, not floor: a sequence shorter than one chunk still carries its
+    # state once (floor costed s < chunk at ZERO state bytes).  Written as
+    # -(-s // chunk) to stay lane-vector safe.
+    n_chunks = -(-s // max(chunk, 1))
+    state_bytes = b * h * p * n * dtype_bytes(x.dtype) * n_chunks
     return OpProfile(flops, _bytes(x) + state_bytes, _bytes(out), out, "mxu")
+
+
+@register("cast")
+def _cast(x: TensorStat, **attrs) -> OpProfile:
+    """Materialized dtype cast: one read-modify-write over the buffer.
+
+    ``from_bytes``/``to_bytes`` override the element widths (the input
+    stat may stand in for a buffer of another dtype — e.g. the fp32
+    gradient accumulator addressed through the ``params`` variable).  The
+    fused alternative is no instruction at all: ``sink_cast_bytes`` on the
+    producing matmul writes the target width straight out of the
+    accumulator, so this op's whole profile IS the fusion delta.
+    """
+    cells = as_payload(x.cells)
+    from_b = attrs.get("from_bytes", dtype_bytes(x.dtype))
+    to_b = attrs.get("to_bytes", dtype_bytes(x.dtype))
+    out = _out(x.shape, x)
+    return OpProfile(1.0 * cells, cells * from_b, cells * to_b, out, "vpu")
 
 
 @register("cross_entropy")

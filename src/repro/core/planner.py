@@ -57,6 +57,27 @@ OVERLAP_FRACTION = 0.7
 MICRO_OPTS = (1, 2, 4, 8)
 MAX_MICROBATCHES = MICRO_OPTS[-1]
 
+# The operator-fusion plan dimension (PAPERS.md arXiv 1801.00829 — fusion
+# plans as a costed compiler decision).  "off" emits the legacy fusion-
+# blind profiles bit-identically (every pre-fusion baseline rides on it);
+# "none" is the honest *materialized* plan (unfused attention pays its
+# score-matrix round trip, casts are explicit instructions); "full" is the
+# fused plan (flash attention, act/norm epilogues folded into their
+# producing matmuls, casts sunk into the output write).  The value of the
+# knob is exactly the HBM-traffic delta ProgramTotals already tracks.
+FUSION_OPTS = ("off", "none", "full")
+
+
+def _fusion_space(fusion: str) -> List[str]:
+    """The enumerated fusion settings: ``"search"`` opens the full knob,
+    any single setting pins it (default ``"off"`` — the legacy space)."""
+    if fusion == "search":
+        return list(FUSION_OPTS)
+    if fusion in FUSION_OPTS:
+        return [fusion]
+    raise ValueError(f"unknown fusion setting {fusion!r}; "
+                     f"one of {FUSION_OPTS + ('search',)}")
+
 
 # ---------------------------------------------------------------------------
 # Sharding plan: the searchable decision vector
@@ -106,6 +127,7 @@ class ShardingPlan:
     grad_reduce_dtype: str = "float32"
     overlap: bool = True
     zero1: bool = True                     # shard optimizer state over data
+    fusion: str = "off"                    # off | none | full (FUSION_OPTS)
 
     def degree(self, cc: ClusterConfig, axes: Tuple[str, ...]) -> int:
         d = 1
@@ -146,6 +168,8 @@ class ShardingPlan:
         if (isinstance(self.grad_reduce_dtype, VecKnob)
                 or self.grad_reduce_dtype != "float32"):
             bits.append(f"gdtype={self.grad_reduce_dtype}")
+        if self.fusion != "off":           # "off" keeps legacy strings
+            bits.append(f"fusion={self.fusion}")
         return f"{self.name}[{','.join(bits)}]"
 
 
@@ -192,6 +216,15 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
     batch = shape.global_batch
     q_len = 1 if mode == "decode" else shape.seq_len
     kv_len = shape.seq_len
+    # The fusion plan knob.  "off" must emit EXACTLY the legacy tree (no
+    # new attrs, no new instructions): the frozen pre-fusion baselines are
+    # byte-identical on that path.  Otherwise every composite op names its
+    # variant: attention carries fused=True/False, matmuls grow epilogue /
+    # cast-sinking attrs ("full") or the materialized intermediates stay
+    # separate instructions ("none", plus explicit casts).
+    fus = plan.fusion
+    attn_attrs = {} if fus == "off" else {"fused": fus == "full"}
+    proj_epi = {"epilogue": "layernorm"} if fus == "full" else {}
     mb_batch = pmax(batch // micro, 1)         # global batch per microbatch
     tokens = mb_batch * q_len                  # global tokens per microbatch
     act_axes = plan.batch_axes + plan.seq_axes # divide token work
@@ -272,7 +305,7 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                 ops.append(CreateVar(f"{prefix}kc", _ts((mb_batch, 1, kv_len, m.cache_dim), dt, dp)))
                 ops.append(CreateVar(f"{prefix}vc", _ts((mb_batch, 1, kv_len, m.kv_lora_rank), dt, dp)))
                 emit("attention", (f"{prefix}q4", f"{prefix}kc", f"{prefix}vc"),
-                     "attn", mm_axes, causal=False)
+                     "attn", mm_axes, causal=False, **attn_attrs)
                 v_dim = m.kv_lora_rank
             else:
                 kv_tokens = mb_batch * kv_len
@@ -285,11 +318,12 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                 ops.append(CreateVar(f"{prefix}k4", _ts((mb_batch, nh, kv_len, m.qk_head_dim), dt, head_sh)))
                 ops.append(CreateVar(f"{prefix}v4", _ts((mb_batch, nh, kv_len, m.v_head_dim), dt, head_sh)))
                 emit("attention", (f"{prefix}q4", f"{prefix}k4", f"{prefix}v4"),
-                     "attn", mm_axes, causal=True)
+                     "attn", mm_axes, causal=True, **attn_attrs)
                 v_dim = m.v_head_dim
             ops.append(CreateVar(f"{prefix}ao", _ts((tokens, nh * v_dim), dt, head_sh)))
             ops.append(CreateVar(f"{prefix}w_o", _ts((nh * v_dim, d), dt, weight_shards)))
-            emit("matmul", (f"{prefix}ao", f"{prefix}w_o"), "proj", mm_axes)
+            emit("matmul", (f"{prefix}ao", f"{prefix}w_o"), "proj", mm_axes,
+                 **proj_epi)
         else:
             ops.append(CreateVar(f"{prefix}w_qkv",
                                  _ts((d, (nh + 2 * nkv) * hd), dt, weight_shards)))
@@ -300,18 +334,24 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
             ops.append(CreateVar(f"{prefix}k4", _ts((mb_batch, nkv, kv_len, hd), dt, kv_sh)))
             ops.append(CreateVar(f"{prefix}v4", _ts((mb_batch, nkv, kv_len, hd), dt, kv_sh)))
             emit("attention", (f"{prefix}q4", f"{prefix}k4", f"{prefix}v4"),
-                 "attn", mm_axes, causal=(mode != "decode"), window=window)
+                 "attn", mm_axes, causal=(mode != "decode"), window=window,
+                 **attn_attrs)
             ops.append(CreateVar(f"{prefix}ao", _ts((tokens, nh * hd), dt, head_sh)))
             ops.append(CreateVar(f"{prefix}w_o", _ts((nh * hd, d), dt, weight_shards)))
-            emit("matmul", (f"{prefix}ao", f"{prefix}w_o"), "proj", mm_axes)
+            emit("matmul", (f"{prefix}ao", f"{prefix}w_o"), "proj", mm_axes,
+                 **proj_epi)
         if tp > 1:
             # TP output reduction (Megatron g-op): payload = local act slice
             ops.append(Collective("all_reduce", f"{prefix}proj_0", plan.tp_axes,
                                   bytes_override=tokens * d * bpe / act_sh))
-        ops.append(CreateVar(f"{prefix}hn", _ts((tokens, d), dt, act_sh)))
-        for r in range(reps):
-            ops.append(Compute("layernorm", (f"{prefix}hn",), f"{prefix}n_{r}",
-                               exec_type="DIST", shard_axes=act_axes))
+        if fus != "full":
+            # materialized post-attention norm: its own HBM round trip
+            # ("full" folded it into the proj matmul's epilogue above)
+            ops.append(CreateVar(f"{prefix}hn", _ts((tokens, d), dt, act_sh)))
+            for r in range(reps):
+                ops.append(Compute("layernorm", (f"{prefix}hn",),
+                                   f"{prefix}n_{r}", exec_type="DIST",
+                                   shard_axes=act_axes))
 
     def emit_ffn(ops: List, prefix: str, reps: int) -> None:
         def emit(opcode, ins, out, axes, **attrs):
@@ -348,11 +388,20 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
                                       bytes_override=a2a))
         elif arch.d_ff:
             width = (3 if arch.gated_mlp else 2) * arch.d_ff
+            act = "silu" if arch.gated_mlp else "gelu"
             ops.append(CreateVar(f"{prefix}w_ff", _ts((d, width), dt, weight_shards)))
-            emit("matmul", (f"{prefix}x2d", f"{prefix}w_ff"), "ffn", mm_axes)
-            ops.append(CreateVar(f"{prefix}ffh", _ts((tokens, arch.d_ff), dt, head_sh)))
-            emit("silu" if arch.gated_mlp else "gelu", (f"{prefix}ffh",), "act",
-                 mm_axes)
+            if fus == "full":
+                # activation folded into the up-projection's flush — the
+                # (tokens, d_ff) intermediate never round-trips HBM
+                emit("matmul", (f"{prefix}x2d", f"{prefix}w_ff"), "ffn",
+                     mm_axes, epilogue=act, epi_cols=arch.d_ff)
+                ops.append(CreateVar(f"{prefix}ffh",
+                                     _ts((tokens, arch.d_ff), dt, head_sh)))
+            else:
+                emit("matmul", (f"{prefix}x2d", f"{prefix}w_ff"), "ffn", mm_axes)
+                ops.append(CreateVar(f"{prefix}ffh",
+                                     _ts((tokens, arch.d_ff), dt, head_sh)))
+                emit(act, (f"{prefix}ffh",), "act", mm_axes)
             ops.append(CreateVar(f"{prefix}w_down", _ts((arch.d_ff, d), dt, weight_shards)))
             emit("matmul", (f"{prefix}ffh", f"{prefix}w_down"), "ffo", mm_axes)
             if tp > 1:
@@ -460,6 +509,18 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         if arch.moe is not None and ep > 1:
             grad_bytes /= ep
         reduce_axes = tuple(a for a in plan.batch_axes if a not in plan.fsdp_axes)
+        if fus == "none" and plan.degree(cc, reduce_axes) > 1:
+            # Materialized grad-dtype cast: the fp32 accumulator (global
+            # param count, addressed through the params variable) is read
+            # and re-written at wire width before the reduce.  "full"
+            # sinks this into the producing wgrad writes (no instruction,
+            # no traffic — the fused matmul's sink_cast_bytes semantics);
+            # "off" is the legacy tree, which never priced the cast.
+            tail.children.append(Compute(
+                "cast", ("params",), "grad_wire", exec_type="DIST",
+                shard_axes=plan.fsdp_axes + plan.tp_axes + plan.pp_axes,
+                attrs={"from_bytes": 4,
+                       "to_bytes": _gd_bytes(plan.grad_reduce_dtype)}))
         if plan.degree(cc, reduce_axes) > 1 and fsdp == 1:
             tail.children.append(Collective("all_reduce", "params", reduce_axes,
                                             bytes_override=grad_bytes))
@@ -487,8 +548,19 @@ def build_step_program(arch: ArchConfig, shape: ShapeConfig, plan: ShardingPlan,
         head = GenericBlock("lm head")
         head.children.append(CreateVar("hout", _ts((tokens, d), dt, act_sh)))
         head.children.append(CreateVar("w_head", _ts((d, arch.vocab_size), dt, weight_shards)))
+        # Serving logits leave the head in fp32 (sampling runs there — the
+        # resident "logits" component is 4 B/cell).  "full" sinks the cast
+        # into the matmul's output write; "none" materializes it as its
+        # own round trip; "off" keeps the legacy tree, which never priced
+        # the upcast at all.
+        head_attrs = {"sink_cast_bytes": 4} if fus == "full" else {}
         head.children.append(Compute("matmul", ("hout", "w_head"), "logits",
-                                     exec_type="DIST", shard_axes=mm_axes))
+                                     exec_type="DIST", shard_axes=mm_axes,
+                                     attrs=head_attrs))
+        if fus == "none":
+            head.children.append(Compute("cast", ("logits",), "logits32",
+                                         exec_type="DIST", shard_axes=mm_axes,
+                                         attrs={"to_bytes": 4}))
         if tp > 1:
             head.children.append(Collective("all_gather", "logits", plan.tp_axes,
                                             bytes_override=tokens * arch.vocab_size
@@ -800,7 +872,7 @@ def _batch_base(cc: ClusterConfig) -> Tuple[str, ...]:
 
 
 def _role_plan(role: Dict, cc: ClusterConfig, remat: str, micro: int,
-               gd: str) -> ShardingPlan:
+               gd: str, fus: str = "off") -> ShardingPlan:
     has_model = "model" in cc.mesh_axes
     pp = tuple(role.get("pp", ()))
     return ShardingPlan(
@@ -814,7 +886,7 @@ def _role_plan(role: Dict, cc: ClusterConfig, remat: str, micro: int,
         ep_axes=role.get("ep", ()),
         seq_axes=role.get("seq", ()),
         pp_axes=pp,
-        remat=remat, microbatches=micro, grad_reduce_dtype=gd)
+        remat=remat, microbatches=micro, grad_reduce_dtype=gd, fusion=fus)
 
 
 def _micro_valid(role: Dict, shape: ShapeConfig, cc: ClusterConfig,
@@ -841,15 +913,22 @@ def _role_base_micro(role: Dict, shape: ShapeConfig, cc: ClusterConfig,
 
 
 def enumerate_plans(arch: ArchConfig, shape: ShapeConfig,
-                    cc: ClusterConfig) -> List[ShardingPlan]:
-    """The full candidate sharding-plan space for the fixed mesh of ``cc``."""
+                    cc: ClusterConfig,
+                    fusion: str = "off") -> List[ShardingPlan]:
+    """The full candidate sharding-plan space for the fixed mesh of ``cc``.
+
+    ``fusion="search"`` widens the space by the fusion knob
+    (:data:`FUSION_OPTS`); the default pins ``"off"``, keeping every
+    pre-fusion candidate set (and its golden winners) unchanged."""
     remats, micro_opts, gdtypes = _knob_space(shape)
+    fus_opts = _fusion_space(fusion)
     plans: List[ShardingPlan] = []
     for role in _model_roles(arch, shape, cc):
-        for remat, micro, gd in itertools.product(remats, micro_opts, gdtypes):
+        for remat, micro, gd, fus in itertools.product(
+                remats, micro_opts, gdtypes, fus_opts):
             if not _micro_valid(role, shape, cc, micro):
                 continue
-            plans.append(_role_plan(role, cc, remat, micro, gd))
+            plans.append(_role_plan(role, cc, remat, micro, gd, fus))
     # dedupe
     seen, out = set(), []
     for p in plans:
@@ -868,7 +947,8 @@ def _deg(cc: ClusterConfig, axes: Tuple[str, ...]) -> int:
 
 
 def reference_plans(arch: ArchConfig, shape: ShapeConfig,
-                    cc: ClusterConfig) -> List[ShardingPlan]:
+                    cc: ClusterConfig,
+                    fusion: str = "off") -> List[ShardingPlan]:
     """One minimum-work representative per axis-role class of
     :func:`enumerate_plans` — the basis of the resource optimizer's sound
     cluster floors (:func:`repro.core.resource.cluster_floor_time`).
@@ -897,11 +977,25 @@ def reference_plans(arch: ArchConfig, shape: ShapeConfig,
     its *time* overlaps across stages, so the floor must not price the
     totals as one sequential roofline.  ``cluster_floor_time`` handles
     that with the pipeline-aware ``roofline / S * (1 + (S-1)/M)`` bound.
+
+    **Fusion.**  With ``fusion="search"`` the knob breaks the "only adds
+    work" monotonicity in one direction: ``fusion="full"`` *removes* HBM
+    traffic relative to ``"off"``, so the off representative alone would
+    not lower-bound fused members.  The fix is a second representative
+    per role at ``fusion="full"`` — the traffic-minimal setting — and the
+    floor consumer (``resource.role_floor_times``) takes the min over a
+    role's representatives.  ``"none"`` only ever adds traffic on top of
+    ``"off"`` (materialized intermediates, explicit casts), so the off
+    rep covers it.
     """
     remats, _, gdtypes = _knob_space(shape)
     gd_min = min(gdtypes, key=dtype_bytes)
-    return [_role_plan(role, cc, remats[0], 1, gd_min)
-            for role in _model_roles(arch, shape, cc)]
+    fus_reps = ["off"]
+    if "full" in _fusion_space(fusion):
+        fus_reps.append("full")
+    return [_role_plan(role, cc, remats[0], 1, gd_min, fus)
+            for role in _model_roles(arch, shape, cc)
+            for fus in fus_reps]
 
 
 def _cost_candidate(arch: ArchConfig, shape: ShapeConfig, p: ShardingPlan,
@@ -932,11 +1026,13 @@ def _structure_key(plan: ShardingPlan, mode: str) -> Tuple:
     of (microbatches, grad_reduce_dtype) — the same tree with different
     numbers — so one lane-vector walk costs them all.  The micro>1 flag is
     part of the key because it IS structure: the microbatch ForBlock (and
-    the warm-branch shape of every loop walker) exists only on one side."""
+    the warm-branch shape of every loop walker) exists only on one side.
+    ``fusion`` is structure too: each setting emits a different tree
+    (separate-vs-folded epilogue ops, explicit casts, fused attrs)."""
     micro = plan.microbatches if mode == "train" else 1
     return (plan.name, plan.batch_axes, plan.tp_axes, plan.fsdp_axes,
             plan.ep_axes, plan.seq_axes, plan.pp_axes, plan.remat,
-            plan.overlap, plan.zero1, micro > 1)
+            plan.overlap, plan.zero1, micro > 1, plan.fusion)
 
 
 def _cost_group_vectorized(arch: ArchConfig, shape: ShapeConfig,
@@ -1058,7 +1154,8 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
                 candidates: Optional[Sequence[ShardingPlan]] = None,
                 search: str = "beam", beam_width: int = 4,
                 cache: Optional[PlanCostCache] = None,
-                stats: Optional[SearchStats] = None) -> List[PlanDecision]:
+                stats: Optional[SearchStats] = None,
+                fusion: str = "off") -> List[PlanDecision]:
     """Pick the best sharding plans by ``C(P, cc)``; infeasible (OOM) sink.
 
     ``search="beam"`` (default) runs the staged beam search over the
@@ -1077,6 +1174,11 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     across calls (scenario sweeps); by default each call gets a private
     cache, which already dedupes the per-layer loop bodies shared between
     candidates.
+
+    ``fusion="search"`` widens every strategy's space by the operator-
+    fusion knob (beam expands it in stage 3; the batched engine's role
+    floors turn fusion-aware automatically).  The default ``"off"``
+    searches exactly the pre-fusion space.
     """
     if stats is None:
         stats = SearchStats()
@@ -1084,14 +1186,14 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
         cache = PlanCostCache()
     if search == "batched":
         cands = (list(candidates) if candidates is not None
-                 else enumerate_plans(arch, shape, cc))
+                 else enumerate_plans(arch, shape, cc, fusion=fusion))
         decisions = _batched_search(arch, shape, cc, top_k, cands, cache,
                                     stats)
         stats.cache = cache.stats()
         return decisions[:top_k]
     if candidates is not None or search == "exhaustive":
         cands = (list(candidates) if candidates is not None
-                 else enumerate_plans(arch, shape, cc))
+                 else enumerate_plans(arch, shape, cc, fusion=fusion))
         decisions = [_cost_candidate(arch, shape, p, cc, cache, stats)
                      for p in cands]
         decisions.sort(key=_rank_key)
@@ -1099,7 +1201,8 @@ def choose_plan(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
         return decisions[:top_k]
     if search != "beam":
         raise ValueError(f"unknown search strategy {search!r}")
-    decisions = _beam_search(arch, shape, cc, top_k, beam_width, cache, stats)
+    decisions = _beam_search(arch, shape, cc, top_k, beam_width, cache, stats,
+                             fusion=fusion)
     stats.cache = cache.stats()
     return decisions
 
@@ -1121,8 +1224,15 @@ def _batched_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     bit-for-bit.  With ``top_k > 1`` every group is costed — the tail of
     the ranking has no floor argument."""
     from repro.core import resource as _resource  # circular at import time
+    # A candidate set with non-"off" fusion members needs fusion-aware
+    # floors: "full" removes HBM traffic, so the off-only representative
+    # would not lower-bound it (see reference_plans).  Derived from the
+    # candidates themselves so explicit candidate lists stay sound.
+    floor_fusion = ("off" if all(p.fusion == "off" for p in cands)
+                    else "search")
     try:
-        floors = _resource.role_floor_times(arch, shape, cc)
+        floors = _resource.role_floor_times(arch, shape, cc,
+                                            fusion=floor_fusion)
     except Exception:
         floors = {}
     groups: Dict[Tuple, List[ShardingPlan]] = {}
@@ -1177,7 +1287,8 @@ def _family_beam(ranked: List, width: int, is_pp) -> List:
 
 def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
                  top_k: int, beam_width: int, cache: PlanCostCache,
-                 stats: SearchStats) -> List[PlanDecision]:
+                 stats: SearchStats,
+                 fusion: str = "off") -> List[PlanDecision]:
     """Staged beam search over the sharding decision vector.
 
     Stage 1 — axis roles, costed with neutral knobs (remat=none, fp32
@@ -1194,11 +1305,14 @@ def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     smaller, so every remat heavier than the lightest feasible one is
     dominated and skipped without costing.
 
-    Stage 3 — grad-reduce dtype and collective overlap.  overlap=False is
-    dominated outright (the model can only discount collectives), so only
-    the dtype axis is expanded.
+    Stage 3 — grad-reduce dtype, the fusion knob, and collective overlap.
+    overlap=False is dominated outright (the model can only discount
+    collectives), so only the dtype x fusion grid is expanded.  With the
+    default ``fusion="off"`` the grid collapses to the dtype axis and the
+    search is bit-identical to the pre-fusion beam.
     """
     remats, micro_opts, gdtypes = _knob_space(shape)
+    fus_opts = _fusion_space(fusion)
     budget = cc.hbm_budget
 
     # ---- stage 1: axis roles --------------------------------------------
@@ -1269,14 +1383,14 @@ def _beam_search(arch: ArchConfig, shape: ShapeConfig, cc: ClusterConfig,
     stage2.sort(key=_rank_key)
     beam2 = _family_beam(stage2, beam_width, lambda d: bool(d.plan.pp_axes))
 
-    # ---- stage 3: grad-reduce dtype (+ overlap, dominated) --------------
+    # ---- stage 3: grad dtype x fusion (+ overlap, dominated) ------------
     final: List[PlanDecision] = []
     for d in beam2:
         final.append(d)
-        for gd in gdtypes:
-            if gd == d.plan.grad_reduce_dtype:
+        for gd, fus in itertools.product(gdtypes, fus_opts):
+            if gd == d.plan.grad_reduce_dtype and fus == d.plan.fusion:
                 continue
-            p = dataclasses.replace(d.plan, grad_reduce_dtype=gd)
+            p = dataclasses.replace(d.plan, grad_reduce_dtype=gd, fusion=fus)
             final.append(_cost_candidate(arch, shape, p, cc, cache, stats))
         # overlap=False is dominated outright (the model can only discount
         # collectives) and is not part of the enumerated space — not

@@ -309,7 +309,8 @@ def _plan_space_size(arch: ArchConfig, shape: ShapeConfig,
 @functools.lru_cache(maxsize=None)
 def _floor_totals(arch: ArchConfig, shape: ShapeConfig,
                   mesh_shape: Tuple[int, ...],
-                  mesh_axes: Tuple[str, ...]
+                  mesh_axes: Tuple[str, ...],
+                  fusion: str = "off"
                   ) -> Tuple[Tuple[str, ProgramTotals, int], ...]:
     """Estimator-charged work totals of each role's minimum-work reference
     plan (:func:`repro.core.planner.reference_plans`) on a mesh geometry,
@@ -326,18 +327,25 @@ def _floor_totals(arch: ArchConfig, shape: ShapeConfig,
          estimate(build_step_program(arch, shape, plan, cc), cc,
                   cache=_FLOOR_CACHE).totals,
          plan.degree(cc, plan.pp_axes))
-        for plan in reference_plans(arch, shape, cc))
+        for plan in reference_plans(arch, shape, cc, fusion=fusion))
 
 
 def role_floor_times(arch: ArchConfig, shape: ShapeConfig,
-                     cc: ClusterConfig) -> Dict[str, float]:
+                     cc: ClusterConfig,
+                     fusion: str = "off") -> Dict[str, float]:
     """Per-role sound lower bounds on ``C(P, cc)``: role name -> a floor
     that every enumerated plan *in that role* must at least pay, knob
     values included (see :func:`cluster_floor_time` for the derivation —
     the cluster floor is exactly the minimum over these values).  The
     plan searcher's dominance pool (``choose_plan(search="batched")``)
     uses the per-role resolution to skip whole structure groups whose
-    role floor already loses to a feasible incumbent."""
+    role floor already loses to a feasible incumbent.
+
+    ``fusion="search"`` makes the floors sound over the fusion-widened
+    plan space: :func:`repro.core.planner.reference_plans` then yields a
+    second, traffic-minimal ``fusion="full"`` representative per role and
+    the per-name ``min`` below keeps whichever bounds lower — "full"
+    members are no longer under-bounded by an off-only rep."""
     vpu_peak = cc.chip.peak("float32") * VPU_FRACTION
     ici_bw_best = cc.ici_bw_eff * cc.max_ici_links
     # The wire discount must match the most generous overlap any plan can
@@ -351,7 +359,7 @@ def role_floor_times(arch: ArchConfig, shape: ShapeConfig,
     o_ici, o_dcn = occ.overlap("ici"), occ.overlap("dcn")
     floors: Dict[str, float] = {}
     for name, t, pp_s in _floor_totals(arch, shape, cc.mesh_shape,
-                                       cc.mesh_axes):
+                                       cc.mesh_axes, fusion):
         t_flops = sum(f / (cc.chip.peak(dt) * cc.mxu_util_ceiling(dt))
                       for dt, f in t.mxu_flops.items())
         t_flops += t.vpu_flops / vpu_peak

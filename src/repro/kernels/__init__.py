@@ -1,8 +1,11 @@
 """Pallas TPU kernels for the perf-critical compute layers.
 
-  * tsmm            — the paper's transpose-self matmul (half-compute Gram)
+  * tsmm            — the paper's transpose-self matmul (half-compute Gram,
+                      optional fused ridge epilogue X^T X + reg*I)
   * flash_attention — blockwise online-softmax attention (prefill hot-spot)
   * ssd_scan        — Mamba2 SSD chunked scan (ssm/hybrid hot-spot)
+  * matmul_epilogue — blocked matmul with fused bias/silu/gelu/layernorm
+                      epilogue + cast sinking (the fusion="full" variants)
 
 Each has a jit'd wrapper in ops.py and a pure-jnp oracle in ref.py;
 validated in interpret mode on CPU, targeted at TPU via BlockSpec tiling.

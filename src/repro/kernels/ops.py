@@ -12,23 +12,41 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import flash_attention as _fa
+from repro.kernels import matmul_epilogue as _mme
 from repro.kernels import ssd_scan as _ssd
 from repro.kernels import tsmm as _tsmm
 
 _INTERPRET = os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
 
 
-def tsmm(x: jax.Array, *, bm: int = 512, bn: int = 256,
+def tsmm(x: jax.Array, *, bm: int = 512, bn: int = 256, reg: float = 0.0,
          interpret: Optional[bool] = None) -> jax.Array:
-    """Symmetric Gram matrix X^T X via the half-compute Pallas kernel.
+    """Symmetric Gram matrix X^T X (+ reg*I) via the half-compute kernel.
 
     The kernel writes only upper-triangular tiles; the strict lower
     triangle is mirrored here (diagonal blocks are internally symmetric).
+    ``reg`` fuses the LinReg DS ridge shift into the diagonal-tile flush.
     """
-    up = _tsmm.tsmm_upper(x, bm=bm, bn=bn,
+    up = _tsmm.tsmm_upper(x, bm=bm, bn=bn, reg=reg,
                           interpret=_INTERPRET if interpret is None else interpret)
     upper = jnp.triu(up)
     return upper + jnp.triu(up, 1).T
+
+
+def matmul_epilogue(x: jax.Array, w: jax.Array, bias=None, *,
+                    epilogue: Optional[str] = None, out_dtype=None,
+                    bm: int = 256, bn: int = 256, bk: int = 256,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """``epilogue(x @ w)`` with the elementwise tail fused into the flush.
+
+    Realizes the planner's ``fusion="full"`` matmul variants: epilogue in
+    {None, "bias", "silu", "gelu", "layernorm"}, with ``out_dtype`` cast
+    sinking (the fp32 accumulator is narrowed during the single write).
+    """
+    return _mme.matmul_epilogue(
+        x, w, bias, epilogue=epilogue, out_dtype=out_dtype,
+        bm=bm, bn=bn, bk=bk,
+        interpret=_INTERPRET if interpret is None else interpret)
 
 
 def flash_attention(q, k, v, *, causal: bool = True,

@@ -10,10 +10,32 @@ from repro.models.layers import attention_dense
 from repro.models.mamba import ssd_chunked
 
 
-def tsmm_ref(x: jax.Array) -> jax.Array:
-    """Full Gram matrix X^T X."""
-    return jnp.einsum("mk,mn->kn", x.astype(jnp.float32),
-                      x.astype(jnp.float32)).astype(x.dtype)
+def tsmm_ref(x: jax.Array, reg: float = 0.0) -> jax.Array:
+    """Full Gram matrix X^T X (+ reg*I)."""
+    g = jnp.einsum("mk,mn->kn", x.astype(jnp.float32),
+                   x.astype(jnp.float32))
+    if reg:
+        g = g + reg * jnp.eye(x.shape[1], dtype=jnp.float32)
+    return g.astype(x.dtype)
+
+
+def matmul_epilogue_ref(x, w, bias=None, *, epilogue: Optional[str] = None,
+                        out_dtype=None) -> jax.Array:
+    """Unfused oracle: fp32 matmul, then the elementwise epilogue."""
+    acc = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32))
+    if epilogue == "bias":
+        acc = acc + bias.astype(jnp.float32)[None, :]
+    elif epilogue == "silu":
+        acc = jax.nn.silu(acc)
+    elif epilogue == "gelu":
+        acc = jax.nn.gelu(acc)
+    elif epilogue == "layernorm":
+        mu = jnp.mean(acc, axis=-1, keepdims=True)
+        var = jnp.mean(jnp.square(acc - mu), axis=-1, keepdims=True)
+        acc = (acc - mu) * jax.lax.rsqrt(var + 1e-6)
+    elif epilogue is not None:
+        raise ValueError(f"unknown epilogue {epilogue!r}")
+    return acc.astype(x.dtype if out_dtype is None else out_dtype)
 
 
 def flash_attention_ref(q, k, v, *, causal: bool = True,

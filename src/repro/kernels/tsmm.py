@@ -45,7 +45,8 @@ def _upper_pairs(nb: int) -> Tuple[np.ndarray, np.ndarray]:
 
 
 def _tsmm_kernel(i_ref, j_ref, xi_ref, xj_ref, out_ref, acc_ref, *,
-                 k_steps: int):
+                 k_steps: int, reg: float):
+    s = pl.program_id(0)
     k = pl.program_id(1)
 
     @pl.when(k == 0)
@@ -60,15 +61,26 @@ def _tsmm_kernel(i_ref, j_ref, xi_ref, xj_ref, out_ref, acc_ref, *,
 
     @pl.when(k == k_steps - 1)
     def _flush():
-        out_ref[...] = acc_ref[...].astype(out_ref.dtype)
+        acc = acc_ref[...]
+        if reg != 0.0:                     # static: compiled away when 0
+            bn = acc.shape[0]
+            eye = (jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 0)
+                   == jax.lax.broadcasted_iota(jnp.int32, (bn, bn), 1))
+            on_diag = i_ref[s] == j_ref[s]
+            acc = acc + jnp.where(eye & on_diag, jnp.float32(reg), 0.0)
+        out_ref[...] = acc.astype(out_ref.dtype)
 
 
-@functools.partial(jax.jit, static_argnames=("bm", "bn", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("bm", "bn", "reg", "interpret"))
 def tsmm_upper(x: jax.Array, *, bm: int = 512, bn: int = 256,
-               interpret: bool = True) -> jax.Array:
-    """Upper-triangular blocks of X^T X (lower-left tiles stay zero).
+               reg: float = 0.0, interpret: bool = True) -> jax.Array:
+    """Upper-triangular blocks of X^T X + reg*I (lower-left tiles zero).
 
-    x: [m, n] with m % bm == 0 and n % bn == 0.
+    x: [m, n] with m % bm == 0 and n % bn == 0.  ``reg`` is the ridge
+    epilogue of the paper's LinReg DS solve (G = X^T X + lambda*I): the
+    diagonal shift is fused into the accumulator flush of the diagonal
+    blocks, so G is still written exactly once.
     """
     m, n = x.shape
     assert m % bm == 0 and n % bn == 0, (x.shape, bm, bn)
@@ -87,7 +99,7 @@ def tsmm_upper(x: jax.Array, *, bm: int = 512, bn: int = 256,
         scratch_shapes=[pltpu.VMEM((bn, bn), jnp.float32)],
     )
     fn = pl.pallas_call(
-        functools.partial(_tsmm_kernel, k_steps=kk),
+        functools.partial(_tsmm_kernel, k_steps=kk, reg=reg),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((n, n), x.dtype),
         compiler_params=_CompilerParams(

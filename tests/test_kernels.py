@@ -44,6 +44,69 @@ def test_tsmm_symmetry():
     np.testing.assert_allclose(out, out.T, rtol=1e-6)
 
 
+def test_tsmm_ridge_epilogue():
+    """Fused G = X^T X + reg*I shifts exactly the diagonal, all blocks."""
+    x = randn((512, 256))
+    reg = 7.25
+    out = ops.tsmm(x, bm=256, bn=128, reg=reg)      # 2 block cols: tests
+    plain = ops.tsmm(x, bm=256, bn=128)             # on/off-diagonal tiles
+    np.testing.assert_allclose(
+        np.asarray(out) - np.asarray(plain),
+        reg * np.eye(256, dtype=np.float32), rtol=0, atol=1e-4)
+    np.testing.assert_allclose(out, ref.tsmm_ref(x, reg=reg),
+                               rtol=2e-5, atol=2e-4)
+
+
+# ------------------------------------------------------ matmul epilogue
+@pytest.mark.parametrize("epilogue", [None, "bias", "silu", "gelu"])
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (512, 256, 256, 256, 128, 128),
+    (256, 512, 384, 128, 256, 128),     # non-square, 3 k-steps
+])
+def test_matmul_epilogue_sweep(epilogue, m, n, k, bm, bn, bk):
+    x, w = randn((m, k)), randn((k, n))
+    bias = randn((n,)) if epilogue == "bias" else None
+    out = ops.matmul_epilogue(x, w, bias, epilogue=epilogue,
+                              bm=bm, bn=bn, bk=bk)
+    expect = ref.matmul_epilogue_ref(x, w, bias, epilogue=epilogue)
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-4)
+
+
+def test_matmul_epilogue_layernorm_full_row():
+    x, w = randn((256, 256)), randn((256, 256))
+    out = ops.matmul_epilogue(x, w, epilogue="layernorm",
+                              bm=128, bn=256, bk=128)
+    expect = ref.matmul_epilogue_ref(x, w, epilogue="layernorm")
+    np.testing.assert_allclose(out, expect, rtol=2e-5, atol=2e-4)
+    rows = np.asarray(out, np.float32)
+    np.testing.assert_allclose(rows.mean(axis=-1), 0.0, atol=1e-4)
+
+
+@pytest.mark.parametrize("out_dtype,tol", [
+    (jnp.bfloat16, 3e-2), (jnp.float32, 2e-4)])
+def test_matmul_epilogue_cast_sinking(out_dtype, tol):
+    """out_dtype narrows during the single flush write (fp32 accumulate)."""
+    x, w = randn((256, 256)), randn((256, 256))
+    out = ops.matmul_epilogue(x, w, epilogue="silu", out_dtype=out_dtype,
+                              bm=128, bn=128, bk=128)
+    assert out.dtype == out_dtype
+    expect = ref.matmul_epilogue_ref(x, w, epilogue="silu",
+                                     out_dtype=out_dtype)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_matmul_epilogue_bf16_inputs():
+    x = randn((256, 256), jnp.bfloat16)
+    w = randn((256, 256), jnp.bfloat16)
+    out = ops.matmul_epilogue(x, w, epilogue="gelu", bm=128, bn=128, bk=128)
+    expect = ref.matmul_epilogue_ref(x, w, epilogue="gelu")
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
 # ----------------------------------------------------------- flash attn
 @pytest.mark.parametrize("b,hq,hkv,s,d,causal,window", [
     (2, 4, 2, 256, 64, True, None),
