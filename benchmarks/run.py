@@ -32,6 +32,16 @@ Prints ``name,us_per_call,derived`` CSV rows:
                           (cluster x slots x plan) serving schedules, >=3x
                           fewer evaluations, and at least one cell won by a
                           disaggregated prefill/decode pool pair
+  * bench_parallel      — the parallel/persistent costing gates:
+                          ``resource_opt.parallel`` (a jobs=4 sweep and
+                          optimize_resources return byte-identical ranked
+                          tables to serial; the >=2.5x wall-clock half of
+                          the gate is enforced on >=4-core hosts) and
+                          ``resource_opt.warmstart`` (a sweep seeded from
+                          the persisted cache snapshot replays >=50% of
+                          lookups and returns identical winners), plus the
+                          informational ``parallel.affinity`` visit-order
+                          row
   * bench_roofline      — (beyond paper) roofline terms per dry-run cell
   * bench_calibrate     — the estimate↔reality loop: harvests measured
                           runtimes (matmul/stream microbenches, the §3.4
@@ -69,8 +79,9 @@ def main() -> None:
 
     from benchmarks import (bench_accuracy, bench_calibrate,
                             bench_costing_speed, bench_fusion,
-                            bench_plan_costing, bench_resource_opt,
-                            bench_roofline, bench_scenarios, bench_serving)
+                            bench_parallel, bench_plan_costing,
+                            bench_resource_opt, bench_roofline,
+                            bench_scenarios, bench_serving)
     mods = [
         ("scenarios", bench_scenarios),
         ("plan_costing", bench_plan_costing),
@@ -79,6 +90,7 @@ def main() -> None:
         ("resource_opt", bench_resource_opt),
         ("serving", bench_serving),
         ("fusion", bench_fusion),
+        ("parallel", bench_parallel),
         ("roofline", bench_roofline),
         ("calibrate", bench_calibrate),
     ]

@@ -24,6 +24,11 @@ Run:
                             # including the v5p 3D-torus cells — and rank
                             # (arch x shape x cluster) cells, then print
                             # each workload's winning cluster
+  PYTHONPATH=src python examples/sweep_plans.py \
+      --jobs 4 --cache-file /tmp/plans.cache   # cost cells over a
+                            # 4-worker pool (identical ranked table) and
+                            # persist the plan-cost cache: the next run
+                            # starts warm and replays instead of re-walking
 """
 import argparse
 import time
@@ -56,9 +61,18 @@ def main():
                     help="job length priced by --objective job_cost")
     ap.add_argument("--search", default="beam",
                     choices=["beam", "exhaustive", "batched"])
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="cost cells over N spawn workers (ranked table is "
+                         "identical to --jobs 1)")
+    ap.add_argument("--cache-file", default=None,
+                    help="persist the plan-cost cache here: loaded at "
+                         "startup (ignored when stale — the snapshot is "
+                         "fingerprinted against the cost-model version) "
+                         "and re-saved after the sweep")
     args = ap.parse_args()
 
-    engine = SweepEngine(search=args.search)
+    engine = SweepEngine(search=args.search, jobs=args.jobs,
+                         cache_path=args.cache_file)
     clusters = (enumerate_clusters() if args.resources
                 else list(args.clusters))
     t0 = time.perf_counter()
@@ -84,12 +98,17 @@ def main():
                     continue
                 print(f"  {arch} x {shape}: {decisions[0].describe()} "
                       f"[{stats.describe()}]")
-    st = engine.cache.stats()
+    # traffic_stats() aggregates worker-local lookups after a parallel
+    # sweep; for --jobs 1 it is exactly the engine cache's own counters.
+    st = engine.traffic_stats()
     costed = sum(c.stats.costed for c in cells if c.stats)
+    workers = f" over {args.jobs} workers" if args.jobs > 1 else ""
     print(f"\n{len(cells)} scenarios, {costed} candidate plans costed in "
-          f"{dt * 1e3:.0f}ms ({args.search} search); shared cache: "
+          f"{dt * 1e3:.0f}ms ({args.search} search{workers}); cache: "
           f"{st.hits} hits / {st.hits + st.misses} lookups "
-          f"({st.hit_rate:.0%}), {st.entries} entries")
+          f"({st.hit_rate:.0%}), {engine.cache.entries} merged entries")
+    if args.cache_file:
+        print(f"cache saved to {args.cache_file}")
 
 
 if __name__ == "__main__":

@@ -37,7 +37,10 @@ re-walking the plan with hand-mirrored semantics; see
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import math
+import os
+import pickle
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -201,15 +204,31 @@ class CacheStats:
     hits: int
     misses: int
     entries: int
+    evictions: int = 0
 
     @property
     def hit_rate(self) -> float:
         n = self.hits + self.misses
         return self.hits / n if n else 0.0
 
+    def __add__(self, other: "CacheStats") -> "CacheStats":
+        """Aggregate lookup traffic across caches (driver + workers).
+
+        hits/misses/evictions sum exactly; ``entries`` sums the reporting
+        caches' sizes, which double-counts entries present in several
+        worker caches — treat the aggregate's ``entries`` as an upper
+        bound on the merged cache's size, or read the merged cache's own
+        :meth:`PlanCostCache.stats` for the true count.
+        """
+        return CacheStats(self.hits + other.hits,
+                          self.misses + other.misses,
+                          self.entries + other.entries,
+                          self.evictions + other.evictions)
+
 
 class _CacheEntry:
-    __slots__ = ("reads", "net", "hbm_delta", "max_rel_hbm", "node")
+    __slots__ = ("reads", "net", "hbm_delta", "max_rel_hbm", "node",
+                 "seq", "ref")
 
     def __init__(self, reads, net, hbm_delta, max_rel_hbm, node):
         self.reads = reads           # name -> stat sig at first read (or None)
@@ -217,6 +236,123 @@ class _CacheEntry:
         self.hbm_delta = hbm_delta   # net live-HBM change of the walk
         self.max_rel_hbm = max_rel_hbm
         self.node = node             # the CostedNode produced by the walk
+        self.seq = 0                 # insertion tick (delta export watermark)
+        self.ref = False             # clock-hand reference bit
+
+    def __getstate__(self):
+        # ``ref`` is replacement-policy state, not payload: a freshly
+        # loaded entry starts cold.  ``seq`` is reassigned on insert.
+        #
+        # The wire form is deliberately lean: a parallel driver pays
+        # deserialization *serially* for every worker delta, so entry
+        # decode cost is on the speedup-critical path.  Two transforms:
+        #
+        #   * the node's subtree is elided — replay applies the recorded
+        #     read/write deltas and the root's cost/totals, never the
+        #     children, so costs stay bit-exact; only EXPLAIN depth of
+        #     walks replayed from a snapshot shrinks (the root's note
+        #     says so);
+        #   * payload objects travel as primitive tuples (a TensorStat
+        #     as its ``sig``, node cost/totals as field tuples) instead
+        #     of pickled class instances — rebuilding from tuples in
+        #     ``__setstate__`` is ~2x faster than generic object
+        #     unpickling.
+        node = self.node
+        note = node.note
+        if node.children:
+            note = ((note + " " if note else "")
+                    + "[subtree elided in snapshot]")
+        t = node.totals
+        tot = (None if t is ZERO_TOTALS else
+               (t.mxu_flops, t.vpu_flops, t.hbm_bytes, t.ici_bytes,
+                t.dcn_bytes))
+        c = node.cost
+        return (self.reads,
+                {k: (None if v is None else v.sig)
+                 for k, v in self.net.items()},
+                self.hbm_delta, self.max_rel_hbm,
+                (node.label, (c.io, c.compute, c.collective, c.latency),
+                 note, tot))
+
+    def __setstate__(self, state):
+        reads, net_enc, hbm_delta, max_rel_hbm, node_enc = state
+        net = {}
+        for k, sig in net_enc.items():
+            if sig is None:
+                net[k] = None
+            else:
+                shape, dtype, sparsity, mem, shards = sig
+                net[k] = TensorStat(shape, dtype, sparsity,
+                                    MemState(mem), shards)
+        label, (io, comp, coll, lat), note, tot = node_enc
+        totals = (ZERO_TOTALS if tot is None else
+                  ProgramTotals(tot[0], tot[1], tot[2], tot[3], tot[4]))
+        node = CostedNode(label, CostBreakdown(io, comp, coll, lat), [],
+                          note, totals)
+        self.__init__(reads, net, hbm_delta, max_rel_hbm, node)
+
+    def payload_sig(self):
+        """Everything a hit replays, in comparable form.  Two entries
+        under the same (key, read-set) must agree on this — the merge
+        debug assert checks it."""
+        net = tuple(sorted((k, None if v is None else v.sig)
+                           for k, v in self.net.items()))
+        cost = self.node.cost
+        return (net, self.hbm_delta, self.max_rel_hbm,
+                (cost.io, cost.compute, cost.collective, cost.latency))
+
+
+#: On-disk container version — bump when CacheDelta's layout changes.
+CACHE_FORMAT = 1
+
+_COST_MODEL_FP: Optional[str] = None
+
+
+def cost_model_fingerprint() -> str:
+    """Version fingerprint of the *pricing semantics*: a hash over the
+    source of every module whose code determines what a cached entry
+    replays (cost formulas, op profiles, symbol-table effects, plan node
+    signatures, cluster fingerprints, calibration application).  Persisted
+    caches carry it, and :meth:`PlanCostCache.load_from` silently drops a
+    snapshot whose fingerprint differs — a stale cache self-invalidates
+    instead of replaying old economics.  Planner/search modules are
+    deliberately excluded: program structure is already in the key.
+    """
+    global _COST_MODEL_FP
+    if _COST_MODEL_FP is None:
+        from repro.core import calibration as _m_cal
+        from repro.core import cluster as _m_cluster
+        from repro.core import linalg_ops as _m_lo
+        from repro.core import npvec as _m_npvec
+        from repro.core import plan as _m_plan
+        from repro.core import symbols as _m_sym
+        h = hashlib.sha256()
+        for path in sorted(m.__file__ for m in
+                           (_m_cal, _m_cluster, _m_lo, _m_npvec, _m_plan,
+                            _m_sym)) + [__file__]:
+            with open(path, "rb") as f:
+                h.update(f.read())
+
+        _COST_MODEL_FP = h.hexdigest()[:16]
+    return _COST_MODEL_FP
+
+
+@dataclasses.dataclass
+class CacheDelta:
+    """A portable slice of a :class:`PlanCostCache`: the serialized form
+    both of a worker's freshly-recorded entries (:meth:`export_delta`) and
+    of a full persisted snapshot (:meth:`save`).  ``stats`` carries the
+    producing cache's lookup traffic so drivers can aggregate honest
+    per-worker numbers via :meth:`CacheStats.__add__`."""
+
+    fingerprint: str
+    buckets: Dict[Tuple, List[_CacheEntry]]
+    stats: CacheStats
+    format: int = CACHE_FORMAT
+
+    @property
+    def entries(self) -> int:
+        return sum(len(b) for b in self.buckets.values())
 
 
 class PlanCostCache:
@@ -229,24 +365,200 @@ class PlanCostCache:
     cache serves any number of programs and cluster configs — keys embed
     both — which is what lets a plan-enumerating optimizer or a scenario
     sweep share work across candidates.
+
+    Because every input to a walk is embedded in (key, read-set), caches
+    are *mergeable*: :meth:`export_delta` captures entries recorded since
+    the last :meth:`mark`, :meth:`merge` folds a delta in (idempotent and
+    order-independent — a collision can only carry an identical payload),
+    and :meth:`save`/:meth:`load` persist snapshots across processes and
+    runs, versioned by :func:`cost_model_fingerprint`.
+
+    ``max_entries`` optionally bounds the cache with cheap clock-hand
+    (second-chance) eviction; a bounded cache stays bit-exact — eviction
+    only costs extra misses.
     """
 
-    def __init__(self) -> None:
+    def __init__(self, max_entries: Optional[int] = None) -> None:
+        if max_entries is not None and max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
         self._buckets: Dict[Tuple, List[_CacheEntry]] = {}
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self.max_entries = max_entries
+        self._n = 0          # live entry count (kept incrementally)
+        self._seq = 0        # monotone insertion tick
+        self._mark_seq = 0   # export_delta watermark
+        self._hand: List[Tuple] = []   # clock hand: pending bucket keys
 
     @property
     def entries(self) -> int:
-        return sum(len(b) for b in self._buckets.values())
+        return self._n
 
     def stats(self) -> CacheStats:
-        return CacheStats(self.hits, self.misses, self.entries)
+        return CacheStats(self.hits, self.misses, self._n, self.evictions)
 
     def clear(self) -> None:
         self._buckets.clear()
         self.hits = 0
         self.misses = 0
+        self.evictions = 0
+        self._n = 0
+        self._seq = 0
+        self._mark_seq = 0
+        self._hand = []
+
+    # ------------------------------------------------- insertion/eviction
+    def _insert(self, key: Tuple, entry: _CacheEntry) -> None:
+        self._seq += 1
+        entry.seq = self._seq
+        entry.ref = False
+        self._buckets.setdefault(key, []).append(entry)
+        self._n += 1
+        if self.max_entries is not None:
+            while self._n > self.max_entries:
+                self._evict_one()
+
+    def _evict_one(self) -> None:
+        """Clock-hand (second-chance) eviction: cycle bucket keys; a
+        bucket whose tail entry was hit since the hand last passed gets
+        its reference bit cleared and a second chance, otherwise the tail
+        — the bucket's coldest entry, by move-to-front — is dropped."""
+        while True:
+            if not self._hand:
+                self._hand = list(self._buckets.keys())
+                self._hand.reverse()   # pop() scans in insertion order
+            key = self._hand.pop()
+            bucket = self._buckets.get(key)
+            if not bucket:
+                continue
+            victim = bucket[-1]
+            if victim.ref:
+                victim.ref = False
+                continue
+            bucket.pop()
+            if not bucket:
+                del self._buckets[key]
+            self._n -= 1
+            self.evictions += 1
+            return
+
+    # --------------------------------------------------- delta export/merge
+    def mark(self) -> None:
+        """Set the :meth:`export_delta` watermark: only entries recorded
+        *after* this call are exported.  Workers call it right after
+        seeding from a snapshot so the delta excludes the seed."""
+        self._mark_seq = self._seq
+
+    def export_delta(self, lean: bool = False) -> CacheDelta:
+        """Entries recorded since the last :meth:`mark` (or ever, if no
+        mark), plus this cache's full lookup-traffic stats.
+
+        ``lean=True`` keeps only *block* entries (walks with children) —
+        the form pool workers ship back to a parallel driver.  Walks
+        replay top-down, so an outer block hit absorbs every leaf lookup
+        beneath it and a blocks-only delta replays an identical grid with
+        a 100% hit rate; leaves are ~80% of a delta's entries but only
+        matter on near-misses (a changed read fingerprint), where the
+        consumer re-walks the cheap leaves and re-records them locally.
+        Deserialization is the *serial* part of a parallel run, so the
+        5-6x smaller wire delta is what the speedup gate buys with this.
+        """
+        buckets: Dict[Tuple, List[_CacheEntry]] = {}
+        for key, bucket in self._buckets.items():
+            fresh = [e for e in bucket
+                     if e.seq > self._mark_seq
+                     and (not lean or e.node.children)]
+            if fresh:
+                buckets[key] = fresh
+        return CacheDelta(cost_model_fingerprint(), buckets, self.stats())
+
+    def merge(self, delta: CacheDelta) -> int:
+        """Fold a delta's entries in; returns the number actually added.
+
+        Idempotent and order-independent: keys embed the node signature,
+        cluster/functions fingerprint and call stack, and each entry is
+        guarded by its read-set fingerprint — so when two caches both
+        hold an (key, read-set) pair, both recorded the same deterministic
+        walk and the payloads are identical (assert-checked in debug);
+        the duplicate is simply skipped.
+        """
+        if delta.fingerprint != cost_model_fingerprint():
+            raise ValueError(
+                "cache delta was produced by a different cost-model "
+                f"version ({delta.fingerprint} != {cost_model_fingerprint()})")
+        added = 0
+        for key, entries in delta.buckets.items():
+            bucket = self._buckets.get(key)
+            for e in entries:
+                dup = None
+                if bucket is not None:
+                    for have in bucket:
+                        if have.reads == e.reads:
+                            dup = have
+                            break
+                if dup is not None:
+                    assert dup.payload_sig() == e.payload_sig(), (
+                        "cache merge collision with differing payloads — "
+                        "key fingerprints no longer cover every walk input")
+                    continue
+                # Copy the shell so seq/ref stay local to this cache; the
+                # payload objects themselves are immutable-by-convention.
+                self._insert(key, _CacheEntry(e.reads, e.net, e.hbm_delta,
+                                              e.max_rel_hbm, e.node))
+                added += 1
+                bucket = self._buckets.get(key)
+        return added
+
+    # ------------------------------------------------------- persistence
+    def save(self, path: str) -> int:
+        """Atomically snapshot every entry to ``path``; returns the entry
+        count written.  The snapshot embeds the cost-model fingerprint."""
+        delta = CacheDelta(cost_model_fingerprint(),
+                           {k: list(b) for k, b in self._buckets.items()},
+                           self.stats())
+        tmp = f"{path}.tmp.{os.getpid()}"
+        with open(tmp, "wb") as f:
+            pickle.dump(delta, f, protocol=pickle.HIGHEST_PROTOCOL)
+        os.replace(tmp, path)
+        return self._n
+
+    def load_from(self, path: str) -> int:
+        """Merge a saved snapshot into this cache; returns entries added.
+        Missing, unreadable, wrong-format or stale-fingerprint files all
+        load as 0 entries — a stale cache self-invalidates, it never
+        raises and never replays old economics."""
+        try:
+            with open(path, "rb") as f:
+                delta = pickle.load(f)
+        except Exception:
+            return 0
+        if not isinstance(delta, CacheDelta) or delta.format != CACHE_FORMAT:
+            return 0
+        if delta.fingerprint != cost_model_fingerprint():
+            return 0
+        if self._n == 0 and self.max_entries is None:
+            # Fast adopt: freshly unpickled entries are exclusively ours
+            # (no other cache aliases their seq/ref), and an empty cache
+            # has no duplicates to guard against.
+            added = 0
+            for key, entries in delta.buckets.items():
+                for e in entries:
+                    self._seq += 1
+                    e.seq = self._seq
+                self._buckets[key] = entries
+                added += len(entries)
+            self._n = added
+            return added
+        return self.merge(delta)
+
+    @classmethod
+    def load(cls, path: str,
+             max_entries: Optional[int] = None) -> "PlanCostCache":
+        """A fresh cache seeded from ``path`` (empty if missing/stale)."""
+        cache = cls(max_entries=max_entries)
+        cache.load_from(path)
+        return cache
 
 
 # Node kinds worth memoizing: blocks (arbitrarily large sub-walks) and the
@@ -311,6 +623,7 @@ class CostEstimator:
             for i, entry in enumerate(bucket):
                 if symtab.matches(entry.reads):
                     cache.hits += 1
+                    entry.ref = True     # second chance vs the clock hand
                     if i:            # move-to-front: states recur in runs
                         del bucket[i]
                         bucket.insert(0, entry)
@@ -328,10 +641,8 @@ class CostEstimator:
         finally:
             symtab.end_record(rec)
         if not rec.poisoned:
-            if bucket is None:
-                bucket = cache._buckets.setdefault(key, [])
-            bucket.append(_CacheEntry(rec.reads, net, hbm_delta,
-                                      rec.max_rel_hbm, cn))
+            cache._insert(key, _CacheEntry(rec.reads, net, hbm_delta,
+                                           rec.max_rel_hbm, cn))
         return cn
 
     def _cost_node_direct(self, node: Union[Instruction, Block],

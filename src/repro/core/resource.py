@@ -608,6 +608,9 @@ class ResourceSearchStats:
     plan_evals: int = 0                 # full generate+cost evaluations run
     exhaustive_plan_space: int = 0      # sum over clusters of |enumerate_plans|
     cache: Optional[CacheStats] = None
+    # per-worker local-cache traffic of the jobs>1 warm phase (unset when
+    # the search ran serially); the driver's own traffic is in `cache`
+    worker_cache: Optional[List[CacheStats]] = None
 
     @property
     def evals_ratio(self) -> float:
@@ -621,6 +624,12 @@ class ResourceSearchStats:
         if self.cache is not None:
             bits.append(f"cache={self.cache.hits}/"
                         f"{self.cache.hits + self.cache.misses}")
+        if self.worker_cache:
+            agg = self.worker_cache[0]
+            for w in self.worker_cache[1:]:
+                agg = agg + w
+            bits.append(f"workers={len(self.worker_cache)}"
+                        f"({agg.hits}/{agg.hits + agg.misses})")
         return " ".join(bits)
 
 
@@ -711,8 +720,8 @@ def optimize_resources(arch: ArchConfig,
                        prune: Optional[bool] = None,
                        steps_per_job: int = DEFAULT_STEPS_PER_JOB,
                        cache: Optional[PlanCostCache] = None,
-                       stats: Optional[ResourceSearchStats] = None
-                       ) -> List[ResourceDecision]:
+                       stats: Optional[ResourceSearchStats] = None,
+                       jobs: int = 1) -> List[ResourceDecision]:
     """Rank cluster candidates (with their best sharding plan) under an
     objective.
 
@@ -730,13 +739,19 @@ def optimize_resources(arch: ArchConfig,
     :func:`repro.core.serving.optimize_serving` (the schedule co-search,
     returning :class:`~repro.core.serving.ServingDecision` rows).  A typed
     :class:`Objective` is accepted anywhere the string spelling is.
+
+    ``jobs`` > 1 warms the cache in parallel first: the search itself
+    runs on candidate shards across a worker pool (decisions discarded,
+    cache deltas merged), then the serial pass below re-runs against the
+    warm cache — incumbent pruning is visit-order dependent, so this is
+    how the parallel path stays bit-identical to ``jobs=1``.
     """
     if isinstance(shape, ServeWorkload):
         from repro.core import serving
         return serving.optimize_serving(
             arch, shape, clusters, objective=objective, slo=slo,
             search=search, beam_width=beam_width, prune=prune,
-            cache=cache, stats=stats)
+            cache=cache, stats=stats, jobs=jobs)
     if isinstance(shape, TrainWorkload):
         if steps_per_job == DEFAULT_STEPS_PER_JOB:
             steps_per_job = shape.steps_per_job
@@ -754,6 +769,14 @@ def optimize_resources(arch: ArchConfig,
         cache = PlanCostCache()
     if stats is None:
         stats = ResourceSearchStats()
+    if jobs > 1 and len(cands) > 1:
+        from repro.core import parallel
+        stats.worker_cache = parallel.warm_shards(
+            "resource", arch, shape, cands,
+            dict(objective=objective, slo=slo, search=search,
+                 beam_width=beam_width, prune=prune,
+                 steps_per_job=steps_per_job),
+            jobs, cache)
     entries = [(cand, cluster_floor_time(arch, shape, cand.cc))
                for cand in cands]
     stats.clusters_total += len(entries)

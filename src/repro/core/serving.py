@@ -708,14 +708,17 @@ def optimize_serving(arch: ArchConfig, wl: ServeWorkload,
                      prune: Optional[bool] = None,
                      slot_opts: Sequence[int] = SLOT_OPTS,
                      cache: Optional[PlanCostCache] = None,
-                     stats: Optional[ResourceSearchStats] = None
-                     ) -> List[ServingDecision]:
+                     stats: Optional[ResourceSearchStats] = None,
+                     jobs: int = 1) -> List[ServingDecision]:
     """Rank (pool layout × slot count) candidates with their best per-pool
     plans under a serving objective.  ``search="beam"`` prunes entries by
     the sound serving floors and plans by the staged beam;
     ``search="exhaustive"`` costs every (candidate × slots × plan) cell —
     the verification oracle.  Both return the identical winner (gated by
-    benchmarks/bench_serving.py)."""
+    benchmarks/bench_serving.py).  ``jobs`` > 1 warms the cache by running
+    the search on candidate shards in parallel (decisions discarded, cache
+    deltas merged), then the serial pass below re-runs warm — bit-identical
+    to ``jobs=1`` (incumbent pruning is visit-order dependent)."""
     obj = canon_serving_objective(objective, slo, wl)
     if prune is None:
         prune = search == "beam"
@@ -726,6 +729,14 @@ def optimize_serving(arch: ArchConfig, wl: ServeWorkload,
         cache = PlanCostCache()
     if stats is None:
         stats = ResourceSearchStats()
+    if jobs > 1 and len(cands) > 1:
+        from repro.core import parallel
+        stats.worker_cache = parallel.warm_shards(
+            "serving", arch, wl, cands,
+            dict(objective=objective, slo=slo, search=search,
+                 beam_width=beam_width, prune=prune,
+                 slot_opts=tuple(slot_opts)),
+            jobs, cache)
     pshape = prefill_shape(wl)
     entries = []
     for cand in cands:

@@ -75,6 +75,7 @@ class SweepCell:
     stats: Optional[SearchStats]
     elapsed_s: float = 0.0
     skipped: str = ""                    # non-empty: why the cell was skipped
+    worker: int = -1                     # pool worker that costed it (-1: driver)
 
     @property
     def key(self) -> str:
@@ -104,13 +105,41 @@ class SweepEngine:
     (see :func:`repro.core.planner.choose_plan`); its winners are
     bit-identical to the exhaustive scan, so swapping it in never moves a
     sweep's golden results.
+
+    ``jobs`` > 1 costs sweep cells over a spawn-based worker pool
+    (:mod:`repro.core.parallel`): workers get a snapshot of the engine
+    cache, cost their cache-affinity shard locally, and the driver merges
+    their deltas back — the ranked table is identical to a serial sweep
+    because cell costing is cache-state independent.  ``cache_path``
+    makes the cache persistent: loaded (if fresh — see
+    :func:`repro.core.costmodel.cost_model_fingerprint`) at construction
+    and re-saved after every sweep, so the next process starts warm.
+    ``max_entries`` bounds the cache (clock-hand eviction, bit-exact).
     """
 
     def __init__(self, search: str = "beam", beam_width: int = 4,
-                 cache: Optional[PlanCostCache] = None):
+                 cache: Optional[PlanCostCache] = None, jobs: int = 1,
+                 cache_path: Optional[str] = None,
+                 max_entries: Optional[int] = None):
         self.search = search
         self.beam_width = beam_width
-        self.cache = cache if cache is not None else PlanCostCache()
+        self.jobs = max(int(jobs), 1)
+        self.cache_path = cache_path
+        self.max_entries = max_entries
+        self.cache = (cache if cache is not None
+                      else PlanCostCache(max_entries=max_entries))
+        self._persisted_seq = None   # cache._seq as of cache_path on disk
+        if cache_path:
+            preloaded = self.cache.entries
+            loaded = self.cache.load_from(cache_path)
+            if preloaded == 0 and loaded > 0:
+                # memory now mirrors disk exactly — until something is
+                # recorded, workers can seed from the file directly and
+                # save_cache() has nothing new to write
+                self._persisted_seq = self.cache._seq
+        # Per-worker lookup traffic of the last parallel sweep; [] after a
+        # serial sweep (the engine cache's own counters already tell all).
+        self.last_worker_stats: List[CacheStats] = []
 
     def cost_cell(self, arch: Union[str, ArchConfig],
                   shape: Union[str, ShapeConfig, ServeWorkload],
@@ -119,6 +148,10 @@ class SweepEngine:
         arch_id, arch = _resolve_arch(arch)
         shape_id, shape = _resolve_shape(shape)
         cluster_id, cc = _resolve_cluster(cluster)
+        # Marginal attribution against this engine's own cache is sound
+        # because an engine (driver or pool worker) owns its cache
+        # exclusively — parallel sweeps give every worker a *local*
+        # engine, so concurrent cells never interleave these counters.
         h0, m0 = self.cache.hits, self.cache.misses
         if isinstance(shape, ServeWorkload):
             # A serving cell: the best costed schedule of this traffic on
@@ -156,12 +189,60 @@ class SweepEngine:
     def sweep(self, archs: Sequence[Union[str, ArchConfig]],
               shapes: Sequence[Union[str, ShapeConfig]],
               clusters: Sequence[Union[str, ClusterConfig]],
-              ) -> List[SweepCell]:
+              jobs: Optional[int] = None) -> List[SweepCell]:
         """Cost the full grid and return cells ranked fastest-first
-        (feasible before OOM, skipped cells last)."""
-        cells = [self.cost_cell(a, s, c)
-                 for c in clusters for a in archs for s in shapes]
+        (feasible before OOM, skipped cells last).
+
+        Cells are visited arch x shape outermost — the cache-affinity
+        order: cells of one (arch, shape) stay adjacent and whole groups
+        shard onto one worker.  The ranked output is sorted, so visit
+        order never moves results.
+        """
+        jobs = self.jobs if jobs is None else max(int(jobs), 1)
+        specs = [(a, s, c) for a in archs for s in shapes for c in clusters]
+        if jobs > 1 and len(specs) > 1:
+            cells = self._sweep_parallel(specs, jobs)
+        else:
+            self.last_worker_stats = []
+            cells = [self.cost_cell(a, s, c) for a, s, c in specs]
+        self.save_cache()
         return rank_cells(cells)
+
+    def _sweep_parallel(self, specs: Sequence[Tuple], jobs: int
+                        ) -> List[SweepCell]:
+        from repro.core import parallel
+        # When the cache is byte-for-byte what cache_path holds (freshly
+        # loaded, nothing recorded since), seed workers straight from the
+        # file instead of re-serializing ~the whole cache to a temp copy.
+        clean = (self.cache_path is not None
+                 and self._persisted_seq == self.cache._seq)
+        cells, deltas, wstats = parallel.sweep_shards(
+            specs, jobs, search=self.search, beam_width=self.beam_width,
+            max_entries=self.max_entries, seed_cache=self.cache,
+            seed_path=self.cache_path if clean else None,
+            key=_spec_affinity, weight=_spec_weight)
+        for delta in deltas:
+            self.cache.merge(delta)
+        self.last_worker_stats = wstats
+        return cells
+
+    def save_cache(self) -> None:
+        """Persist the engine cache when ``cache_path`` is configured and
+        anything was recorded since the last load/save (a fully-warm
+        sweep rewrites nothing)."""
+        if self.cache_path and self._persisted_seq != self.cache._seq:
+            self.cache.save(self.cache_path)
+            self._persisted_seq = self.cache._seq
+
+    def traffic_stats(self) -> CacheStats:
+        """Honest lookup traffic of the last sweep: the engine cache's own
+        counters plus (after a parallel sweep) every worker's local-cache
+        traffic, with ``entries`` reporting the merged engine cache."""
+        st = self.cache.stats()
+        for w in self.last_worker_stats:
+            st = st + w
+        return CacheStats(st.hits, st.misses, self.cache.entries,
+                          st.evictions)
 
     def optimize_cell(self, arch: Union[str, ArchConfig],
                       shape: Union[str, ShapeConfig, TrainWorkload,
@@ -170,6 +251,7 @@ class SweepEngine:
                       objective: Union[str, Objective] = "step_time",
                       slo: Optional[float] = None,
                       steps_per_job: int = DEFAULT_STEPS_PER_JOB,
+                      jobs: Optional[int] = None,
                       ) -> Tuple[List[ResourceDecision], ResourceSearchStats]:
         """The ``--resources`` dimension: instead of costing one fixed
         cluster, co-search the cluster grid for this (arch x shape) through
@@ -186,7 +268,9 @@ class SweepEngine:
         decisions = optimize_resources(
             arch, shape, clusters, objective=objective, slo=slo,
             search=self.search, beam_width=self.beam_width,
-            steps_per_job=steps_per_job, cache=self.cache, stats=stats)
+            steps_per_job=steps_per_job, cache=self.cache, stats=stats,
+            jobs=self.jobs if jobs is None else jobs)
+        self.save_cache()
         return decisions, stats
 
 
@@ -206,15 +290,23 @@ def format_table(cells: Sequence[SweepCell]) -> str:
                          f"{'skip':>4}  {c.skipped[:64]}")
             continue
         d = c.decision
+        # cells costed on a pool worker report that worker's local cache
+        # traffic — label them like sweep_rows does
+        where = f" @w{c.worker}" if c.worker >= 0 else ""
         lines.append(
             f"{i:>3} {c.key:44s} {d.time * 1e3:9.1f}ms "
             f"{d.hbm_est / 1e9:7.1f}G {'y' if d.feasible else 'OOM':>4}  "
-            f"{d.plan.describe():40s} {c.stats.describe():22s}")
+            f"{d.plan.describe():40s} {c.stats.describe():22s}{where}")
     return "\n".join(lines)
 
 
 def sweep_rows(cells: Sequence[SweepCell]) -> List[str]:
-    """Benchmark-harness rows: ``sweep.<arch>|<shape>|<mesh>,us,derived``."""
+    """Benchmark-harness rows: ``sweep.<arch>|<shape>|<mesh>,us,derived``.
+
+    The ``cache=h/n`` fragment is the cell's marginal traffic against the
+    cache of the engine that costed it; cells costed on a pool worker are
+    labelled ``@w<N>`` because those numbers are against worker ``N``'s
+    *local* cache, not the merged engine cache."""
     rows = []
     for c in rank_cells(cells):
         if c.skipped:
@@ -222,13 +314,33 @@ def sweep_rows(cells: Sequence[SweepCell]) -> List[str]:
             continue
         d = c.decision
         st = c.stats
+        where = f"@w{c.worker}" if c.worker >= 0 else ""
         rows.append(
             f"sweep.{c.key},{c.elapsed_s * 1e6:.0f},"
             f"best={d.plan.describe()};T={d.time * 1e3:.2f}ms;"
             f"hbm={d.hbm_est / 1e9:.1f}GB;feas={d.feasible};"
             f"costed={st.costed};pruned={st.pruned_infeasible + st.pruned_dominated};"
-            f"cache={st.cache.hits}/{st.cache.hits + st.cache.misses}")
+            f"cache={st.cache.hits}/{st.cache.hits + st.cache.misses}{where}")
     return rows
+
+
+def _spec_affinity(spec: Tuple) -> Tuple[str, str]:
+    """Shard-affinity key for an ``(arch, shape, cluster)`` sweep spec:
+    cells of one (arch, shape) share plan structure signatures, so they
+    belong on one worker's cache."""
+    arch_id, _ = _resolve_arch(spec[0])
+    shape_id, _ = _resolve_shape(spec[1])
+    return arch_id, shape_id
+
+
+def _spec_weight(spec: Tuple) -> float:
+    """Relative cost estimate for shard load-balancing: train and serving
+    cells walk orders of magnitude more plan than single-token decode
+    cells (measured ~10x on the golden grid)."""
+    _, shape = _resolve_shape(spec[1])
+    if isinstance(shape, ServeWorkload):
+        return 8.0
+    return 8.0 if getattr(shape, "mode", "train") == "train" else 1.0
 
 
 def _resolve_arch(arch) -> Tuple[str, ArchConfig]:

@@ -5,8 +5,12 @@ reviewable) instead of silent.
 
 Run after any *intentional* cost-model change:
   PYTHONPATH=src python tests/golden/regen_sweep_golden.py
-and commit the JSON diff alongside the change that caused it.
+and commit the JSON diff alongside the change that caused it.  ``--jobs N``
+costs the grid over a worker pool — the cells are identical to a serial
+regen (gated by tests/test_parallel.py), it is just faster on a multi-core
+machine.
 """
+import argparse
 import json
 import os
 import sys
@@ -44,11 +48,11 @@ GOLDEN_SERVE_ARCHS = ("qwen1.5-0.5b", "gemma3-12b")
 GOLDEN_SERVE_WORKLOADS = ("chat_2k",)
 
 
-def compute_cells():
+def compute_cells(jobs=1):
     """Cost the golden grid and return {cell-key: expected values}."""
     from repro.core.sweep import SweepEngine
 
-    engine = SweepEngine(search="beam")
+    engine = SweepEngine(search="beam", jobs=jobs)
     cells = engine.sweep(GOLDEN_ARCHS, GOLDEN_SHAPES, GOLDEN_CLUSTERS)
     cells += engine.sweep(GOLDEN_SERVE_ARCHS, GOLDEN_SERVE_WORKLOADS,
                           GOLDEN_CLUSTERS)
@@ -65,7 +69,12 @@ def compute_cells():
 
 
 def main():
-    cells = compute_cells()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="cost the grid over N spawn workers (identical "
+                         "cells, faster regen)")
+    args = ap.parse_args()
+    cells = compute_cells(jobs=args.jobs)
     with open(GOLDEN_PATH, "w") as f:
         json.dump(cells, f, indent=2, sort_keys=True)
         f.write("\n")

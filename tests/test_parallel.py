@@ -1,0 +1,323 @@
+"""Parallel grid search and the mergeable, persistent plan-cost cache.
+
+Covers the PR-10 contracts:
+
+  * save/load round-trip, including cost-model-fingerprint
+    self-invalidation and calibrated-vs-uncalibrated separation inside
+    one snapshot file (cluster fingerprints embed the calibration);
+  * merge is commutative and idempotent, and costing against a merged
+    cache is bit-exact vs a cold walk;
+  * ``jobs=4`` reproduces the ``jobs=1`` golden-grid table exactly, for
+    the sweep, ``optimize_resources`` and ``optimize_serving``;
+  * a bounded (even size-1) cache stays bit-exact — eviction only costs
+    misses — and respects its cap;
+  * per-cell cache stats stay attributed to the cache that served them
+    (worker-local on pool workers, labelled ``@w<N>``).
+"""
+import dataclasses
+import importlib.util
+import os
+
+import pytest
+
+from repro.configs import SHAPES, get_config
+from repro.core.calibration import CalibrationProfile
+from repro.core.costmodel import (CacheStats, PlanCostCache,
+                                  cost_model_fingerprint)
+from repro.core import costmodel
+from repro.core.parallel import default_jobs, shard_specs
+from repro.core.resource import (ResourceSearchStats, enumerate_clusters,
+                                 optimize_resources)
+from repro.core.serving import optimize_serving
+from repro.core.sweep import CLUSTERS, SweepEngine, sweep_rows
+from repro.core.workload import SERVE_WORKLOADS
+
+ARCH = "qwen1.5-0.5b"
+SHAPE = "train_4k"
+
+
+def _cost(cache, arch=ARCH, shape=SHAPE, cluster="pod"):
+    engine = SweepEngine(search="beam", cache=cache)
+    return engine.cost_cell(arch, shape, cluster)
+
+
+def _decision_sig(cell):
+    d = cell.decision
+    return (d.plan.describe(), repr(d.time), repr(d.hbm_est), d.feasible)
+
+
+def _cache_keyset(cache):
+    return {(key, tuple(sorted(e.reads.items())), e.payload_sig())
+            for key, bucket in cache._buckets.items() for e in bucket}
+
+
+# --------------------------------------------------------- persistence
+def test_save_load_round_trip(tmp_path):
+    cache = PlanCostCache()
+    cold = _cost(cache)
+    path = str(tmp_path / "plans.cache")
+    assert cache.save(path) == cache.entries
+
+    warm_cache = PlanCostCache.load(path)
+    assert _cache_keyset(warm_cache) == _cache_keyset(cache)
+    warm = _cost(warm_cache)
+    assert _decision_sig(warm) == _decision_sig(cold)
+    # the warm pass re-walks nothing — every lookup replays, and outer
+    # block hits absorb the inner lookups the cold pass paid individually
+    assert warm_cache.misses == 0
+    assert 0 < warm_cache.hits < cache.hits + cache.misses
+
+
+def test_stale_fingerprint_self_invalidates(tmp_path, monkeypatch):
+    cache = PlanCostCache()
+    _cost(cache)
+    path = str(tmp_path / "plans.cache")
+    cache.save(path)
+    # a different cost-model version must drop the snapshot, not raise
+    monkeypatch.setattr(costmodel, "_COST_MODEL_FP", "0" * 16)
+    assert PlanCostCache.load(path).entries == 0
+    monkeypatch.setattr(costmodel, "_COST_MODEL_FP", None)
+    assert PlanCostCache.load(path).entries == cache.entries
+
+
+def test_load_missing_or_corrupt_is_empty(tmp_path):
+    assert PlanCostCache.load(str(tmp_path / "nope.cache")).entries == 0
+    bad = tmp_path / "corrupt.cache"
+    bad.write_bytes(b"not a pickle")
+    assert PlanCostCache.load(str(bad)).entries == 0
+
+
+def test_calibrated_and_uncalibrated_share_one_file(tmp_path):
+    """Cluster fingerprints embed the calibration profile, so one snapshot
+    holds both economies and each replays only its own entries."""
+    plain = CLUSTERS["pod"]
+    calibrated = dataclasses.replace(
+        plain, calibration=CalibrationProfile(chip_name=plain.chip.name,
+                                              hbm_fraction=0.5))
+    cache = PlanCostCache()
+    cold_plain = _cost(cache, cluster=plain)
+    cold_cal = _cost(cache, cluster=calibrated)
+    assert _decision_sig(cold_plain) != _decision_sig(cold_cal)
+    path = str(tmp_path / "plans.cache")
+    cache.save(path)
+
+    for cluster, cold in ((plain, cold_plain), (calibrated, cold_cal)):
+        warm_cache = PlanCostCache.load(path)
+        warm = _cost(warm_cache, cluster=cluster)
+        assert _decision_sig(warm) == _decision_sig(cold)
+        assert warm_cache.misses == 0
+
+
+# -------------------------------------------------------------- merging
+@pytest.fixture(scope="module")
+def cell_deltas():
+    """One independently-recorded CacheDelta per scenario (cold caches)."""
+    deltas = []
+    for arch, shape, cluster in ((ARCH, "train_4k", "pod"),
+                                 (ARCH, "decode_32k", "pod"),
+                                 ("gemma3-12b", "train_4k", "2pod")):
+        cache = PlanCostCache()
+        _cost(cache, arch=arch, shape=shape, cluster=cluster)
+        deltas.append(cache.export_delta())
+    return deltas
+
+
+def test_merge_commutative_and_idempotent(cell_deltas):
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(order=st.permutations(range(len(cell_deltas))),
+           repeat=st.integers(min_value=0, max_value=len(cell_deltas) - 1))
+    def prop(order, repeat):
+        forward = PlanCostCache()
+        for i in order:
+            forward.merge(cell_deltas[i])
+        n = forward.entries
+        forward.merge(cell_deltas[repeat])       # idempotent
+        assert forward.entries == n
+        reference = PlanCostCache()
+        for delta in cell_deltas:                # canonical order
+            reference.merge(delta)
+        assert _cache_keyset(forward) == _cache_keyset(reference)
+
+    prop()
+
+
+def test_merged_cache_costing_bit_exact_vs_cold(cell_deltas):
+    merged = PlanCostCache()
+    for delta in cell_deltas:
+        merged.merge(delta)
+    cold = _cost(PlanCostCache(), arch="gemma3-12b", cluster="2pod")
+    warm = _cost(merged, arch="gemma3-12b", cluster="2pod")
+    assert _decision_sig(warm) == _decision_sig(cold)
+    assert merged.misses == 0
+
+
+def test_export_delta_excludes_seed(cell_deltas):
+    cache = PlanCostCache()
+    cache.merge(cell_deltas[0])
+    cache.mark()
+    _cost(cache, shape="decode_32k")
+    delta = cache.export_delta()
+    assert 0 < delta.entries < cache.entries
+    merged_keys = _cache_keyset(cache)
+    delta_keys = {(key, tuple(sorted(e.reads.items())), e.payload_sig())
+                  for key, b in delta.buckets.items() for e in b}
+    assert delta_keys <= merged_keys
+    assert not delta_keys & {(key, tuple(sorted(e.reads.items())),
+                              e.payload_sig())
+                             for key, b in cell_deltas[0].buckets.items()
+                             for e in b}
+
+
+def test_merge_rejects_foreign_fingerprint(cell_deltas):
+    delta = dataclasses.replace(cell_deltas[0], fingerprint="f" * 16)
+    with pytest.raises(ValueError, match="cost-model"):
+        PlanCostCache().merge(delta)
+
+
+def test_cache_stats_add():
+    a = CacheStats(10, 5, 100, 1)
+    b = CacheStats(1, 2, 3, 0)
+    assert a + b == CacheStats(11, 7, 103, 1)
+    assert (a + b).hit_rate == 11 / 18
+
+
+# -------------------------------------------------------- bounded cache
+def test_size1_bounded_cache_bit_exact():
+    cold = _cost(PlanCostCache())
+    tiny = PlanCostCache(max_entries=1)
+    bounded = _cost(tiny)
+    assert _decision_sig(bounded) == _decision_sig(cold)
+    assert tiny.entries <= 1
+    assert tiny.evictions > 0
+    assert tiny.stats().evictions == tiny.evictions
+
+
+def test_bounded_cache_respects_cap():
+    cap = 64
+    cache = PlanCostCache(max_entries=cap)
+    _cost(cache)
+    _cost(cache, shape="decode_32k")
+    assert cache.entries <= cap
+    assert cache.evictions > 0
+    # entry count stays consistent with the bucket map
+    assert cache.entries == sum(len(b) for b in cache._buckets.values())
+    with pytest.raises(ValueError):
+        PlanCostCache(max_entries=0)
+
+
+# ------------------------------------------------------------- sharding
+def test_shard_specs_affinity_and_balance():
+    specs = [(a, s) for a in "abcd" for s in range(3)]
+    shards = shard_specs(specs, 4, key=lambda p: p[0])
+    assert sorted(sum(shards, [])) == sorted(specs)
+    for shard in shards:       # a group never splits across shards
+        assert len({a for a, _ in shard}) == len(shard) // 3
+    # deterministic: same input, same sharding
+    assert shards == shard_specs(specs, 4, key=lambda p: p[0])
+    # more jobs than groups: no empty shards returned
+    assert all(shard_specs(specs, 64, key=lambda p: p[0]))
+    assert default_jobs() >= 1
+
+
+# ------------------------------------------------------- parallel parity
+def _canon_cells(cells):
+    return [(c.key, c.skipped) if c.skipped else (c.key, _decision_sig(c))
+            for c in cells]
+
+
+def test_jobs4_equals_jobs1_on_golden_grid():
+    # same import style as test_golden_sweep: the regen script IS the grid
+    spec = importlib.util.spec_from_file_location(
+        "regen_sweep_golden",
+        os.path.join(os.path.dirname(os.path.abspath(__file__)), "golden",
+                     "regen_sweep_golden.py"))
+    regen = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(regen)
+    assert regen.compute_cells(jobs=1) == regen.compute_cells(jobs=4)
+
+
+def test_parallel_sweep_worker_labels_and_stats():
+    serial_engine = SweepEngine(search="beam")
+    serial = serial_engine.sweep((ARCH,), ("train_4k", "decode_32k"),
+                                 ("pod", "2pod"))
+    par_engine = SweepEngine(search="beam", jobs=2)
+    par = par_engine.sweep((ARCH,), ("train_4k", "decode_32k"),
+                           ("pod", "2pod"))
+    assert _canon_cells(serial) == _canon_cells(par)
+    assert all(c.worker >= 0 for c in par)
+    assert all(c.worker == -1 for c in serial)
+    assert all("@w" in row for row in sweep_rows(par))
+    assert all("@w" not in row for row in sweep_rows(serial))
+    # worker stats aggregate into honest engine traffic; merged entries
+    # come from the engine cache itself, not the double-counting sum
+    assert par_engine.last_worker_stats
+    traffic = par_engine.traffic_stats()
+    assert traffic.hits == sum(w.hits for w in par_engine.last_worker_stats)
+    assert traffic.entries == par_engine.cache.entries
+    # per-cell marginal traffic is attributed against exactly one cache
+    # (the worker's own) — so it is real lookup activity, never zero and
+    # never another worker's counters bleeding in
+    for c in par:
+        assert c.stats.cache.hits + c.stats.cache.misses > 0
+
+
+def test_optimize_resources_jobs_parity():
+    arch = get_config(ARCH)
+    shape = SHAPES[SHAPE]
+    cands = enumerate_clusters()[:8]
+
+    def run(jobs):
+        stats = ResourceSearchStats()
+        out = optimize_resources(arch, shape, cands, objective="job_cost",
+                                 stats=stats, jobs=jobs)
+        return [(rd.cluster_id, rd.pruned,
+                 None if rd.decision is None else
+                 (rd.decision.plan.describe(), repr(rd.decision.time)))
+                for rd in out], stats
+
+    serial, s1 = run(1)
+    parallel, s4 = run(4)
+    assert serial == parallel
+    assert s4.worker_cache and s1.worker_cache is None
+    assert "workers=" in s4.describe()
+    # the warm serial pass re-walks nothing: every plan eval is a replay
+    assert s4.cache.misses < s1.cache.misses / 10
+
+
+def test_optimize_serving_jobs_parity():
+    arch = get_config(ARCH)
+    wl = SERVE_WORKLOADS["chat_2k"]
+    cands = [CLUSTERS["pod"], CLUSTERS["v5p-pod"], CLUSTERS["2pod"]]
+
+    def run(jobs):
+        out = optimize_serving(arch, wl, cands, jobs=jobs)
+        return [(sd.cluster_id, sd.slots, sd.pruned,
+                 None if sd.decode_decision is None else
+                 (sd.decode_decision.plan.describe(),
+                  repr(sd.decode_decision.time)))
+                for sd in out]
+
+    assert run(1) == run(3)
+
+
+def test_sweep_engine_cache_path_warmstart(tmp_path):
+    path = str(tmp_path / "sweep.cache")
+    grid = ((ARCH,), ("train_4k", "decode_32k"), ("pod", "2pod"))
+    first_engine = SweepEngine(cache_path=path)
+    first = first_engine.sweep(*grid)
+    assert os.path.exists(path)
+
+    second_engine = SweepEngine(cache_path=path)
+    assert second_engine.cache.entries == first_engine.cache.entries
+    second = second_engine.sweep(*grid)
+    assert _canon_cells(first) == _canon_cells(second)
+    st = second_engine.traffic_stats()
+    assert st.misses == 0 and st.hit_rate == 1.0
+
+
+def test_fingerprint_stable_within_process():
+    assert cost_model_fingerprint() == cost_model_fingerprint()
+    assert len(cost_model_fingerprint()) == 16
